@@ -1,0 +1,59 @@
+"""Paper Figs 16-20 + Table 7 + Figs 25-29: MAPE grids over (alpha, N_t^W)
+for sGrapp and sGrapp-x (x in 25/50/75/100), the alpha = P(t) hub-probability
+exponent, and per-window signed error traces."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.analysis import hub_probability_exponent
+from repro.core.sgrapp import run_sgrapp, run_sgrapp_x
+from repro.core.windows import windowize
+
+from .common import bench_streams, ground_truth_cumulative
+
+__all__ = ["run"]
+
+ALPHAS = [0.80, 0.88, 0.96, 1.04, 1.12, 1.20]
+NTWS = [40, 60, 80]
+
+
+def run() -> list[tuple]:
+    rows = []
+    for name, s in bench_streams().items():
+        best = {"sgrapp": (np.inf, None), "x25": (np.inf, None),
+                "x50": (np.inf, None), "x75": (np.inf, None),
+                "x100": (np.inf, None)}
+        t0 = time.perf_counter()
+        for ntw in NTWS:
+            wb = windowize(s.tau, s.edge_i, s.edge_j, ntw)
+            if wb.n_windows < 4:
+                continue
+            truths = ground_truth_cumulative(s, ntw)
+            for a in ALPHAS:
+                m = run_sgrapp(wb, a, truths=truths).mape()
+                if m < best["sgrapp"][0]:
+                    best["sgrapp"] = (m, (a, ntw))
+                for x in (25, 50, 75, 100):
+                    mx = run_sgrapp_x(wb, a, truths, x_percent=x).mape()
+                    if mx < best[f"x{x}"][0]:
+                        best[f"x{x}"] = (mx, (a, ntw))
+        dt = (time.perf_counter() - t0) * 1e6
+        for variant, (m, arg) in best.items():
+            rows.append((f"accuracy/{name}/{variant}_best_mape", dt,
+                         f"mape={m:.4f} at(alpha,ntw)={arg}"))
+        # error-trace shape at the best sGrapp setting (Fig 25 analogue)
+        if best["sgrapp"][1] is not None:
+            a, ntw = best["sgrapp"][1]
+            wb = windowize(s.tau, s.edge_i, s.edge_j, ntw)
+            truths = ground_truth_cumulative(s, ntw)
+            errs = run_sgrapp(wb, a, truths=truths).relative_errors()
+            rows.append((f"accuracy/{name}/error_trace", dt,
+                         f"first={errs[0]:+.3f} mid={errs[len(errs)//2]:+.3f} "
+                         f"last={errs[-1]:+.3f}"))
+        # Table 7 analogue: alpha = P(t) hub-probability exponent
+        p = hub_probability_exponent(s.edge_i, s.edge_j, s.n_i, s.n_j,
+                                     min(2000, len(s)))
+        rows.append((f"accuracy/{name}/alpha_eq_P(t)", dt, f"P(t=2000)={p:.4f}"))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Table 3 + Figs 5-6: temporal butterfly growth, polynomial fits,
+and the butterfly densification power law (eta > 1 on real-like streams)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.analysis import butterfly_growth_curve, fit_polynomials, fit_power_law
+
+from .common import bench_streams
+
+__all__ = ["run"]
+
+
+def run() -> list[tuple]:
+    rows = []
+    for name, s in bench_streams().items():
+        t0 = time.perf_counter()
+        t, b = butterfly_growth_curve(s.edge_i, s.edge_j, max_edges=2500, stride=100)
+        fits = fit_polynomials(t, b)
+        eta, c, r2 = fit_power_law(t, b)
+        dt = (time.perf_counter() - t0) * 1e6
+        best = max((f for f in fits if f.increasing), key=lambda f: f.r2,
+                   default=max(fits, key=lambda f: f.r2))
+        rows.append((f"densification/{name}/eta", dt,
+                     f"eta={eta:.3f} r2={r2:.3f}"))
+        rows.append((f"densification/{name}/best_poly", dt,
+                     f"deg={best.degree} r2={best.r2:.4f} rmse={best.rmse:.3g}"))
+        rows.append((f"densification/{name}/B_final", dt, f"{b[-1]:.0f}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Paper Tables 4-6 + Figs 9-12: hub membership in butterflies, degree vs
+support correlation, hub-connection-fraction decay, young/old hubs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.analysis import (
+    butterfly_hub_fractions,
+    degree_support_correlation,
+    hub_connection_fraction,
+    young_old_hubs,
+)
+
+from .common import bench_streams
+
+__all__ = ["run"]
+
+
+def run() -> list[tuple]:
+    rows = []
+    for name, s in bench_streams().items():
+        n = min(2000, len(s))
+        t0 = time.perf_counter()
+        fr = butterfly_hub_fractions(s.edge_i[:n], s.edge_j[:n], s.n_i, s.n_j)
+        ci, cj = degree_support_correlation(s.edge_i[:n], s.edge_j[:n], s.n_i, s.n_j)
+        dt = (time.perf_counter() - t0) * 1e6
+        h = fr["hubs_0_4"]
+        rows.append((f"hubs/{name}/fractions_0to4", dt,
+                     "|".join(f"{x:.2f}" for x in h)))
+        rows.append((f"hubs/{name}/deg_support_corr", dt,
+                     f"i={ci:.2f} j={cj:.2f}"))
+        # Figs 9-10: normalized hub connection fraction decays
+        fracs = []
+        for k in (500, 1000, 2000):
+            deg = np.bincount(s.edge_i[:k], minlength=s.n_i)
+            fracs.append(hub_connection_fraction(deg, k))
+        rows.append((f"hubs/{name}/conn_fraction_decay", dt,
+                     "->".join(f"{x:.4f}" for x in fracs)))
+        # Figs 11-12: young vs old hubs at t=2000
+        deg = np.bincount(s.edge_i[:n], minlength=s.n_i)
+        vts = np.full(s.n_i, np.inf)
+        for t in range(n):
+            v = s.edge_i[t]
+            if vts[v] == np.inf:
+                vts[v] = s.tau[t]
+        young, old = young_old_hubs(deg, vts, np.unique(s.tau[:n]))
+        rows.append((f"hubs/{name}/young_old", dt, f"young={young} old={old}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Butterfly-kernel micro-bench: tiled-JAX vs dense-Gram vs (interpret-mode)
+Pallas on window-sized biadjacencies; derived column = GMAC/s of the Gram
+contraction (the kernel's roofline axis)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.butterfly import count_butterflies_dense, count_butterflies_tiled
+
+__all__ = ["run"]
+
+
+def run() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n_i, n_j, dens in [(1024, 2048, 0.01), (2048, 4096, 0.005)]:
+        adj = jnp.asarray((rng.random((n_i, n_j)) < dens), jnp.float32)
+        macs = n_i * n_i * n_j / 2
+
+        dense = jax.jit(count_butterflies_dense)
+        tiled = jax.jit(lambda a: count_butterflies_tiled(a, tile=512))
+        jax.block_until_ready(dense(adj)); jax.block_until_ready(tiled(adj))
+        for name, fn in [("dense", dense), ("tiled512", tiled)]:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(adj))
+            dt = time.perf_counter() - t0
+            rows.append((f"kernel/{name}_{n_i}x{n_j}", dt * 1e6,
+                         f"{macs / dt / 1e9:.2f} GMAC/s"))
+    return rows

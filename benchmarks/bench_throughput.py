@@ -1,0 +1,83 @@
+"""Paper Tables 8-9 + Figs 31-36: sGrapp vs FLEET throughput and MAPE.
+
+Throughput = processed edges / elapsed wall seconds, both suites measured
+host-side on the same stream (the paper measured its Java impls the same
+way).  sGrapp's pipeline = windowize (host) + jitted exact window counts +
+estimator; FLEET = sequential reservoir (numpy/python).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.fleet import fleet_run
+from repro.core.sgrapp import mape, run_sgrapp
+from repro.core.windows import window_bounds, windowize
+from repro.streams import bipartite_pa_stream
+
+from .common import ground_truth_cumulative
+
+__all__ = ["run"]
+
+
+def run() -> list[tuple]:
+    rows = []
+    s = bipartite_pa_stream(30_000, temporal="uniform", n_unique=6000, seed=3)
+    ntw, alpha = 120, 0.95
+
+    # -- sGrapp throughput (Table 8 analogue) ---------------------------------
+    t0 = time.perf_counter()
+    wb = windowize(s.tau, s.edge_i, s.edge_j, ntw)
+    res = run_sgrapp(wb, alpha)
+    dt = time.perf_counter() - t0
+    n_processed = int(wb.cum_sgrs[-1])
+    rows.append(("throughput/sgrapp_edges_per_s", dt * 1e6,
+                 f"{n_processed / dt:.0f}"))
+    # warm path (jit cached): streaming steady-state rate
+    t0 = time.perf_counter()
+    wb2 = windowize(s.tau, s.edge_i, s.edge_j, ntw)
+    run_sgrapp(wb2, alpha)
+    dt2 = time.perf_counter() - t0
+    rows.append(("throughput/sgrapp_edges_per_s_warm", dt2 * 1e6,
+                 f"{n_processed / dt2:.0f}"))
+
+    # -- FLEET throughput ------------------------------------------------------
+    for variant in (2, 3):
+        for M in (2000, 8000):
+            t0 = time.perf_counter()
+            fleet_run(s.edge_i, s.edge_j, variant=variant, capacity=M,
+                      gamma=0.7, seed=0)
+            dtf = time.perf_counter() - t0
+            rows.append((f"throughput/fleet{variant}_M{M}_edges_per_s",
+                         dtf * 1e6, f"{len(s) / dtf:.0f}"))
+
+    # -- accuracy comparison on a prefix (Table 9 analogue) --------------------
+    prefix = s.prefix(8000)
+    ntw9 = 80
+    wb9 = windowize(prefix.tau, prefix.edge_i, prefix.edge_j, ntw9)
+    truths = ground_truth_cumulative(prefix, ntw9)
+    bounds = window_bounds(prefix.tau, ntw9)
+    best_sg = min(run_sgrapp(wb9, a, truths=truths).mape()
+                  for a in (0.85, 0.9, 0.95, 1.0, 1.05))
+    rows.append(("mape/sgrapp", 0.0, f"{best_sg:.4f}"))
+    cps = bounds[:, 1]
+    M = max(800, len(prefix) // 100)  # paper: M = 0.01 S
+    for variant in (1, 2, 3):
+        est, _ = fleet_run(prefix.edge_i, prefix.edge_j, variant=variant,
+                           capacity=M, gamma=0.7, seed=0, checkpoints=cps)
+        rows.append((f"mape/fleet{variant}", 0.0, f"{mape(est, truths):.4f}"))
+
+    # -- Figs 31-36: per-window latency/throughput trace ------------------------
+    import jax
+    from repro.core.sgrapp import window_exact_counts
+    window_exact_counts(wb9)  # compile
+    lat = []
+    for k in range(min(6, wb9.n_windows)):
+        one = windowize(prefix.tau, prefix.edge_i, prefix.edge_j, ntw9)
+        t0 = time.perf_counter()
+        jax.block_until_ready(window_exact_counts(one))
+        lat.append((time.perf_counter() - t0) / one.n_windows)
+    rows.append(("latency/per_window_s", float(np.mean(lat)) * 1e6,
+                 f"mean={np.mean(lat)*1e3:.2f}ms"))
+    return rows

@@ -1,0 +1,42 @@
+"""Shared benchmark utilities + canonical bench streams."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.butterfly import count_butterflies_np
+from repro.core.windows import window_bounds
+from repro.streams import ba_bipartite_stream, bipartite_pa_stream
+
+__all__ = ["timer_us", "bench_streams", "ground_truth_cumulative"]
+
+
+def timer_us(fn, *args, repeat: int = 3, **kw) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_streams(n: int = 6000, n_unique: int = 1500):
+    """The three canonical streams of the reproduction (SS3.1 methodology):
+    hub-dominated uniform (rating-like), hub-dominated bursty (wiki-like),
+    and the BA+random-stamps null model."""
+    return {
+        "pa_uniform": bipartite_pa_stream(n, temporal="uniform",
+                                          n_unique=n_unique, seed=0),
+        "pa_bursty": bipartite_pa_stream(n, temporal="bursty",
+                                         n_unique=n_unique, seed=1),
+        "ba_random": ba_bipartite_stream(n=max(n // 8, 64), m=8,
+                                         n_unique=n_unique, seed=2),
+    }
+
+
+def ground_truth_cumulative(stream, nt_w: int) -> np.ndarray:
+    b = window_bounds(stream.tau, nt_w)
+    return np.array(
+        [count_butterflies_np(stream.edges()[: int(e)]) for _, e in b],
+        dtype=np.float64)

@@ -1,0 +1,83 @@
+"""SSPerf — equiformer-v2 halo-exchange vs gather on the pod mesh.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb_eqv2
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_arch                        # noqa: E402
+from repro.distributed.sharding import Sharder            # noqa: E402
+from repro.launch.hlo_cost import analyze_hlo             # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.models.gnn.equiformer_v2 import eqv2_loss_halo # noqa: E402
+
+PEAK, HBM_BW, ICI = 197e12, 819e9, 50e9
+
+
+def terms(c):
+    r = analyze_hlo(c.as_text())
+    return {
+        "t_compute_ms": r["flops"] / PEAK * 1e3,
+        "t_memory_ms": r["bytes"] / HBM_BW * 1e3,
+        "t_collective_ms": r["collectives"]["total"] / ICI * 1e3,
+        "collective_gb": r["collectives"]["total"] / 1e9,
+        "temp_gb": c.memory_analysis().temp_size_in_bytes / 1e9,
+    }
+
+
+def main() -> None:
+    mesh = make_production_mesh()
+    n_dev = mesh.size
+    shard = Sharder.for_mesh(mesh)
+    arch = get_arch("equiformer-v2")
+    import dataclasses
+    cfg = dataclasses.replace(arch.full_config(), d_in=602)  # minibatch_lg
+    out = {}
+
+    # baseline: the registry gather cell (minibatch_lg — the misfit shape)
+    cell = arch.cells(cfg)["minibatch_lg"]
+    step = cell.make_step(shard)
+    with mesh:
+        c = jax.jit(step, in_shardings=cell.in_shardings(shard),
+                    donate_argnums=cell.donate).lower(*cell.abstract_inputs()).compile()
+    out["gather_baseline"] = terms(c)
+
+    # halo variant, same graph budget
+    N, E = 169_984, 169_984
+    n_loc = N // n_dev        # 664
+    H_per_peer = max(1, (n_loc // 2) // n_dev + 1)
+    e_loc = E // n_dev * 2
+    nc = cfg.n_coeff
+    sd = jax.ShapeDtypeStruct
+    batch = {
+        "x": sd((N, cfg.d_in), jnp.float32),
+        "halo_send_idx": sd((n_dev, n_dev, H_per_peer), jnp.int32),
+        "edge_src_ext": sd((n_dev, e_loc), jnp.int32),
+        "edge_dst_loc": sd((n_dev, e_loc), jnp.int32),
+        "edge_mask": sd((n_dev, e_loc), jnp.bool_),
+        "wigner": sd((n_dev, e_loc, nc, nc), jnp.float32),
+        "labels_2d": sd((n_dev, n_loc), jnp.int32),
+        "label_mask_2d": sd((n_dev, n_loc), jnp.float32),
+    }
+    from repro.models.gnn.equiformer_v2 import init_eqv2
+    params_abs = jax.eval_shape(lambda: init_eqv2(jax.random.PRNGKey(0), cfg))
+    axes = tuple(mesh.axis_names)
+    with mesh:
+        c2 = jax.jit(lambda p, b: eqv2_loss_halo(p, b, cfg, mesh, axes)).lower(
+            params_abs, batch).compile()
+    out["halo_exchange"] = terms(c2)
+    out["halo_budget"] = {"H_per_peer": H_per_peer, "edge_slots": e_loc}
+
+    os.makedirs("experiments/hillclimb", exist_ok=True)
+    with open("experiments/hillclimb/eqv2_minibatch.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

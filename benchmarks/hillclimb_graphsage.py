@@ -1,0 +1,95 @@
+"""SSPerf hillclimb — graphsage-reddit/ogb_products (most collective-bound).
+
+Compiles the gather-based baseline and the halo-exchange variant on the
+production pod mesh and reports the roofline terms of each.  Run as a
+module IN ITS OWN PROCESS (forces 512 host devices):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb_graphsage
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_arch                        # noqa: E402
+from repro.distributed.sharding import Sharder            # noqa: E402
+from repro.launch.hlo_cost import analyze_hlo             # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.models.gnn.graphsage import sage_loss_halo     # noqa: E402
+
+PEAK, HBM_BW, ICI = 197e12, 819e9, 50e9
+
+
+def terms(hlo):
+    r = analyze_hlo(hlo)
+    return {
+        "t_compute_ms": r["flops"] / PEAK * 1e3,
+        "t_memory_ms": r["bytes"] / HBM_BW * 1e3,
+        "t_collective_ms": r["collectives"]["total"] / ICI * 1e3,
+        "collective_bytes": r["collectives"]["total"],
+    }
+
+
+def main() -> None:
+    mesh = make_production_mesh()
+    n_dev = mesh.size
+    shard = Sharder.for_mesh(mesh)
+    arch = get_arch("graphsage-reddit")
+    cfg = arch.full_config()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, d_in=100)     # ogb_products d_feat
+    out = {}
+
+    # -- baseline: gather-based cell (the registry step) ----------------------
+    cell = arch.cells(cfg)["ogb_products"]
+    step = cell.make_step(shard)
+    with mesh:
+        c = jax.jit(step, in_shardings=cell.in_shardings(shard),
+                    donate_argnums=cell.donate).lower(*cell.abstract_inputs()).compile()
+    out["gather_baseline"] = terms(c.as_text())
+    out["gather_baseline"]["memory"] = {
+        "temp_gb": c.memory_analysis().temp_size_in_bytes / 1e9}
+
+    # -- halo-exchange variant -------------------------------------------------
+    N = 2_449_408                     # padded ogb_products nodes
+    n_loc = N // n_dev
+    H = max(64, n_loc // 2)           # halo budget: 50% boundary per peer-set
+    H_per_peer = max(1, H // n_dev)
+    e_loc = 61_865_984 // n_dev * 2   # edge slots per device (2x skew margin)
+    F, C = 100, cfg.n_classes
+    sd = jax.ShapeDtypeStruct
+    batch = {
+        "x": sd((N, F), jnp.float32),
+        "halo_send_idx": sd((n_dev, n_dev, H_per_peer), jnp.int32),
+        "edge_src_ext": sd((n_dev, e_loc), jnp.int32),
+        "edge_dst_loc": sd((n_dev, e_loc), jnp.int32),
+        "edge_mask": sd((n_dev, e_loc), jnp.bool_),
+        "labels_2d": sd((n_dev, n_loc), jnp.int32),
+        "label_mask_2d": sd((n_dev, n_loc), jnp.float32),
+    }
+    params_abs = jax.eval_shape(
+        lambda: __import__("repro.models.gnn.graphsage", fromlist=["init_sage"])
+        .init_sage(jax.random.PRNGKey(0), cfg))
+    axes = tuple(mesh.axis_names)
+
+    def loss_fn(params, b):
+        return sage_loss_halo(params, b, cfg, mesh, axes)
+
+    with mesh:
+        c2 = jax.jit(loss_fn).lower(params_abs, batch).compile()
+    out["halo_exchange"] = terms(c2.as_text())
+    out["halo_exchange"]["memory"] = {
+        "temp_gb": c2.memory_analysis().temp_size_in_bytes / 1e9}
+    out["halo_budget"] = {"H_per_peer": H_per_peer, "edge_slots": e_loc}
+
+    os.makedirs("experiments/hillclimb", exist_ok=True)
+    with open("experiments/hillclimb/graphsage_ogb.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Roofline analysis over the dry-run artifacts (assignment deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+  memory term     = HLO_bytes_per_device / HBM_bandwidth         [s]
+  collective term = collective_bytes_per_device / ICI_bandwidth  [s]
+
+cost_analysis() reports the *per-device* partitioned program, so terms are
+per-chip directly.  collective bytes come from the optimized HLO (dryrun.py
+sums result-shape bytes of every collective op) — also per device.
+
+MODEL_FLOPS / (HLO_FLOPs x chips) is the useful-compute ratio (catching
+remat / dispatch-dead-compute waste; remat targets ~1/3 extra fwd).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9   # v5e
+
+__all__ = ["load_cells", "roofline_row", "roofline_table", "main"]
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun", mesh: str = "pod") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, mesh, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec["status"] != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec["status"],
+                "reason": rec.get("reason", rec.get("error", ""))[:90]}
+    n_dev = rec["n_devices"]
+    # prefer the trip-count-aware HLO cost model (launch/hlo_cost.py) —
+    # XLA's cost_analysis counts while bodies once (see EXPERIMENTS.md)
+    if "hlo" in rec:
+        flops = rec["hlo"]["flops"] or 0.0
+        bytes_acc = rec["hlo"]["bytes"] or 0.0
+        coll = rec["hlo"]["collectives"].get("total", 0)
+    else:
+        flops = rec["cost"].get("flops", 0.0) or 0.0
+        bytes_acc = rec["cost"].get("bytes accessed", 0.0) or 0.0
+        coll = rec["collectives"].get("total", 0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mem = rec["memory"]
+    hbm = (mem.get("argument_size_bytes") or 0) + (mem.get("temp_size_bytes") or 0)
+    # TPU-corrected HBM: subtract the CPU-backend f32 promotion copies of
+    # bf16 weights/caches (hoisted + per-loop-iteration converts; neither
+    # exists on TPU where bf16 matmul is native)
+    promoted = (rec.get("hlo", {}).get("promoted_f32_bytes", 0.0)
+                + rec.get("hlo", {}).get("promoted_f32_loop_bytes", 0.0))
+    hbm_tpu = max(hbm - promoted, 0.0)
+    useful = rec.get("model_flops", 0.0) / (flops * n_dev) if flops else 0.0
+    # roofline fraction: useful model flops per chip-second at the bound
+    step_time = max(t_c, t_m, t_x)
+    ach_flops = rec.get("model_flops", 0.0) / n_dev / max(step_time, 1e-12)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "kind": rec["kind"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom[0],
+        "useful_flops_ratio": useful,
+        "mfu_bound": ach_flops / PEAK_FLOPS,
+        "hbm_gb": hbm_tpu / 1e9,
+        "hbm_raw_gb": hbm / 1e9,
+        "fits_hbm": hbm_tpu <= HBM_PER_CHIP,
+    }
+
+
+def roofline_table(dryrun_dir: str = "experiments/dryrun", mesh: str = "pod") -> list[dict]:
+    return [roofline_row(r) for r in load_cells(dryrun_dir, mesh)]
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<18}{'shape':<15}{'t_comp':>9}{'t_mem':>9}{'t_coll':>9}"
+           f"{'dominant':>11}{'useful':>8}{'MFU≤':>7}{'HBM(GB)':>9}{'fits':>6}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r is None:
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:<18}{r['shape']:<15}  [{r['status']}] {r.get('reason','')}")
+            continue
+        lines.append(
+            f"{r['arch']:<18}{r['shape']:<15}"
+            f"{r['t_compute_s']*1e3:>8.2f}m{r['t_memory_s']*1e3:>8.2f}m"
+            f"{r['t_collective_s']*1e3:>8.2f}m"
+            f"{r['dominant']:>11}{r['useful_flops_ratio']:>8.2f}"
+            f"{r['mfu_bound']:>7.2f}{r['hbm_gb']:>9.1f}"
+            f"{'Y' if r['fits_hbm'] else 'N':>6}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = roofline_table(args.dir, args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

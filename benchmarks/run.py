@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  The
+roofline table (assignment deliverable g) is emitted at the end when dry-run
+artifacts exist under experiments/dryrun/.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_accuracy,
+        bench_densification,
+        bench_hubs,
+        bench_interarrival,
+        bench_kernel,
+        bench_throughput,
+    )
+
+    modules = [
+        ("densification", bench_densification),
+        ("hubs", bench_hubs),
+        ("interarrival", bench_interarrival),
+        ("accuracy", bench_accuracy),
+        ("throughput", bench_throughput),
+        ("kernel", bench_kernel),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},NaN,ERROR", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline summary (if the dry-run has been executed)
+    if os.path.isdir("experiments/dryrun/pod"):
+        from .roofline import format_table, roofline_table
+        print("\n# Roofline (single-pod, per chip) — see EXPERIMENTS.md")
+        print(format_table(roofline_table()))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

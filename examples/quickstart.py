@@ -1,0 +1,41 @@
+"""Quickstart: approximate butterfly counting over a bipartite stream.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.sgrapp import run_sgrapp, run_sgrapp_x
+from repro.core.windows import window_bounds, windowize
+from repro.core.butterfly import count_butterflies_np
+from repro.streams import bipartite_pa_stream
+
+
+def main() -> None:
+    # 1. a user-item interaction stream (rating-graph work-alike, SS3.1)
+    stream = bipartite_pa_stream(8000, temporal="uniform", n_unique=2000, seed=0)
+    print(f"stream: {len(stream)} sgrs, {stream.n_i} users, {stream.n_j} items, "
+          f"{stream.n_unique_timestamps} unique timestamps")
+
+    # 2. adaptive tumbling windows: close after N_t^W unique timestamps
+    nt_w = 100
+    wb = windowize(stream.tau, stream.edge_i, stream.edge_j, nt_w)
+    print(f"windows: {wb.n_windows} x capacity {wb.capacity} "
+          f"(edges/window: min {wb.n_edges.min()}, max {wb.n_edges.max()})")
+
+    # 3. sGrapp: exact in-window counts + |E|^alpha inter-window estimate
+    res = run_sgrapp(wb, alpha=1.02)
+    print(f"sGrapp cumulative estimate at stream end: {res.estimates[-1]:,.0f}")
+
+    # 4. ground truth on the prefix (the expensive exact path)
+    truths = np.array([count_butterflies_np(stream.edges()[:e])
+                       for _, e in window_bounds(stream.tau, nt_w)], dtype=float)
+    res = run_sgrapp(wb, alpha=1.02, truths=truths)
+    print(f"true count: {truths[-1]:,.0f}   sGrapp MAPE: {res.mape():.4f}")
+
+    # 5. sGrapp-x: adapt alpha while ground truth is available, then freeze
+    res_x = run_sgrapp_x(wb, 1.02, truths, x_percent=50)
+    print(f"sGrapp-50 MAPE: {res_x.mape():.4f} (alpha -> {res_x.alpha_final:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily with
+the KV cache, and — the paper hook — monitor the (request, token) bipartite
+stream with sGrapp to track co-generation density across the batch.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.butterfly import snapshot_count
+from repro.models.transformer import (
+    decode_step, init_lm_params, prefill,
+)
+from repro.models.transformer.config import LMConfig
+
+
+def tiny_serving_model() -> LMConfig:
+    return LMConfig(name="serve-demo", n_layers=4, d_model=256, n_heads=4,
+                    n_kv_heads=2, d_ff=1024, vocab_size=8192, head_dim=64,
+                    dtype="float32", attn_chunk_q=128, attn_chunk_k=128)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = tiny_serving_model()
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    # shared system prefix + per-request suffix (the shared prefix is what
+    # the sGrapp monitor detects as (request x token) butterflies)
+    sys_prefix = rng.integers(0, cfg.vocab_size, args.prompt_len // 2)
+    suffix = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len - len(sys_prefix)))
+    prompts = jnp.asarray(
+        np.concatenate([np.tile(sys_prefix, (args.batch, 1)), suffix], axis=1),
+        jnp.int32)
+
+    max_len = args.prompt_len + args.gen
+    prefill_j = jax.jit(lambda p, t: prefill(p, t, cfg, max_len))
+    decode_j = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_j(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms")
+
+    toks = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    generated = [toks]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, cache = decode_j(params, cache, toks)
+        toks = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        generated.append(toks)
+    jax.block_until_ready(toks)
+    t_dec = time.perf_counter() - t0
+    gen = np.stack([np.asarray(t) for t in generated], axis=1)
+    print(f"decode: {args.gen} steps in {t_dec*1e3:.1f}ms "
+          f"({args.batch * args.gen / t_dec:.0f} tok/s)")
+
+    # -- sGrapp hook: (request, token) bipartite co-generation analytics ------
+    full = np.concatenate([np.asarray(prompts), gen], axis=1)  # prompt+gen
+    req = np.repeat(np.arange(args.batch), full.shape[1])
+    tok = full.reshape(-1)
+    cap = 1 << int(np.ceil(np.log2(len(req))))
+    ei = np.zeros(cap, np.int32); ej = np.zeros(cap, np.int32); v = np.zeros(cap, bool)
+    ei[: len(req)], v[: len(req)] = req, True
+    uj, inv = np.unique(tok, return_inverse=True)
+    ej[: len(req)] = inv
+    b = float(snapshot_count(jnp.asarray(ei), jnp.asarray(ej), jnp.asarray(v),
+                             n_i=args.batch, n_j=cap))
+    print(f"sGrapp monitor: {b:.0f} butterflies in the (request,token) graph "
+          f"-> co-generation density {b / max(len(req),1):.2f} per emission")
+
+
+if __name__ == "__main__":
+    main()

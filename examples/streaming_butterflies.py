@@ -1,0 +1,84 @@
+"""End-to-end streaming driver: online adaptive windows -> jitted exact
+in-window counting -> sGrapp-x estimation -> periodic fault-tolerant
+checkpointing of (estimator state + stream cursor).
+
+Simulates a live deployment: sgrs arrive one at a time through the online
+windowizer; each closed window is counted on-device; the estimator state
+survives a simulated crash/restart halfway through.
+
+    PYTHONPATH=src python examples/streaming_butterflies.py
+"""
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.butterfly import snapshot_count
+from repro.core.windows import adaptive_window_stream
+from repro.streams import bipartite_pa_stream
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint, latest_step
+
+NT_W = 120
+ALPHA0 = 0.95
+TOL, STEP = 0.05, 0.005
+CAP, NI, NJ = 1024, 512, 1024   # padded window capacity (static shapes)
+
+
+def pad_window(ei, ej):
+    ui, inv_i = np.unique(ei, return_inverse=True)
+    uj, inv_j = np.unique(ej, return_inverse=True)
+    m = len(ei)
+    out_i = np.zeros(CAP, np.int32); out_j = np.zeros(CAP, np.int32)
+    v = np.zeros(CAP, bool)
+    out_i[:m], out_j[:m], v[:m] = inv_i, inv_j, True
+    return jnp.asarray(out_i), jnp.asarray(out_j), jnp.asarray(v)
+
+
+def process(stream, ckpt_dir, *, crash_after: int | None = None):
+    # restore estimator state if a checkpoint exists (restart path)
+    state = {"cum": 0.0, "alpha": ALPHA0, "edges": 0, "window": 0}
+    if latest_step(ckpt_dir) is not None:
+        _, extra = restore_checkpoint(ckpt_dir, {})
+        state = extra["estimator"]
+        print(f"  restored at window {state['window']} "
+              f"(cum={state['cum']:.0f}, alpha={state['alpha']:.3f})")
+
+    records = zip(stream.tau.tolist(), stream.edge_i.tolist(),
+                  stream.edge_j.tolist())
+    k = 0
+    for tau_w, ei, ej in adaptive_window_stream(records, NT_W):
+        if k < state["window"]:
+            k += 1
+            continue  # already processed before the crash
+        pi, pj, v = pad_window(ei, ej)
+        in_window = float(snapshot_count(pi, pj, v, n_i=NI, n_j=NJ))
+        state["edges"] += len(ei)
+        inter = state["edges"] ** state["alpha"] if k > 0 else 0.0
+        state["cum"] += in_window + inter
+        state["window"] = k + 1
+        if (k + 1) % 5 == 0:
+            save_checkpoint(ckpt_dir, k + 1, {}, extra={"estimator": state})
+        print(f"  window {k:3d}: in-window={in_window:8.0f}  "
+              f"B-hat={state['cum']:12.0f}")
+        k += 1
+        if crash_after is not None and k >= crash_after:
+            print("  !! simulated crash !!")
+            return state, False
+    return state, True
+
+
+def main() -> None:
+    stream = bipartite_pa_stream(6000, temporal="uniform", n_unique=1800, seed=7)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = os.path.join(d, "ckpt")
+        print("run 1 (crashes after 10 windows):")
+        process(stream, ckpt, crash_after=10)
+        print("run 2 (restart from checkpoint):")
+        state, done = process(stream, ckpt)
+        assert done
+        print(f"final estimate: {state['cum']:,.0f} over {state['window']} windows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end LM training driver: ~100M-param GQA transformer for a few
+hundred steps on synthetic token streams, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import init_lm_params, lm_loss
+from repro.models.transformer.config import LMConfig
+from repro.train.checkpoint import AsyncCheckpointer
+from repro.train.loop import make_train_step
+from repro.train.optimizer import adamw_init
+from repro.train.train_state import TrainState
+
+
+def lm100m() -> LMConfig:
+    # ~100M params: 16L x d512 x ffn 2048, vocab 32k
+    return LMConfig(name="lm100m", n_layers=16, d_model=512, n_heads=8,
+                    n_kv_heads=4, d_ff=2048, vocab_size=32_000, head_dim=64,
+                    dtype="float32", attn_chunk_q=256, attn_chunk_k=256)
+
+
+def synthetic_batches(vocab, batch, seq, seed=0):
+    """Markov-ish synthetic stream: next-token structure so loss can drop."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, vocab, size=(batch, seq + 1))
+    # inject copy structure: token t+1 often repeats token t
+    copy = rng.random((batch, seq + 1)) < 0.5
+    for t in range(1, seq + 1):
+        base[:, t] = np.where(copy[:, t], base[:, t - 1], base[:, t])
+    while True:
+        yield {"tokens": jnp.asarray(base[:, :-1], jnp.int32),
+               "labels": jnp.asarray(base[:, 1:], jnp.int32)}
+        base = np.roll(base, 1, axis=0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = lm100m()
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} with {n_params/1e6:.1f}M params")
+
+    state = TrainState(params, adamw_init(params), jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        lambda p, b: lm_loss(p, b, cfg), n_microbatches=2, lr=3e-4),
+        donate_argnums=(0,))
+    ckpt = AsyncCheckpointer(args.ckpt, keep=2)
+
+    data = synthetic_batches(cfg.vocab_size, args.batch, args.seq)
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        state, metrics = step(state, next(data))
+        if i % 20 == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            toks = (i + 1) * args.batch * args.seq
+            rate = toks / (time.perf_counter() - t0)
+            print(f"step {i:4d} loss {loss:.4f} ({rate:,.0f} tok/s)")
+        if (i + 1) % 100 == 0:
+            ckpt.save(i + 1, state.params)
+    ckpt.wait()
+    print("final loss:", float(metrics["loss"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — sGrapp butterfly approximation in streaming graphs, as a
+production JAX/TPU framework (see DESIGN.md)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,22 @@
+"""Arch registry: one module per assigned architecture + the paper's own.
+
+``--arch <id>`` in the launchers resolves through ARCHS.
+"""
+from .registry import ARCHS, Cell, get_arch, list_cells
+
+# importing the modules registers the archs
+from . import (  # noqa: F401
+    phi4_mini_3_8b,
+    granite_8b,
+    minicpm3_4b,
+    phi3_5_moe_42b,
+    dbrx_132b,
+    dimenet,
+    graphcast,
+    equiformer_v2,
+    graphsage_reddit,
+    xdeepfm,
+    sgrapp_paper,
+)
+
+__all__ = ["ARCHS", "Cell", "get_arch", "list_cells"]

@@ -1,0 +1,18 @@
+"""sgrapp — the paper's own workload as first-class dry-run cells:
+distributed windowed exact counting (ring-Gram over 'model', windows over
+'data'/pods) and the full sGrapp-x estimator scan."""
+from .registry import Arch, register, sgrapp_cells
+from .shapes import SGRAPP_SHAPES
+
+
+def full_config() -> dict:
+    return {"name": "sgrapp", "shapes": dict(SGRAPP_SHAPES)}
+
+
+def smoke_config() -> dict:
+    return {"name": "sgrapp",
+            "shapes": {"win_8k": (4, 256, 128, 256),
+                       "estimator": (8, 256, 128, 256)}}
+
+
+register(Arch("sgrapp", "stream", full_config, smoke_config, sgrapp_cells))

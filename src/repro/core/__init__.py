@@ -1,0 +1,34 @@
+from .butterfly import (
+    Snapshot,
+    build_biadjacency,
+    butterfly_support_dense,
+    butterfly_support_np,
+    count_butterflies_dense,
+    count_butterflies_from_edges,
+    count_butterflies_np,
+    count_butterflies_tiled,
+    count_caterpillars_np,
+    enumerate_butterflies_np,
+)
+from .windows import WindowBatch, window_bounds, window_ids, windowize
+from .sgrapp import (
+    SGrappResult,
+    mape,
+    run_sgrapp,
+    run_sgrapp_x,
+    sgrapp_estimate,
+    sgrapp_x_estimate,
+    window_exact_counts,
+)
+from .fleet import FleetState, fleet_run, fleet_run_chunked
+
+__all__ = [
+    "Snapshot", "build_biadjacency", "butterfly_support_dense",
+    "butterfly_support_np", "count_butterflies_dense",
+    "count_butterflies_from_edges", "count_butterflies_np",
+    "count_butterflies_tiled", "count_caterpillars_np",
+    "enumerate_butterflies_np", "WindowBatch", "window_bounds", "window_ids",
+    "windowize", "SGrappResult", "mape", "run_sgrapp", "run_sgrapp_x",
+    "sgrapp_estimate", "sgrapp_x_estimate", "window_exact_counts",
+    "FleetState", "fleet_run", "fleet_run_chunked",
+]

@@ -1,0 +1,198 @@
+"""Adaptive time-based tumbling windows (paper SS4.1, Algorithm 3).
+
+A window closes after ``nt_w`` *unique timestamps* have been observed — not a
+fixed time span and not a fixed sgr count.  On TPU the adaptivity (a
+data-dependent boundary decision) lives on the host: the windowizer turns a
+time-ordered sgr sequence into fixed-capacity padded window tensors that the
+device consumes as a fully static vmap/scan program (DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["window_ids", "window_bounds", "WindowBatch", "windowize", "adaptive_window_stream"]
+
+
+def window_ids(tau: np.ndarray, nt_w: int) -> np.ndarray:
+    """Window index per sgr for adaptive tumbling windows.
+
+    ``tau`` must be non-decreasing (stream order).  The k-th window contains
+    the sgrs whose timestamp falls in the k-th block of ``nt_w`` unique
+    timestamps — exactly Algorithm 3's close condition.
+    """
+    tau = np.asarray(tau)
+    if tau.shape[0] == 0:
+        return np.zeros(0, dtype=np.int64)
+    if np.any(np.diff(tau) < 0):
+        raise ValueError("timestamps must be non-decreasing (stream order)")
+    if nt_w <= 0:
+        raise ValueError("nt_w must be positive")
+    is_new = np.r_[True, tau[1:] != tau[:-1]]
+    uniq_rank = np.cumsum(is_new) - 1  # 0-based unique-timestamp rank
+    return uniq_rank // nt_w
+
+
+def window_bounds(tau: np.ndarray, nt_w: int, *, drop_partial: bool = True) -> np.ndarray:
+    """(start, end) sgr index ranges per window; optionally drop the trailing
+    partial window (one that never saw its nt_w-th unique timestamp close)."""
+    wid = window_ids(tau, nt_w)
+    if wid.shape[0] == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    n_win = int(wid[-1]) + 1
+    starts = np.searchsorted(wid, np.arange(n_win), side="left")
+    ends = np.searchsorted(wid, np.arange(n_win), side="right")
+    bounds = np.stack([starts, ends], axis=1)
+    if drop_partial:
+        tau = np.asarray(tau)
+        n_uniq_last = np.unique(tau[starts[-1] : ends[-1]]).shape[0]
+        if n_uniq_last < nt_w:
+            bounds = bounds[:-1]
+    return bounds
+
+
+@dataclass
+class WindowBatch:
+    """Padded device-ready window tensors.
+
+    edge_i / edge_j : int32 [n_windows, capacity]  compact per-window ids
+    valid           : bool  [n_windows, capacity]
+    n_edges         : int64 [n_windows]            deduped in-window edge count
+    n_sgrs          : int64 [n_windows]            raw sgr count (incl. dups)
+    cum_sgrs        : int64 [n_windows]            |E_k| = sgrs in [W_0^b, W_k^e)
+    n_i / n_j       : int                          compact id-space capacity
+    window_end_tau  : float64 [n_windows]          W_k^e (last tau in window)
+    n_i_per_window / n_j_per_window : int64 [n_windows]
+    """
+
+    edge_i: np.ndarray
+    edge_j: np.ndarray
+    valid: np.ndarray
+    n_edges: np.ndarray
+    n_sgrs: np.ndarray
+    cum_sgrs: np.ndarray
+    n_i: int
+    n_j: int
+    window_end_tau: np.ndarray
+    n_i_per_window: np.ndarray
+    n_j_per_window: np.ndarray
+
+    @property
+    def n_windows(self) -> int:
+        return self.edge_i.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.edge_i.shape[1]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def windowize(
+    tau: np.ndarray,
+    edge_i: np.ndarray,
+    edge_j: np.ndarray,
+    nt_w: int,
+    *,
+    capacity: int | None = None,
+    align: int = 128,
+    drop_partial: bool = True,
+    dedupe: bool = True,
+) -> WindowBatch:
+    """Compile a time-ordered sgr stream into padded window tensors.
+
+    Per window: dedupe (i, j) pairs (paper semantics), relabel vertices to a
+    compact per-window id space (tumbling windows renew the graph, Alg. 4
+    line 19, so ids never leak across windows), pad to a common capacity
+    aligned to ``align`` lanes.
+    """
+    tau = np.asarray(tau)
+    edge_i = np.asarray(edge_i, dtype=np.int64)
+    edge_j = np.asarray(edge_j, dtype=np.int64)
+    bounds = window_bounds(tau, nt_w, drop_partial=drop_partial)
+    n_win = bounds.shape[0]
+    if n_win == 0:
+        z2 = np.zeros((0, 0), dtype=np.int32)
+        z1 = np.zeros(0, dtype=np.int64)
+        return WindowBatch(z2, z2, z2.astype(bool), z1, z1, z1, 0, 0,
+                           np.zeros(0, dtype=np.float64), z1, z1)
+
+    per_edges: list[np.ndarray] = []
+    n_sgrs = np.zeros(n_win, dtype=np.int64)
+    end_tau = np.zeros(n_win, dtype=np.float64)
+    for k, (s, e) in enumerate(bounds):
+        n_sgrs[k] = e - s
+        end_tau[k] = tau[e - 1]
+        ew = np.stack([edge_i[s:e], edge_j[s:e]], axis=1)
+        if dedupe:
+            key = ew[:, 0] << 32 | (ew[:, 1] & 0xFFFFFFFF)
+            _, idx = np.unique(key, return_index=True)
+            ew = ew[np.sort(idx)]
+        per_edges.append(ew)
+
+    n_edges = np.array([e.shape[0] for e in per_edges], dtype=np.int64)
+    cap = capacity if capacity is not None else _round_up(max(1, int(n_edges.max())), align)
+    if int(n_edges.max()) > cap:
+        raise ValueError(
+            f"window capacity {cap} < max in-window edges {int(n_edges.max())}"
+        )
+
+    out_i = np.zeros((n_win, cap), dtype=np.int32)
+    out_j = np.zeros((n_win, cap), dtype=np.int32)
+    valid = np.zeros((n_win, cap), dtype=bool)
+    ni_w = np.zeros(n_win, dtype=np.int64)
+    nj_w = np.zeros(n_win, dtype=np.int64)
+    for k, ew in enumerate(per_edges):
+        ui, inv_i = np.unique(ew[:, 0], return_inverse=True)
+        uj, inv_j = np.unique(ew[:, 1], return_inverse=True)
+        m = ew.shape[0]
+        out_i[k, :m] = inv_i
+        out_j[k, :m] = inv_j
+        valid[k, :m] = True
+        ni_w[k], nj_w[k] = ui.shape[0], uj.shape[0]
+
+    n_i = _round_up(max(1, int(ni_w.max())), align)
+    n_j = _round_up(max(1, int(nj_w.max())), align)
+    cum_sgrs = np.cumsum(n_sgrs)
+    return WindowBatch(
+        edge_i=out_i, edge_j=out_j, valid=valid, n_edges=n_edges, n_sgrs=n_sgrs,
+        cum_sgrs=cum_sgrs, n_i=n_i, n_j=n_j, window_end_tau=end_tau,
+        n_i_per_window=ni_w, n_j_per_window=nj_w,
+    )
+
+
+def adaptive_window_stream(
+    records: Iterator[tuple[float, int, int]],
+    nt_w: int,
+) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Online variant of Algorithm 3: yields (tau, edge_i, edge_j) arrays as
+    each adaptive window closes.  Used by the true-streaming examples; the
+    batched :func:`windowize` path is used for replayed/benchmark streams.
+    """
+    buf_tau: list[float] = []
+    buf_i: list[int] = []
+    buf_j: list[int] = []
+    uniq: set[float] = set()
+    pending_close = False
+    for tau, i, j in records:
+        if pending_close and tau not in uniq:
+            # nt_w-th unique timestamp fully drained; window closes *before*
+            # the first sgr of a new timestamp beyond the quota.
+            yield (np.array(buf_tau), np.array(buf_i), np.array(buf_j))
+            buf_tau, buf_i, buf_j = [], [], []
+            uniq = set()
+            pending_close = False
+        buf_tau.append(tau)
+        buf_i.append(i)
+        buf_j.append(j)
+        uniq.add(tau)
+        if len(uniq) == nt_w:
+            pending_close = True
+    if pending_close:
+        # final window reached its quota exactly at stream end -> complete
+        yield (np.array(buf_tau), np.array(buf_i), np.array(buf_j))
+    # a trailing partial window is dropped (matches windowize drop_partial)

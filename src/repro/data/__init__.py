@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, shard_batch, token_batches
+
+__all__ = ["Prefetcher", "shard_batch", "token_batches"]

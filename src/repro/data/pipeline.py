@@ -1,0 +1,74 @@
+"""Host data pipeline: batching, background prefetch, sharded device put.
+
+The training loop consumes an iterator of already-sharded device batches; a
+single background thread keeps ``depth`` batches in flight so host batch
+assembly overlaps device compute (the standard JAX input-pipeline pattern).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+__all__ = ["Prefetcher", "shard_batch", "token_batches"]
+
+
+def shard_batch(batch, shardings=None):
+    """device_put a host batch; ``shardings`` is a matching pytree of
+    NamedShardings (or None for single-device)."""
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else jax.numpy.asarray(x),
+        batch, shardings)
+
+
+class Prefetcher:
+    """Background-thread prefetch of an iterator (bounded queue)."""
+
+    _DONE = object()
+
+    def __init__(self, it: Iterator, depth: int = 2,
+                 transform: Callable | None = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Exception | None = None
+
+        def work():
+            try:
+                for item in it:
+                    self._q.put(transform(item) if transform else item)
+            except Exception as e:  # surfaced on next __next__
+                self._err = e
+            finally:
+                self._q.put(self._DONE)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._DONE:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def token_batches(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                  copy_p: float = 0.5) -> Iterator[dict]:
+    """Synthetic next-token batches with learnable copy structure (the
+    examples/tests data source; real deployments swap in their corpus)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        base = rng.integers(0, vocab, size=(batch, seq + 1))
+        copy = rng.random((batch, seq + 1)) < copy_p
+        for t in range(1, seq + 1):
+            base[:, t] = np.where(copy[:, t], base[:, t - 1], base[:, t])
+        yield {"tokens": base[:, :-1].astype(np.int32),
+               "labels": base[:, 1:].astype(np.int32)}

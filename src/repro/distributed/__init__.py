@@ -1,0 +1,3 @@
+from .sharding import Sharder, NO_SHARD
+
+__all__ = ["Sharder", "NO_SHARD"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the butterfly-count kernel.
+
+B = sum_{u<v} C(W_uv, 2),  W = A @ A.T  over the i-side of the biadjacency.
+The kernel computes the same quantity without materializing W.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["butterfly_count_ref"]
+
+
+def butterfly_count_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    """adj: [n_i, n_j] 0/1 (any float/int dtype).  Returns scalar float32."""
+    a = adj.astype(jnp.float32)
+    w = a @ a.T
+    pairs = w * (w - 1.0) * 0.5
+    total = pairs.sum() - jnp.sum(jnp.diagonal(pairs))
+    return (total * 0.5).astype(jnp.float32)

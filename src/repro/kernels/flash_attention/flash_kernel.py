@@ -1,0 +1,101 @@
+"""Pallas TPU flash-attention kernel (online-softmax over KV blocks).
+
+Beyond-paper kernel for the LM serving cells: prefill attention is the
+second-largest compute term in the roofline after the MoE fix, and the
+chunked-XLA formulation spills its accumulators to HBM between KV chunks.
+The Pallas version keeps (acc, m, l) in VMEM scratch across the KV-block
+walk — the FlashAttention-2 schedule on MXU tiles.
+
+Grid: (batch*heads, q_blocks, kv_blocks); kv minor (sequential) so scratch
+carries across kv steps.  Causal masking by global block indices; the
+kv walk for a causal q-block stops contributing past the diagonal via
+masking (XLA-CPU interpret mode exercises the same code path the TPU
+compiler lowers to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_call"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, bq: int, bk: int, nk: int, causal: bool, scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)          # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, _NEG)
+
+    m_prev = m_ref[...]                        # [bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)             # [bq, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q: jax.Array,   # [BH, Sq, hd]
+    k: jax.Array,   # [BH, Skv, hd]
+    v: jax.Array,   # [BH, Skv, hd]
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq lens ({sq},{skv}) must divide blocks ({bq},{bk})")
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          scale=scale),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v)

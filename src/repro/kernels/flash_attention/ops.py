@@ -1,0 +1,30 @@
+"""Jit'd wrapper: [B, S, H, hd] layout + GQA head expansion."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False):
+    """q [B, Sq, H, hd]; k/v [B, Skv, Hkv, hd] (GQA groups broadcast)."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    if h != hkv:
+        g = h // hkv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    o = flash_attention_call(qf, kf, vf, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); dryrun.py is the ONLY entry point that sees 512
+placeholder devices — tests and benches see 1.
+
+Per cell this prints/records:
+  - compiled.memory_analysis()  (proves the cell fits per-device HBM)
+  - compiled.cost_analysis()    (HLO FLOPs / bytes for the roofline)
+  - collective-bytes by op kind (parsed from the optimized HLO)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+      --shape train_4k --mesh pod --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multipod
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, get_arch                     # noqa: E402
+from repro.distributed.sharding import Sharder                # noqa: E402
+from repro.launch.hlo_cost import analyze_hlo                 # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_tiny_mesh  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by kind."""
+    out: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _type_bytes(type_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, force: bool = False) -> dict:
+    os.makedirs(os.path.join(out_dir, mesh_kind), exist_ok=True)
+    out_path = os.path.join(out_dir, mesh_kind, f"{arch_id}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    arch = get_arch(arch_id)
+    cfg = arch.full_config()
+    cell = arch.cells(cfg)[shape_name]
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "kind": cell.kind, "model_flops": cell.model_flops, "status": None,
+    }
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["reason"] = cell.skip
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] {arch_id}/{shape_name}@{mesh_kind}: SKIPPED ({cell.skip})")
+        return rec
+
+    mesh = {
+        "pod": lambda: make_production_mesh(multi_pod=False),
+        "multipod": lambda: make_production_mesh(multi_pod=True),
+        "tiny": lambda: make_tiny_mesh(multi_pod=False),
+        "tiny_multipod": lambda: make_tiny_mesh(multi_pod=True),
+    }[mesh_kind]()
+
+    shard = Sharder.for_mesh(mesh)
+    step = cell.make_step(shard)
+    abstract = cell.abstract_inputs()
+    in_sh = cell.in_shardings(shard)
+
+    t0 = time.time()
+    try:
+        with mesh:
+            out_sh = cell.out_shardings(shard)
+            kw = {"out_shardings": out_sh} if out_sh is not None else {}
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=cell.donate, **kw)
+            lowered = jitted.lower(*abstract)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_devices=mesh.size,
+            memory={
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            cost={k: v for k, v in (cost or {}).items()
+                  if isinstance(v, (int, float)) and (
+                      "flops" in k or "bytes" in k or "utilization" not in k)},
+            collectives=collective_bytes(hlo),
+            # trip-count-aware per-device cost model (launch/hlo_cost.py):
+            # XLA's cost_analysis counts while bodies once; this corrects it
+            hlo=analyze_hlo(hlo),
+        )
+        # print the two analyses (assignment: the dry-run must print them)
+        print(f"[dryrun] {arch_id}/{shape_name}@{mesh_kind}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  memory_analysis: {rec['memory']}")
+        print(f"  cost_analysis: flops={rec['cost'].get('flops')} "
+              f"bytes accessed={rec['cost'].get('bytes accessed')}")
+        print(f"  collectives: {rec['collectives']}")
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch_id}/{shape_name}@{mesh_kind}: FAILED {rec['error'][:200]}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch_id, arch in ARCHS.items():
+        cfg = arch.full_config()
+        for shape_name in arch.cells(cfg):
+            out.append((arch_id, shape_name))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "tiny", "tiny_multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        if not args.arch:
+            raise SystemExit("--arch required (or --all)")
+        if args.shape:
+            cells = [(args.arch, args.shape)]
+        else:
+            cells = [(args.arch, s) for _, s in all_cells() if _ == args.arch]
+
+    ok = err = skip = 0
+    for arch_id, shape_name in cells:
+        rec = run_cell(arch_id, shape_name, args.mesh, args.out, force=args.force)
+        ok += rec["status"] == "ok"
+        err += rec["status"] == "error"
+        skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {err} failed")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

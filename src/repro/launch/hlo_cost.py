@@ -1,0 +1,341 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — while-loop
+bodies (lax.scan over layers / microbatches / attention chunks / ring steps)
+are not multiplied by their trip counts, which undercounts FLOPs by orders of
+magnitude on scan-structured production models.  The optimized HLO, however,
+annotates every while with ``backend_config={"known_trip_count":{"n":...}}``.
+
+This module parses the optimized HLO text, builds the computation call graph
+(while bodies x trip_count, fusions/calls/conditionals x 1), propagates
+execution multipliers from ENTRY, and accumulates per-device:
+
+  flops   2 * prod(result_dims) * prod(lhs_contracting_dims) per dot
+  bytes   HBM traffic: result + operand bytes per instruction, with
+          slice-awareness — a fusion whose body only dynamic-slices a
+          parameter is charged the slice, not the full buffer (the lax.scan
+          carried-cache pattern), and dynamic-update-slice is charged the
+          update, not the aliased buffer
+  collectives   result bytes by kind, trip-multiplied
+
+Fusion bodies contribute no separate bytes (internals stay in registers /
+VMEM); their dots still count as flops.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|s4|u64|u32|u16|u8|u4|"
+    r"pred|c64|c128)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"^([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_CALLED_RE = re.compile(
+    r"(?:body|to|calls)=%?([\w\.\-]+)|condition=%?([\w\.\-]+)|"
+    r"branch_computations=\{([^}]*)\}")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_PARAM_NO_RE = re.compile(r"parameter\((\d+)\)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota"}
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _type_elems_bytes(type_str: str) -> tuple[int, int]:
+    total_e, total_b = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _balanced_parens(s: str, start: int) -> str:
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1:i]
+    return s[start + 1:]
+
+
+def _split_type_op(rest: str):
+    """Split '<type> <op>(<operands>), <attrs>' robustly (tuple types may
+    contain '/*index=N*/' comments, so scan balanced parens)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        inner = _balanced_parens(rest, 0)
+        type_str = rest[: len(inner) + 2]
+        tail = rest[len(inner) + 2:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        tail = rest[sp + 1:].strip()
+    mo = _OPNAME_RE.match(tail)
+    if not mo:
+        return None
+    return type_str, mo.group(1), tail
+
+
+@dataclass
+class _Instr:
+    name: str
+    op: str
+    type_str: str
+    operands: list[str]
+    attrs: str
+    param_no: int = -1
+
+
+def _parse(text: str):
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = _COMP_HDR_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None or not line:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        split = _split_type_op(mi.group(2))
+        if split is None:
+            continue
+        type_str, op, tail = split
+        p0 = tail.find("(")
+        operands_str = _balanced_parens(tail, p0) if p0 >= 0 else ""
+        attrs = tail[p0 + len(operands_str) + 2:] if p0 >= 0 else tail
+        instr = _Instr(mi.group(1), op, type_str,
+                       _NAME_RE.findall(operands_str), attrs)
+        if op == "parameter":
+            pm = _PARAM_NO_RE.search(tail)
+            if pm:
+                instr.param_no = int(pm.group(1))
+        comps[cur].append(instr)
+    return comps, entry
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = _parse(text)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {"total": 0}}
+
+    shapes: dict[str, dict[str, str]] = {
+        c: {i.name: i.type_str for i in instrs} for c, instrs in comps.items()
+    }
+
+    # ---- fusion-body parameter traffic: sliced params charge slice results --
+    # param_traffic[comp][param_no] = bytes actually read for that parameter
+    # (None => full operand)
+    param_traffic: dict[str, dict[int, float | None]] = {}
+    for cname, instrs in comps.items():
+        params = {i.name: i.param_no for i in instrs if i.op == "parameter"}
+        if not params:
+            param_traffic[cname] = {}
+            continue
+        consumers: dict[str, list[_Instr]] = defaultdict(list)
+        for i in instrs:
+            for o in i.operands:
+                if o in params:
+                    consumers[o].append(i)
+        out: dict[int, float | None] = {}
+        for pname, pno in params.items():
+            cons = consumers.get(pname, [])
+            if not cons:
+                out[pno] = 0.0
+                continue
+            total = 0.0
+            sliced = True
+            for c in cons:
+                if c.op in _SLICE_OPS:
+                    total += _type_elems_bytes(c.type_str)[1]
+                elif c.op == "dynamic-update-slice" and c.operands and \
+                        c.operands[0] == pname:
+                    # aliased in-place update: traffic = the update tensor
+                    upd = c.operands[1] if len(c.operands) > 1 else None
+                    total += _type_elems_bytes(
+                        shapes[cname].get(upd, ""))[1] if upd else 0.0
+                else:
+                    sliced = False
+                    break
+            out[pno] = total if sliced else None
+        param_traffic[cname] = out
+
+    # ---- per-computation local costs + call edges ----------------------------
+    local: dict[str, tuple[float, float, dict]] = {}
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    fusion_bodies: set[str] = set()
+
+    for cname, instrs in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        coll: dict[str, float] = defaultdict(float)
+        smap = shapes[cname]
+        for ins in instrs:
+            res_e, res_b = _type_elems_bytes(ins.type_str)
+            trip = 1
+            tm = _TRIP_RE.search(ins.attrs)
+            if tm:
+                trip = int(tm.group(1))
+            called_fusion = None
+            for g1, g2, g3 in _CALLED_RE.findall(ins.attrs):
+                if g1:
+                    edges[cname].append((g1, trip if ins.op == "while" else 1))
+                    if ins.op == "fusion":
+                        fusion_bodies.add(g1)
+                        called_fusion = g1
+                if g2:
+                    edges[cname].append((g2, trip if ins.op == "while" else 1))
+                if g3:
+                    for b in g3.split(","):
+                        b = b.strip().lstrip("%")
+                        if b:
+                            edges[cname].append((b, 1))
+
+            if ins.op in ("dot", "dot-general"):
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+                cd = [int(x) for x in cm.group(1).split(",")] if cm and cm.group(1) else []
+                lhs_dims = _shape_dims(smap.get(ins.operands[0], "")) if ins.operands else []
+                k = 1
+                for d in cd:
+                    if d < len(lhs_dims):
+                        k *= lhs_dims[d]
+                flops += 2.0 * res_e * max(k, 1)
+            elif ins.op == "convolution":
+                km = re.search(r"window=\{[^}]*size=([0-9x]+)", ins.attrs)
+                ksz = 1
+                if km:
+                    for d in km.group(1).split("x"):
+                        ksz *= int(d)
+                flops += 2.0 * res_e * ksz
+            for ck in _COLLECTIVES:
+                if ins.op == ck or ins.op == ck + "-start":
+                    coll[ck] += res_b
+
+            if ins.op in _FREE_OPS:
+                continue
+            # ---- byte accounting with slice-awareness ------------------------
+            if ins.op in _SLICE_OPS:
+                bytes_ += 2.0 * res_b           # read slice + write result
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                ub = _type_elems_bytes(smap.get(upd, ""))[1] if upd else 0.0
+                bytes_ += 2.0 * ub              # read update + write window
+                continue
+            if ins.op == "fusion" and called_fusion is not None:
+                pt = param_traffic.get(called_fusion, {})
+                for k_op, oname in enumerate(ins.operands):
+                    t = pt.get(k_op, None)
+                    ob = _type_elems_bytes(smap.get(oname, ""))[1]
+                    bytes_ += min(t, ob) if t is not None else ob
+                bytes_ += res_b
+                continue
+            ob = sum(_type_elems_bytes(smap.get(o, ""))[1] for o in ins.operands)
+            bytes_ += res_b + ob
+        local[cname] = (flops, bytes_, dict(coll))
+
+    # ---- propagate multipliers from entry (HLO call graphs are DAGs) ---------
+    mult = {entry: 1}
+    for _ in range(64):
+        new = {entry: 1}
+        for cname, es in edges.items():
+            base = mult.get(cname, 0)
+            if base == 0:
+                continue
+            for callee, m in es:
+                new[callee] = new.get(callee, 0) + base * m
+        if new == mult:
+            break
+        mult = new
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    total_coll: dict[str, float] = defaultdict(float)
+    for cname, (fl, by, co) in local.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        total_flops += m * fl
+        if cname not in fusion_bodies:
+            total_bytes += m * by
+        for k, v in co.items():
+            total_coll[k] += m * v
+    total_coll["total"] = sum(v for k, v in total_coll.items() if k != "total")
+
+    # ---- CPU-backend f32-promotion artifact -----------------------------------
+    # XLA CPU has no native bf16 matmul: FloatNormalization inserts
+    # convert(bf16->f32) of weights/caches.  Hoisted copies (multiplier==1)
+    # persist for the whole step; per-iteration copies inside loop bodies
+    # are live one iteration at a time but still occupy peak temp.  Neither
+    # buffer exists on TPU; the roofline subtracts both for the
+    # TPU-corrected HBM fit.
+    promoted = 0.0          # hoisted whole-array copies (>= 32 MiB)
+    loop_promoted = 0.0     # max over loop bodies of that body's f32 copies
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0 or cname in fusion_bodies:
+            continue
+        smap = shapes[cname]
+        body_sum = 0.0
+        for ins in instrs:
+            if ins.op != "convert" or not ins.operands:
+                continue
+            src = smap.get(ins.operands[0], "")
+            if "bf16[" in src and ins.type_str.startswith("f32["):
+                b = _type_elems_bytes(ins.type_str)[1]
+                if m == 1 and b >= 32 * 1024 * 1024:
+                    promoted += b
+                elif m > 1 and b >= 8 * 1024 * 1024:
+                    body_sum += b
+        loop_promoted = max(loop_promoted, body_sum)
+
+    return {
+        "flops": float(total_flops),
+        "bytes": float(total_bytes),
+        "collectives": {k: int(v) for k, v in total_coll.items()},
+        "promoted_f32_bytes": float(promoted),
+        "promoted_f32_loop_bytes": float(loop_promoted),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device count is locked at first jax init, and only
+dryrun.py sets the 512-host-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_tiny_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data", "model"); multi-pod prepends a
+    2-way "pod" axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """Reduced mesh for CI-scale dry-run validation (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,76 @@
+"""Shared model-building blocks: initializers, norms, MLPs, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "rms_norm", "layer_norm", "mlp_init", "mlp_apply",
+    "cross_entropy", "bce_with_logits", "Split",
+]
+
+
+class Split:
+    """Deterministic key splitter: Split(key)() yields fresh keys."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, dims: list[int], *, dtype=jnp.float32) -> dict:
+    ks = Split(key)
+    return {
+        "w": [dense_init(ks(), a, b, dtype=dtype) for a, b in zip(dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,), dtype=dtype) for b in dims[1:]],
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, *, act=jax.nn.silu, final_act=False) -> jax.Array:
+    n = len(p["w"])
+    for k, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if k < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, mask=None) -> jax.Array:
+    """Token-level CE in fp32; logits [..., V], labels int [...]."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def bce_with_logits(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    lg = logits.astype(jnp.float32)
+    t = targets.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * t + jnp.log1p(jnp.exp(-jnp.abs(lg))))

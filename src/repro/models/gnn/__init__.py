@@ -1,0 +1,11 @@
+from .graphsage import SAGEConfig, init_sage, sage_forward, sage_loss
+from .graphcast import GraphCastConfig, init_graphcast, graphcast_forward, graphcast_loss
+from .dimenet import DimeNetConfig, init_dimenet, dimenet_forward, dimenet_loss
+from .equiformer_v2 import EqV2Config, init_eqv2, eqv2_forward, eqv2_loss
+
+__all__ = [
+    "SAGEConfig", "init_sage", "sage_forward", "sage_loss",
+    "GraphCastConfig", "init_graphcast", "graphcast_forward", "graphcast_loss",
+    "DimeNetConfig", "init_dimenet", "dimenet_forward", "dimenet_loss",
+    "EqV2Config", "init_eqv2", "eqv2_forward", "eqv2_loss",
+]

@@ -1,0 +1,160 @@
+"""DimeNet (Klicpera et al. 2020): directional message passing with radial
+Bessel and spherical basis over edge-pair (triplet) gathers.
+
+The triplet regime is the assignment's second GNN kernel class: messages live
+on *directed edges*; each interaction block gathers, for every triplet
+(k->j, j->i), the incoming message m_kj, modulates it by the spherical basis
+of the angle (k, j, i) through the bilinear layer, and scatter-sums back onto
+m_ji.  Triplet indices are precomputed host-side (static shapes); large
+graph shapes use an explicit per-edge triplet budget (DESIGN.md cap note).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...distributed.sharding import Sharder
+from ...graphs.segment import segment_sum
+from ..common import Split, dense_init, mlp_apply, mlp_init
+
+__all__ = ["DimeNetConfig", "init_dimenet", "dimenet_forward", "dimenet_loss",
+           "build_triplets"]
+
+
+@dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    d_out: int = 1           # per-graph energy
+    dtype: str = "float32"
+
+
+def build_triplets(src: np.ndarray, dst: np.ndarray, max_triplets: int):
+    """Host-side triplet enumeration: pairs (edge kj, edge ji) with dst(kj) ==
+    src(ji) and k != i.  Truncated/padded to ``max_triplets``."""
+    n_e = len(src)
+    by_dst: dict[int, list[int]] = {}
+    for e in range(n_e):
+        by_dst.setdefault(int(dst[e]), []).append(e)
+    t_in, t_out = [], []
+    for e_ji in range(n_e):
+        j = int(src[e_ji])
+        for e_kj in by_dst.get(j, ()):
+            if int(src[e_kj]) == int(dst[e_ji]):
+                continue  # k == i back-tracking excluded
+            t_in.append(e_kj)
+            t_out.append(e_ji)
+            if len(t_in) >= max_triplets:
+                break
+        if len(t_in) >= max_triplets:
+            break
+    pad = max_triplets - len(t_in)
+    mask = np.r_[np.ones(len(t_in), bool), np.zeros(pad, bool)]
+    t_in = np.r_[np.array(t_in, np.int64), np.zeros(pad, np.int64)]
+    t_out = np.r_[np.array(t_out, np.int64), np.zeros(pad, np.int64)]
+    return t_in, t_out, mask
+
+
+def _bessel_rbf(d, n_radial, cutoff):
+    """Radial Bessel basis sin(n pi d / c) / d."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    dd = jnp.maximum(d[..., None], 1e-6)
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * dd / cutoff) / dd
+
+
+def _angular_sbf(angle, d, n_spherical, n_radial, cutoff):
+    """Simplified spherical basis: cos(l * angle) x radial Bessel (structure-
+    faithful stand-in for the spherical Bessel/Legendre product)."""
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(angle[..., None] * (l + 1.0))             # [T, L]
+    rad = _bessel_rbf(d, n_radial, cutoff)                  # [T, R]
+    return (ang[..., :, None] * rad[..., None, :]).reshape(*angle.shape, -1)
+
+
+def init_dimenet(key, cfg: DimeNetConfig) -> dict:
+    ks = Split(key)
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    n_sbf = cfg.n_spherical * cfg.n_radial
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "w_sbf": dense_init(ks(), n_sbf, nb),
+            "w_bilinear": (jax.random.normal(ks(), (nb, d, d)) / d).astype(jnp.float32),
+            "edge_mlp": mlp_init(ks(), [d, d, d]),
+            "w_rbf": dense_init(ks(), cfg.n_radial, d),
+            "out_mlp": mlp_init(ks(), [d, d, d]),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed_edge": mlp_init(ks(), [2 * d + cfg.n_radial, d, d]),
+        "embed_node": dense_init(ks(), 1, d),   # atom type scalar embedding stub
+        "blocks": stacked,
+        "out": mlp_init(ks(), [d, d, cfg.d_out]),
+    }
+
+
+def dimenet_forward(params, batch, cfg: DimeNetConfig, shard: Sharder | None = None):
+    """batch: pos [N,3], z [N,1], edge_src/dst [E], t_in/t_out [T] triplet
+    edge indices, masks, graph_id [N] for batched molecules."""
+    shard = shard or Sharder(None)
+    pos = batch["pos"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch.get("edge_mask")
+    tmask = batch.get("triplet_mask")
+    t_in, t_out = batch["t_in"], batch["t_out"]
+    n = pos.shape[0]
+    n_e = src.shape[0]
+
+    vec = pos[dst] - pos[src]                                # [E, 3]
+    dist = jnp.linalg.norm(vec, axis=-1)
+    rbf = _bessel_rbf(dist, cfg.n_radial, cfg.cutoff)        # [E, R]
+
+    h = batch["z"].astype(jnp.float32) @ params["embed_node"]
+    m = mlp_apply(params["embed_edge"],
+                  jnp.concatenate([h[src], h[dst], rbf], axis=-1))  # [E, d]
+
+    # triplet angles: between edge (k->j) = t_in and (j->i) = t_out
+    v1 = -vec[t_in]
+    v2 = vec[t_out]
+    cosang = jnp.sum(v1 * v2, -1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-6)
+    angle = jnp.arccos(jnp.clip(cosang, -1 + 1e-6, 1 - 1e-6))
+    sbf = _angular_sbf(angle, dist[t_in], cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+
+    node_acc = jnp.zeros((n, cfg.d_hidden), jnp.float32)
+
+    def block(carry, bp):
+        m, node_acc = carry
+        m = shard.act(m, "flat", None)
+        # directional message: bilinear(sbf, m_kj) scattered onto ji
+        a = sbf @ bp["w_sbf"]                                # [T, nbil]
+        msg = jnp.einsum("tb,td,bdf->tf", a, m[t_in], bp["w_bilinear"])
+        if tmask is not None:
+            msg = jnp.where(tmask[:, None], msg, 0.0)
+        inter = segment_sum(msg, t_out, n_e)
+        m_new = m + mlp_apply(bp["edge_mlp"], m * (rbf @ bp["w_rbf"]) + inter)
+        # per-block output: edge -> node
+        contrib = segment_sum(mlp_apply(bp["out_mlp"], m_new), dst, n, emask)
+        return (m_new, node_acc + contrib), None
+
+    (m, node_acc), _ = jax.lax.scan(jax.checkpoint(block), (m, node_acc),
+                                    params["blocks"])
+    per_node = mlp_apply(params["out"], node_acc)            # [N, d_out]
+    if "graph_id" in batch:
+        n_graphs = batch["target"].shape[0]  # static (from the target's shape)
+        return segment_sum(per_node, batch["graph_id"], n_graphs,
+                           batch.get("node_mask"))
+    return per_node
+
+
+def dimenet_loss(params, batch, cfg: DimeNetConfig, shard: Sharder | None = None):
+    pred = dimenet_forward(params, batch, cfg, shard)
+    return jnp.mean((pred - batch["target"]).astype(jnp.float32) ** 2)

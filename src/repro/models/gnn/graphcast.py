@@ -1,0 +1,84 @@
+"""GraphCast-style encode-process-decode mesh GNN (Lam et al. 2022).
+
+The weather configuration (mesh_refinement=6, n_vars=227) becomes an
+encoder MLP -> 16 message-passing processor layers (edge MLP + node MLP with
+sum aggregation, residual) -> decoder MLP.  On the assigned generic graph
+shapes, grid==mesh (one homogeneous node set); the three-edge-set structure
+(g2m/m2m/m2g) of the weather deployment collapses to m2m, which is the
+processor that dominates its FLOPs anyway (DESIGN.md SSArch notes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.sharding import Sharder
+from ...graphs.segment import segment_sum
+from ..common import Split, mlp_apply, mlp_init
+
+__all__ = ["GraphCastConfig", "init_graphcast", "graphcast_forward", "graphcast_loss"]
+
+
+@dataclass(frozen=True)
+class GraphCastConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 512
+    d_in: int = 227          # n_vars
+    d_out: int = 227
+    d_edge_in: int = 4       # displacement features
+    mesh_refinement: int = 6
+    aggregator: str = "sum"
+    dtype: str = "float32"
+
+
+def init_graphcast(key, cfg: GraphCastConfig) -> dict:
+    ks = Split(key)
+    d = cfg.d_hidden
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "edge_mlp": mlp_init(ks(), [3 * d, d, d]),
+            "node_mlp": mlp_init(ks(), [2 * d, d, d]),
+        })
+    # stack for scan
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "enc_node": mlp_init(ks(), [cfg.d_in, d, d]),
+        "enc_edge": mlp_init(ks(), [cfg.d_edge_in, d, d]),
+        "proc": stacked,
+        "dec": mlp_init(ks(), [d, d, cfg.d_out]),
+    }
+
+
+def graphcast_forward(params, batch, cfg: GraphCastConfig, shard: Sharder | None = None):
+    shard = shard or Sharder(None)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    mask = batch.get("edge_mask")
+    n = batch["x"].shape[0]
+    h = mlp_apply(params["enc_node"], batch["x"])
+    e = mlp_apply(params["enc_edge"], batch["edge_feat"])
+
+    def layer(carry, lp):
+        h, e = carry
+        h = shard.act(h, "flat", None)
+        e = shard.act(e, "flat", None)
+        msg_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+        e_new = e + mlp_apply(lp["edge_mlp"], msg_in)
+        agg = segment_sum(e_new, dst, n, mask)
+        h_new = h + mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+        return (h_new, e_new), None
+
+    (h, e), _ = jax.lax.scan(jax.checkpoint(layer), (h, e), params["proc"])
+    return mlp_apply(params["dec"], h)
+
+
+def graphcast_loss(params, batch, cfg: GraphCastConfig, shard: Sharder | None = None):
+    pred = graphcast_forward(params, batch, cfg, shard)
+    err = (pred - batch["target"]).astype(jnp.float32) ** 2
+    if "label_mask" in batch:
+        m = batch["label_mask"][:, None]
+        return (err * m).sum() / jnp.maximum(m.sum() * err.shape[-1], 1.0)
+    return err.mean()

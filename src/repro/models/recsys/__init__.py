@@ -1,0 +1,10 @@
+from .embedding import embedding_bag, fused_field_lookup
+from .xdeepfm import XDeepFMConfig, init_xdeepfm, xdeepfm_forward
+
+__all__ = [
+    "embedding_bag",
+    "fused_field_lookup",
+    "XDeepFMConfig",
+    "init_xdeepfm",
+    "xdeepfm_forward",
+]

@@ -1,0 +1,17 @@
+from .config import LMConfig, MoEConfig, MLAConfig
+from .model import (
+    init_lm_params,
+    lm_forward,
+    lm_loss,
+    lm_param_specs,
+    prefill,
+    decode_step,
+    init_cache,
+    cache_specs,
+)
+
+__all__ = [
+    "LMConfig", "MoEConfig", "MLAConfig",
+    "init_lm_params", "lm_forward", "lm_loss", "lm_param_specs",
+    "prefill", "decode_step", "init_cache", "cache_specs",
+]

@@ -1,0 +1,209 @@
+"""Attention variants: GQA (chunked flash-style + decode) and MLA.
+
+Training/prefill use a chunked online-softmax formulation (lax.scan over KV
+blocks) so the [Sq, Skv] score matrix is never materialized — the XLA twin of
+FlashAttention, and the memory shape the dry-run's memory_analysis verifies.
+
+Decode uses a single-token path; MLA decode uses the *absorbed* form
+(DeepSeek-V2 inference math): q is folded through W_k_up so attention runs
+directly against the cached latent — the cache stays at kv_lora_rank +
+qk_rope_head_dim per token instead of n_heads * head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.sharding import Sharder
+from .rope import apply_rope, rope_freqs
+
+__all__ = ["gqa_attention_chunked", "gqa_decode_attention", "mla_attention", "mla_decode_attention"]
+
+_NEG = -1e30
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[B, S, Hkv, hd] -> [B, S, Hkv*groups, hd]"""
+    if groups == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d)).reshape(b, s, h * groups, d)
+
+
+def gqa_attention_chunked(
+    q: jnp.ndarray,            # [B, Sq, H, hd]
+    k: jnp.ndarray,            # [B, Skv, Hkv, hd]
+    v: jnp.ndarray,            # [B, Skv, Hkv, hd]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,         # global position of q[0] (chunked prefill)
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+    shard: Sharder | None = None,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]            # may differ from hd (MLA: v_head_dim)
+    groups = h // hkv
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, skv)
+    nq = -(-sq // cq)
+    nk = -(-skv // ck)
+    pq, pk = nq * cq - sq, nk * ck - skv
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nk, ck, h, hd)
+    vb = vp.reshape(b, nk, ck, h, hd_v)
+
+    def one_q_block(iq, qblk):
+        # online softmax over kv blocks
+        qpos = q_offset + iq * cq + jnp.arange(cq)
+
+        def body(carry, ik):
+            acc, m, l = carry
+            kblk = kb[:, ik]
+            vblk = vb[:, ik]
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ik * ck + jnp.arange(ck)
+            mask = (kpos[None, :] < skv)
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk, preferred_element_type=jnp.float32
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, cq, hd_v), jnp.float32)
+        m0 = jnp.full((b, h, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)  # [B, cq, H, hd]
+
+    qb = qp.reshape(b, nq, cq, h, hd)
+    if nq == 1:
+        out = one_q_block(0, qb[:, 0])[None]
+    else:
+        out = jax.lax.map(lambda t: one_q_block(t[0], t[1]),
+                          (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * cq, h, hd_v)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def gqa_decode_attention(
+    q: jnp.ndarray,            # [B, H, hd] single new token
+    k_cache: jnp.ndarray,      # [B, S, Hkv, hd]
+    v_cache: jnp.ndarray,      # [B, S, Hkv, hd]
+    cache_len: jnp.ndarray,    # [] or [B] valid prefix length
+    *,
+    shard: Sharder | None = None,
+) -> jnp.ndarray:
+    b, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    groups = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(b, hkv, groups, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < (cache_len[..., None] if cache_len.ndim else cache_len)
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG)
+    if shard is not None:
+        scores = shard.act(scores, "batch", None, None, "model")
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def mla_attention(
+    x: jnp.ndarray,            # [B, S, D]
+    p: dict,                   # layer attn params
+    cfg,                       # LMConfig with .mla set
+    positions: jnp.ndarray,    # [S]
+    *,
+    causal: bool = True,
+    shard: Sharder | None = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Prefill/training MLA.  Returns (out [B,S,D], (c_kv, k_rope) latents)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    # -- query low-rank path
+    q_lat = x @ p["wq_down"]                       # [B,S,q_rank]
+    q = q_lat @ p["wq_up"]                         # [B,S,H*(nope+rope)]
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    # -- latent kv + shared rope key
+    c_kv = x @ p["wkv_down"]                       # [B,S,kv_rank]
+    k_rope = (x @ p["wk_rope"]).reshape(b, s, 1, m.qk_rope_head_dim)
+    cos, sin = rope_freqs(m.qk_rope_head_dim, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    # -- expand latents (non-absorbed path for prefill/training)
+    k_nope = (c_kv @ p["wk_up"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_up"]).reshape(b, s, h, m.v_head_dim)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    out = gqa_attention_chunked(
+        qf, kf, v, causal=causal, chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+        shard=shard,
+    )
+    out = out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode_attention(
+    x: jnp.ndarray,            # [B, D] one token
+    p: dict,
+    cfg,
+    ckv_cache: jnp.ndarray,    # [B, S, kv_rank]
+    krope_cache: jnp.ndarray,  # [B, S, rope_dim]
+    cache_len: jnp.ndarray,
+    position: jnp.ndarray,     # []
+    *,
+    shard: Sharder | None = None,
+) -> jnp.ndarray:
+    """Absorbed-matrix MLA decode: attention directly against the latents."""
+    m = cfg.mla
+    b, d = x.shape
+    h = cfg.n_heads
+    q_lat = x @ p["wq_down"]
+    q = (q_lat @ p["wq_up"]).reshape(b, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    cos, sin = rope_freqs(m.qk_rope_head_dim, cfg.rope_theta, position[None])
+    q_rope = apply_rope(q_rope[:, None], cos, sin)[:, 0]  # [B,H,rope]
+    # absorb W_k_up into q:  q_abs[b,h,r] = q_nope . wk_up[r, h, :]
+    wk_up = p["wk_up"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, wk_up,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim, jnp.float32))
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_abs, ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                        krope_cache.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    pos = jnp.arange(ckv_cache.shape[1])
+    valid = pos[None, :] < (cache_len[..., None] if cache_len.ndim else cache_len)
+    scores = jnp.where(valid[:, None, :], scores, _NEG)
+    if shard is not None:
+        scores = shard.act(scores, "batch", None, "model")
+    pattn = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", pattn, ckv_cache.astype(jnp.float32))
+    wv_up = p["wv_up"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", out_lat, wv_up)   # absorb W_v_up on the way out
+    out = out.reshape(b, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out

@@ -1,0 +1,104 @@
+"""GShard-style top-k MoE layer (einsum dispatch, expert-parallel friendly).
+
+Dispatch/combine are dense einsums over a [tokens, experts, capacity] one-hot
+— the SPMD-native formulation (GShard/Switch/MaxText): with expert weights
+sharded over the 'model' mesh axis (16 experts <-> 16-way axis for both
+assigned MoE archs) XLA lowers dispatch to an all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.sharding import Sharder
+from ..common import Split, dense_init
+
+__all__ = ["init_moe", "moe_apply", "moe_param_specs"]
+
+
+def init_moe(key, d_model: int, moe, dtype=jnp.float32) -> dict:
+    ks = Split(key)
+    e, dff = moe.n_experts, moe.d_ff_expert
+    return {
+        "w_router": dense_init(ks(), d_model, e, dtype=jnp.float32),
+        "wi": (jax.random.normal(ks(), (e, d_model, dff)) / jnp.sqrt(d_model)).astype(dtype),
+        "wg": (jax.random.normal(ks(), (e, d_model, dff)) / jnp.sqrt(d_model)).astype(dtype),
+        "wo": (jax.random.normal(ks(), (e, dff, d_model)) / jnp.sqrt(dff)).astype(dtype),
+    }
+
+
+def moe_param_specs() -> dict:
+    return {
+        "w_router": (None, None),
+        "wi": ("model", None, None),
+        "wg": ("model", None, None),
+        "wo": ("model", None, None),
+    }
+
+
+def moe_apply(p: dict, x: jnp.ndarray, moe, *, shard: Sharder | None = None,
+              slab: int = 8192) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [T, D] -> (y [T, D], aux_loss scalar).  Token-dropping at capacity.
+
+    Tokens are processed in fixed slabs (lax.map): the one-hot dispatch
+    einsum costs O(T * E * C * D) with C ~ T/E, i.e. O(T^2 D / E) — on a 65k
+    token prefill that is ~100x the real expert FLOPs.  Slabbing bounds T per
+    dispatch (capacity enforced per slab, standard practice) and bounds the
+    [T, E, C] activation.  See EXPERIMENTS.md SSPerf iteration 2.
+    """
+    t_total, d = x.shape
+    if t_total > slab and t_total % slab == 0:
+        xs = x.reshape(t_total // slab, slab, d)
+        ys, auxs = jax.lax.map(
+            lambda xx: moe_apply(p, xx, moe, shard=shard, slab=slab), xs)
+        return ys.reshape(t_total, d), auxs.mean()
+
+    t, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    cap = int(moe.capacity_factor * k * t / e + 0.5)
+    cap = max(cap, 1)
+
+    logits = x.astype(jnp.float32) @ p["w_router"]          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)
+    ce_mask = jax.nn.one_hot(gate_idx[:, 0], e)
+    fe = ce_mask.mean(axis=0)
+    aux = e * jnp.sum(fe * me)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)   # [T, k, E]
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat          # [T*k, E]
+    pos = (pos_in_expert * flat).sum(-1).reshape(t, k)       # [T, k]
+    keep = pos < cap
+
+    # dispatch [T, E, C] / combine [T, E, C]
+    # one_hot(gate) [T,k,E] -> [T,k,E,1];  one_hot(pos) [T,k,C] -> [T,k,1,C]
+    expert_oh = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)          # [T,k,E]
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                             dtype=jnp.float32)[..., :cap]              # [T,k,C]
+    disp = jnp.einsum("tke,tkc->tec", expert_oh, slot_oh).astype(x.dtype)
+    comb = jnp.einsum("tke,tkc->tec", expert_oh * gate_vals[..., None], slot_oh)
+
+    xin = jnp.einsum("tec,td->ecd", disp, x)                 # [E, C, D]
+    # experts over 'model'; for large capacities also shard C over 'data'
+    # (2-D expert activations — memory/traffic scale with the full pod).
+    # Small-capacity decode steps skip the C sharding: the resharding
+    # collectives would dominate a [E, ~32, D] tensor (SSPerf iteration 3).
+    cap_axis = "data" if cap >= 1024 else None
+    if shard is not None:
+        xin = shard.act(xin, "model", cap_axis, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wi"])) * jnp.einsum(
+        "ecd,edf->ecf", xin, p["wg"]
+    )
+    if shard is not None:
+        h = shard.act(h, "model", cap_axis, None)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])           # [E, C, D]
+    if shard is not None:
+        out_e = shard.act(out_e, "model", cap_axis, None)
+    y = jnp.einsum("tec,ecd->td", comb.astype(x.dtype), out_e)
+    return y.astype(x.dtype), aux

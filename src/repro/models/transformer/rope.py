@@ -1,0 +1,21 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope"]
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables [*, head_dim/2] for integer positions [*]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, H, hd]; cos/sin [S, hd/2] (broadcast over batch/head)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(x.dtype)

@@ -1,0 +1,17 @@
+from .stream import SgrStream, dedupe_stream, stream_chunks
+from .generators import (
+    ba_bipartite_stream,
+    bipartite_pa_stream,
+    synthetic_rating_stream,
+    assign_timestamps,
+)
+
+__all__ = [
+    "SgrStream",
+    "dedupe_stream",
+    "stream_chunks",
+    "ba_bipartite_stream",
+    "bipartite_pa_stream",
+    "synthetic_rating_stream",
+    "assign_timestamps",
+]

@@ -1,0 +1,67 @@
+"""Real-dataset ingestion: KONECT-style edge lists (when present on disk).
+
+The paper's six datasets come from the KONECT repository, which is not
+bundled offline.  When a deployment has them, `load_konect` ingests the
+standard ``out.<name>`` TSV format (``i j [weight [timestamp]]`` with %
+comment headers) into an SgrStream; everything downstream (windowizer,
+estimators, benches) is format-agnostic.  `available_datasets` scans a
+directory so benches can auto-pick real data over synthetic.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .stream import SgrStream
+
+__all__ = ["load_konect", "load_edge_tsv", "available_datasets"]
+
+
+def load_edge_tsv(path: str, *, has_timestamps: bool = True,
+                  max_edges: int | None = None) -> SgrStream:
+    """Parse ``i j [w [t]]`` rows (KONECT out.* / generic TSV)."""
+    ii, jj, tt = [], [], []
+    with open(path) as f:
+        for line in f:
+            if line.startswith(("%", "#")) or not line.strip():
+                continue
+            parts = line.split()
+            i, j = int(parts[0]), int(parts[1])
+            t = float(parts[3]) if has_timestamps and len(parts) >= 4 else float(len(ii))
+            ii.append(i)
+            jj.append(j)
+            tt.append(t)
+            if max_edges is not None and len(ii) >= max_edges:
+                break
+    ii = np.asarray(ii, dtype=np.int64)
+    jj = np.asarray(jj, dtype=np.int64)
+    tau = np.asarray(tt, dtype=np.float64)
+    # KONECT ids are 1-based; compact both sides to dense 0-based ids
+    _, ii = np.unique(ii, return_inverse=True)
+    _, jj = np.unique(jj, return_inverse=True)
+    return SgrStream(tau, ii, jj)
+
+
+def load_konect(root: str, name: str, **kw) -> SgrStream:
+    """Load a KONECT dataset directory (<root>/<name>/out.<name>)."""
+    path = os.path.join(root, name, f"out.{name}")
+    if not os.path.exists(path):
+        candidates = [p for p in os.listdir(os.path.join(root, name))
+                      if p.startswith("out.")] if os.path.isdir(
+                          os.path.join(root, name)) else []
+        if not candidates:
+            raise FileNotFoundError(path)
+        path = os.path.join(root, name, candidates[0])
+    return load_edge_tsv(path, **kw)
+
+
+def available_datasets(root: str) -> list[str]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in sorted(os.listdir(root)):
+        full = os.path.join(root, d)
+        if os.path.isdir(full) and any(p.startswith("out.") for p in os.listdir(full)):
+            out.append(d)
+    return out

@@ -1,0 +1,10 @@
+from .optimizer import AdamWState, adamw_init, adamw_update
+from .train_state import TrainState
+from .loop import make_train_step
+from .checkpoint import save_checkpoint, restore_checkpoint, AsyncCheckpointer
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "TrainState",
+    "make_train_step", "save_checkpoint", "restore_checkpoint",
+    "AsyncCheckpointer",
+]

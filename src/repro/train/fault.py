@@ -1,0 +1,66 @@
+"""Failure / straggler / elasticity policies for multi-pod deployments.
+
+This module encodes the *control-plane* half of fault tolerance; the
+data-plane half (atomic + async + resharding checkpoints) lives in
+checkpoint.py.  On real pods these hooks bind to the cluster manager
+(GKE/Borg preemption signals, jax.distributed heartbeats); in this repo they
+are exercised by tests that simulate failures.
+
+Policies
+--------
+- Restart-from-checkpoint: any hard failure (chip down, pod preempted)
+  restarts the job; restore_checkpoint re-places state on the surviving
+  mesh (possibly fewer data-parallel replicas: elastic_degrade below).
+- Elastic resize: data-parallel degree changes between restarts; the batch
+  schedule is *re-planned* (per-replica microbatch count recomputed so the
+  global batch stays fixed) — recompute_plan().
+- Straggler mitigation: sGrapp's adaptive windows are themselves a
+  load-balancing mechanism (equal-unique-timestamp windows -> equal expected
+  work); on the training side we expose bounded-staleness collectives knobs
+  (timeout + skip-and-rescale) as a policy object the launcher applies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["ElasticPlan", "recompute_plan", "StragglerPolicy"]
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    global_batch: int
+    n_data_shards: int
+    microbatch_size: int
+    n_microbatches: int
+
+    @property
+    def per_shard_batch(self) -> int:
+        return self.global_batch // self.n_data_shards
+
+
+def recompute_plan(global_batch: int, n_data_shards: int,
+                   max_per_device_batch: int) -> ElasticPlan:
+    """Re-plan microbatching after an elastic resize.
+
+    Keeps the *global* batch (and therefore the optimization trajectory)
+    fixed while the number of data shards changes; raises if the global
+    batch cannot be evenly re-tiled (the launcher then pads or rejects).
+    """
+    if global_batch % n_data_shards:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by {n_data_shards} shards")
+    per_shard = global_batch // n_data_shards
+    micro = min(per_shard, max_per_device_batch)
+    while per_shard % micro:
+        micro -= 1
+    return ElasticPlan(global_batch, n_data_shards, micro, per_shard // micro)
+
+
+@dataclass(frozen=True)
+class StragglerPolicy:
+    """Knobs the launcher maps onto runtime flags / collective configs."""
+    collective_timeout_s: float = 300.0   # abort-and-restart past this
+    checkpoint_every_steps: int = 100
+    checkpoint_every_windows: int = 50    # streaming jobs: window-granular
+    spare_capacity_frac: float = 0.05     # hot spares per pod for fast swap
+    skip_slow_replica_after_s: float = 60.0

@@ -1,0 +1,63 @@
+"""Train-step factory with gradient-accumulation microbatching.
+
+``make_train_step(loss_fn, n_microbatches)`` returns a jit-able
+``step(state, batch) -> (state, metrics)``.  The global batch is reshaped to
+[n_micro, micro, ...] and scanned; gradients accumulate in fp32.  Microbatch
+count is the main activation-memory knob for the train_4k shapes (DESIGN.md
+distribution notes) and is recomputed on elastic resize (fault.py).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import adamw_update
+from .train_state import TrainState
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(
+    loss_fn: Callable,            # loss_fn(params, microbatch) -> scalar
+    *,
+    n_microbatches: int = 1,
+    lr: float = 3e-4,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    def split_batch(batch):
+        def rs(x):
+            mb = x.shape[0] // n_microbatches
+            return x.reshape(n_microbatches, mb, *x.shape[1:])
+        return jax.tree.map(rs, batch)
+
+    def step(state: TrainState, batch):
+        params = state.params
+
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = split_batch(batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state.opt, params, lr=lr, weight_decay=weight_decay,
+            clip_norm=clip_norm)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "step": new_opt.step}
+        return TrainState(new_params, new_opt, state.rng), metrics
+
+    return step

@@ -1,0 +1,16 @@
+"""Train state container."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from .optimizer import AdamWState
+
+__all__ = ["TrainState"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    rng: jax.Array

@@ -1,0 +1,135 @@
+"""Exact-counting tier cross-validation: numpy oracle vs jnp dense vs tiled."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.butterfly import (
+    build_biadjacency,
+    butterfly_support_dense,
+    butterfly_support_np,
+    count_butterflies_dense,
+    count_butterflies_from_edges,
+    count_butterflies_np,
+    count_butterflies_tiled,
+    count_caterpillars_np,
+    enumerate_butterflies_np,
+)
+
+
+def random_bipartite(n_i, n_j, m, seed=0, dup_frac=0.0):
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, n_i, m), rng.integers(0, n_j, m)], axis=1)
+    if dup_frac > 0:
+        k = int(m * dup_frac)
+        e = np.concatenate([e, e[rng.integers(0, m, k)]], axis=0)
+        e = e[rng.permutation(e.shape[0])]
+    return e
+
+
+def dense_from_edges(e, n_i, n_j):
+    a = np.zeros((n_i, n_j), dtype=np.float32)
+    a[e[:, 0], e[:, 1]] = 1.0
+    return a
+
+
+# -- closed-form sanity -------------------------------------------------------
+
+def test_single_butterfly():
+    e = np.array([[0, 0], [0, 1], [1, 0], [1, 1]])
+    assert count_butterflies_np(e) == 1
+    assert int(count_butterflies_dense(jnp.array(dense_from_edges(e, 2, 2)))) == 1
+
+
+def test_complete_bipartite():
+    # K_{a,b} has C(a,2)*C(b,2) butterflies
+    for a, b in [(2, 2), (3, 4), (5, 3), (6, 6)]:
+        e = np.array([(i, j) for i in range(a) for j in range(b)])
+        want = (a * (a - 1) // 2) * (b * (b - 1) // 2)
+        assert count_butterflies_np(e) == want
+        got = int(count_butterflies_dense(jnp.array(dense_from_edges(e, a, b))))
+        assert got == want
+
+
+def test_no_butterfly_in_tree():
+    # star graphs / paths have zero butterflies
+    e = np.array([(0, j) for j in range(10)])
+    assert count_butterflies_np(e) == 0
+    e2 = np.array([(i, i) for i in range(10)] + [(i, i + 1) for i in range(9)])
+    assert count_butterflies_np(e2) == 0
+
+
+def test_duplicates_ignored():
+    e = np.array([[0, 0], [0, 1], [1, 0], [1, 1], [0, 0], [1, 1], [0, 1]])
+    assert count_butterflies_np(e) == 1
+
+
+# -- tier equivalence ---------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("n_i,n_j,m", [(8, 8, 30), (20, 13, 120), (40, 70, 500), (128, 64, 2000)])
+def test_dense_matches_oracle(seed, n_i, n_j, m):
+    e = random_bipartite(n_i, n_j, m, seed, dup_frac=0.2)
+    want = count_butterflies_np(e)
+    adj = jnp.array(dense_from_edges(e, n_i, n_j))
+    assert int(count_butterflies_dense(adj)) == want
+
+
+@pytest.mark.parametrize("tile", [16, 64, 512])
+@pytest.mark.parametrize("n_i,n_j,m", [(50, 33, 400), (130, 57, 1200)])
+def test_tiled_matches_dense(tile, n_i, n_j, m):
+    e = random_bipartite(n_i, n_j, m, seed=3)
+    adj = jnp.array(dense_from_edges(e, n_i, n_j))
+    assert int(count_butterflies_tiled(adj, tile=tile)) == int(count_butterflies_dense(adj))
+
+
+def test_from_edges_padded_path():
+    n_i, n_j, m, cap = 30, 22, 150, 256
+    e = random_bipartite(n_i, n_j, m, seed=7, dup_frac=0.3)
+    want = count_butterflies_np(e)
+    me = e.shape[0]
+    ei = np.zeros(cap, np.int32); ej = np.zeros(cap, np.int32); v = np.zeros(cap, bool)
+    ei[:me], ej[:me], v[:me] = e[:, 0], e[:, 1], True
+    got = count_butterflies_from_edges(jnp.array(ei), jnp.array(ej), jnp.array(v), n_i, n_j)
+    assert int(got) == want
+
+
+def test_biadjacency_dedup_and_padding():
+    ei = jnp.array([0, 0, 1, 5], dtype=jnp.int32)
+    ej = jnp.array([1, 1, 2, 5], dtype=jnp.int32)
+    v = jnp.array([True, True, True, False])
+    adj = np.asarray(build_biadjacency(ei, ej, v, 4, 4))
+    assert adj[0, 1] == 1.0 and adj.sum() == 2.0  # dup collapsed, padding dropped
+
+
+# -- support + enumeration ----------------------------------------------------
+
+def test_support_consistency():
+    n_i, n_j = 25, 18
+    e = random_bipartite(n_i, n_j, 220, seed=11)
+    sup_i, sup_j = butterfly_support_np(e, n_i, n_j)
+    b = count_butterflies_np(e)
+    # every butterfly touches exactly 2 i-vertices and 2 j-vertices
+    assert sup_i.sum() == 2 * b
+    assert sup_j.sum() == 2 * b
+    adj = jnp.array(dense_from_edges(e, n_i, n_j))
+    di, dj = butterfly_support_dense(adj)
+    np.testing.assert_array_equal(np.asarray(di, dtype=np.int64), sup_i)
+    np.testing.assert_array_equal(np.asarray(dj, dtype=np.int64), sup_j)
+
+
+def test_enumeration_count_matches():
+    e = random_bipartite(15, 12, 90, seed=5)
+    quads = enumerate_butterflies_np(e)
+    assert quads.shape[0] == count_butterflies_np(e)
+    if quads.shape[0]:
+        assert np.all(quads[:, 0] < quads[:, 1])
+        assert np.all(quads[:, 2] < quads[:, 3])
+
+
+def test_caterpillars_nonnegative_and_bound():
+    e = random_bipartite(20, 20, 100, seed=2)
+    cats = count_caterpillars_np(e)
+    b = count_butterflies_np(e)
+    assert cats >= 0
+    # each butterfly contains 4 caterpillars (three-paths)
+    assert 4 * b <= cats or b == 0

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on the counting/windowing invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.butterfly import (
+    count_butterflies_dense,
+    count_butterflies_np,
+    count_butterflies_tiled,
+)
+from repro.core.sgrapp import sgrapp_estimate
+from repro.core.windows import window_bounds, window_ids
+from repro.kernels.butterfly import butterfly_count_pallas
+
+
+@st.composite
+def bipartite_edges(draw, max_n=24, max_m=120):
+    n_i = draw(st.integers(1, max_n))
+    n_j = draw(st.integers(1, max_n))
+    m = draw(st.integers(0, max_m))
+    ii = draw(st.lists(st.integers(0, n_i - 1), min_size=m, max_size=m))
+    jj = draw(st.lists(st.integers(0, n_j - 1), min_size=m, max_size=m))
+    return n_i, n_j, np.stack([np.array(ii, np.int64), np.array(jj, np.int64)], axis=1) \
+        if m else (np.zeros((0, 2), np.int64))
+
+
+def to_dense(e, n_i, n_j):
+    a = np.zeros((n_i, n_j), dtype=np.float32)
+    if e.shape[0]:
+        a[e[:, 0], e[:, 1]] = 1.0
+    return a
+
+
+@settings(max_examples=40, deadline=None)
+@given(bipartite_edges())
+def test_all_counting_tiers_agree(args):
+    if isinstance(args, np.ndarray):  # degenerate m=0 draw
+        return
+    n_i, n_j, e = args
+    want = count_butterflies_np(e)
+    adj = jnp.asarray(to_dense(e, n_i, n_j))
+    assert int(count_butterflies_dense(adj)) == want
+    assert int(count_butterflies_tiled(adj, tile=8)) == want
+    got = float(butterfly_count_pallas(adj, block_i=8, block_k=8, interpret=True))
+    assert int(round(got)) == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(bipartite_edges())
+def test_count_invariant_under_relabeling(args):
+    if isinstance(args, np.ndarray):
+        return
+    n_i, n_j, e = args
+    if e.shape[0] == 0:
+        return
+    rng = np.random.default_rng(0)
+    pi = rng.permutation(n_i)
+    pj = rng.permutation(n_j)
+    e2 = np.stack([pi[e[:, 0]], pj[e[:, 1]]], axis=1)
+    assert count_butterflies_np(e) == count_butterflies_np(e2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bipartite_edges(), st.integers(0, 30))
+def test_count_monotone_in_edges(args, extra):
+    """Adding edges never decreases the butterfly count."""
+    if isinstance(args, np.ndarray):
+        return
+    n_i, n_j, e = args
+    if e.shape[0] == 0:
+        return
+    k = min(extra, e.shape[0])
+    assert count_butterflies_np(e[: e.shape[0] - k]) <= count_butterflies_np(e)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 50), min_size=1, max_size=200),
+    st.integers(1, 10),
+)
+def test_window_ids_properties(taus, nt_w):
+    tau = np.sort(np.array(taus, dtype=np.float64))
+    wid = window_ids(tau, nt_w)
+    # non-decreasing window ids, each window has <= nt_w unique timestamps,
+    # and same timestamp never splits across windows
+    assert np.all(np.diff(wid) >= 0)
+    for k in np.unique(wid):
+        assert np.unique(tau[wid == k]).shape[0] <= nt_w
+    for t in np.unique(tau):
+        assert np.unique(wid[tau == t]).shape[0] == 1
+    full = window_bounds(tau, nt_w, drop_partial=True)
+    for s, e in full:
+        assert np.unique(tau[s:e]).shape[0] == nt_w
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(0, 1e5), min_size=1, max_size=20),
+    st.floats(0.1, 2.0),
+)
+def test_sgrapp_estimator_monotone(window_counts, alpha):
+    """B-hat is non-decreasing in k (counts and the power term are >= 0)."""
+    wc = np.abs(np.array(window_counts, dtype=np.float64))
+    ce = np.cumsum(np.ones_like(wc) * 7.0)
+    est = np.asarray(sgrapp_estimate(wc, ce, alpha))
+    assert np.all(np.diff(est) >= -1e-6 * np.abs(est[:-1]))

@@ -1,0 +1,156 @@
+"""Unit tests: segment ops, EmbeddingBag, CSR, fanout sampler, collectives."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import build_csr, build_csr_padded
+from repro.graphs.sampler import fanout_sample
+from repro.graphs.segment import (
+    degrees, segment_max, segment_mean, segment_softmax, segment_sum,
+)
+from repro.models.recsys.embedding import embedding_bag, fused_field_lookup
+from repro.distributed.collectives import compress_grads, decompress_grads
+
+
+# -- segment ops ------------------------------------------------------------------
+
+def test_segment_sum_mask_routes_padding():
+    data = jnp.array([[1.0], [2.0], [4.0], [8.0]])
+    dst = jnp.array([0, 0, 1, 1])
+    mask = jnp.array([True, True, True, False])
+    out = segment_sum(data, dst, 2, mask)
+    np.testing.assert_allclose(np.asarray(out), [[3.0], [4.0]])
+
+
+def test_segment_mean_and_max():
+    data = jnp.array([1.0, 3.0, 10.0, -2.0])
+    dst = jnp.array([0, 0, 1, 1])
+    np.testing.assert_allclose(np.asarray(segment_mean(data, dst, 3)), [2.0, 4.0, 0.0])
+    got = np.asarray(segment_max(data, dst, 2))
+    np.testing.assert_allclose(got, [3.0, 10.0])
+
+
+def test_segment_softmax_normalizes_per_node():
+    logits = jnp.array([0.0, 1.0, 2.0, 5.0])
+    dst = jnp.array([0, 0, 0, 1])
+    a = np.asarray(segment_softmax(logits, dst, 2))
+    assert a[:3].sum() == pytest.approx(1.0)
+    assert a[3] == pytest.approx(1.0)
+
+
+def test_segment_softmax_multihead_mask():
+    logits = jnp.ones((4, 3))
+    dst = jnp.array([0, 0, 1, 1])
+    mask = jnp.array([True, False, True, True])
+    a = np.asarray(segment_softmax(logits, dst, 2, mask))
+    np.testing.assert_allclose(a[0], 1.0)       # only edge into node 0
+    np.testing.assert_allclose(a[1], 0.0)       # masked out
+    np.testing.assert_allclose(a[2] + a[3], 1.0)
+
+
+def test_degrees():
+    d = np.asarray(degrees(jnp.array([0, 0, 2]), 3))
+    np.testing.assert_allclose(d, [2.0, 0.0, 1.0])
+
+
+# -- embedding bag -----------------------------------------------------------------
+
+def test_embedding_bag_matches_manual():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    indices = jnp.array([3, 4, 5, 7, 9, 11])
+    offsets = jnp.array([0, 2, 5])  # bags: [3,4], [5,7,9], [11]
+    for mode in ("sum", "mean", "max"):
+        out = np.asarray(embedding_bag(table, indices, offsets, mode=mode))
+        t = np.asarray(table)
+        want = {
+            "sum": [t[[3, 4]].sum(0), t[[5, 7, 9]].sum(0), t[[11]].sum(0)],
+            "mean": [t[[3, 4]].mean(0), t[[5, 7, 9]].mean(0), t[[11]].mean(0)],
+            "max": [t[[3, 4]].max(0), t[[5, 7, 9]].max(0), t[[11]].max(0)],
+        }[mode]
+        np.testing.assert_allclose(out, np.stack(want), rtol=1e-6)
+
+
+def test_embedding_bag_padded_and_weighted():
+    table = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    indices = jnp.array([1, 2, 0, 0])       # last two are padding
+    offsets = jnp.array([0, 2])
+    out = np.asarray(embedding_bag(table, indices, offsets, total_len=2))
+    np.testing.assert_allclose(out[0], np.asarray(table)[[1, 2]].sum(0))
+    np.testing.assert_allclose(out[1], 0.0)
+    w = jnp.array([2.0, 0.5, 0.0, 0.0])
+    outw = np.asarray(embedding_bag(table, indices, offsets, total_len=2,
+                                    per_sample_weights=w))
+    np.testing.assert_allclose(
+        outw[0], 2.0 * np.asarray(table)[1] + 0.5 * np.asarray(table)[2])
+
+
+def test_fused_field_lookup():
+    table = jnp.asarray(np.arange(12, dtype=np.float32).reshape(6, 2))
+    offs = jnp.array([0, 3], dtype=jnp.int32)   # field 0 rows 0-2, field 1 rows 3-5
+    ids = jnp.array([[2, 1], [0, 2]], dtype=jnp.int32)
+    out = np.asarray(fused_field_lookup(table, offs, ids))
+    np.testing.assert_allclose(out[0, 0], np.asarray(table)[2])
+    np.testing.assert_allclose(out[0, 1], np.asarray(table)[4])
+    np.testing.assert_allclose(out[1, 1], np.asarray(table)[5])
+
+
+# -- CSR + sampler ------------------------------------------------------------------
+
+def test_csr_roundtrip():
+    src = np.array([0, 0, 1, 2, 2, 2])
+    dst = np.array([1, 2, 0, 0, 1, 2])
+    indptr, indices = build_csr(src, dst, 3)
+    assert list(indptr) == [0, 2, 3, 6]
+    assert sorted(indices[0:2]) == [1, 2]
+    table, mask = build_csr_padded(src, dst, 3, max_degree=2)
+    assert mask.sum() == 5  # node 2's degree-3 truncated to 2
+    assert table.shape == (3, 2)
+
+
+def test_fanout_sampler_shapes_and_membership():
+    rng = np.random.default_rng(0)
+    n, e = 100, 600
+    src, dst = rng.integers(0, n, e), rng.integers(0, n, e)
+    indptr, indices = build_csr(src, dst, n)
+    seeds = np.arange(8)
+    blocks = fanout_sample(indptr, indices, seeds, [5, 3], seed=1)
+    assert blocks.nbr[0].shape == (8, 5)
+    assert blocks.nbr[1].shape == (40, 3)
+    # sampled neighbors are true neighbors
+    for r, v in enumerate(seeds):
+        nbrs = set(indices[indptr[v]:indptr[v + 1]])
+        for j in range(5):
+            if blocks.nbr_mask[0][r, j]:
+                assert blocks.nbr[0][r, j] in nbrs
+
+
+# -- gradient compression -------------------------------------------------------------
+
+@pytest.mark.parametrize("method", [None, "bf16", "int8"])
+def test_grad_compression_roundtrip(method):
+    g = {"w": jnp.asarray(np.linspace(-3, 3, 64, dtype=np.float32))}
+    q, scales = compress_grads(g, method)
+    back = decompress_grads(q, scales, method)
+    rtol = {None: 0, "bf16": 1e-2, "int8": 5e-2}[method]
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(g["w"]),
+                               rtol=rtol, atol=0.06)
+
+
+# -- dataset ingestion ---------------------------------------------------------------
+
+def test_load_edge_tsv(tmp_path):
+    from repro.streams.datasets import available_datasets, load_edge_tsv, load_konect
+    p = tmp_path / "epi" ; p.mkdir()
+    f = p / "out.epi"
+    f.write_text("% bip unweighted\n"
+                 "1 1 1 100\n2 1 1 50\n1 2 1 150\n3 2 1 120\n")
+    s = load_edge_tsv(str(f))
+    assert len(s) == 4
+    # sorted by timestamp, ids compacted to 0-based
+    assert list(s.tau) == [50.0, 100.0, 120.0, 150.0]
+    assert s.edge_i.max() <= 2 and s.edge_j.max() <= 1
+    assert available_datasets(str(tmp_path)) == ["epi"]
+    s2 = load_konect(str(tmp_path), "epi")
+    assert len(s2) == 4

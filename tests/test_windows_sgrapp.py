@@ -1,0 +1,174 @@
+"""Adaptive windows + sGrapp/sGrapp-x estimator behaviour (paper SS4)."""
+import numpy as np
+import pytest
+
+from repro.core.butterfly import count_butterflies_np
+from repro.core.sgrapp import (
+    mape,
+    run_sgrapp,
+    run_sgrapp_x,
+    sgrapp_estimate,
+    window_exact_counts,
+)
+from repro.core.windows import adaptive_window_stream, window_bounds, window_ids, windowize
+from repro.streams import bipartite_pa_stream, synthetic_rating_stream
+
+
+def make_stream(n=3000, seed=0, temporal="uniform", n_unique=600):
+    return synthetic_rating_stream(
+        n_users=120, n_items=90, n_edges=n, seed=seed,
+        temporal=temporal, n_unique=n_unique,
+    )
+
+
+def make_pa_stream(n=6000, seed=0, temporal="uniform", n_unique=1500):
+    return bipartite_pa_stream(n, seed=seed, temporal=temporal, n_unique=n_unique)
+
+
+def ground_truth(stream, bounds):
+    """Cumulative exact count at the end of each window (growing graph)."""
+    return np.array(
+        [count_butterflies_np(stream.edges()[: int(e)]) for _, e in bounds],
+        dtype=np.float64,
+    )
+
+
+# -- windows ------------------------------------------------------------------
+
+def test_window_ids_unique_ts_quota():
+    tau = np.array([0, 0, 1, 1, 1, 2, 3, 3, 4, 5, 5, 6])
+    wid = window_ids(tau, 2)
+    # unique ts: 0,1 -> w0; 2,3 -> w1; 4,5 -> w2; 6 -> w3 (partial)
+    assert list(wid) == [0, 0, 0, 0, 0, 1, 1, 1, 2, 2, 2, 3]
+    b = window_bounds(tau, 2, drop_partial=True)
+    assert b.shape[0] == 3  # partial w3 dropped
+
+
+def test_window_bounds_cover_disjoint():
+    s = make_stream()
+    b = window_bounds(s.tau, 40)
+    assert np.all(b[1:, 0] == b[:-1, 1])  # tumbling: disjoint + contiguous
+    for st, e in b:
+        assert np.unique(s.tau[st:e]).shape[0] == 40  # exact quota per window
+
+
+def test_windowize_shapes_and_relabel():
+    s = make_stream()
+    wb = windowize(s.tau, s.edge_i, s.edge_j, 50)
+    assert wb.edge_i.shape == wb.edge_j.shape == wb.valid.shape
+    assert wb.capacity % 128 == 0
+    assert np.all(wb.n_edges <= wb.capacity)
+    # compact relabeling: ids within [0, n_per_window)
+    for k in range(wb.n_windows):
+        m = wb.valid[k]
+        if m.any():
+            assert wb.edge_i[k][m].max() < wb.n_i_per_window[k]
+            assert wb.edge_j[k][m].max() < wb.n_j_per_window[k]
+    assert np.all(np.diff(wb.cum_sgrs) > 0)
+
+
+def test_window_exact_counts_match_oracle():
+    s = make_stream(n=2000)
+    wb = windowize(s.tau, s.edge_i, s.edge_j, 60)
+    counts = np.asarray(window_exact_counts(wb))
+    b = window_bounds(s.tau, 60)
+    for k, (st, e) in enumerate(b):
+        want = count_butterflies_np(s.edges()[st:e])
+        assert int(counts[k]) == want, f"window {k}"
+
+
+def test_online_windowizer_matches_batch():
+    s = make_stream(n=1500)
+    recs = zip(s.tau.tolist(), s.edge_i.tolist(), s.edge_j.tolist())
+    online = list(adaptive_window_stream(recs, 30))
+    batch = window_bounds(s.tau, 30)
+    assert len(online) == batch.shape[0]
+    for (tau_w, ei_w, ej_w), (st, e) in zip(online, batch):
+        np.testing.assert_array_equal(ei_w, s.edge_i[st:e])
+        np.testing.assert_array_equal(ej_w, s.edge_j[st:e])
+
+
+# -- sGrapp -------------------------------------------------------------------
+
+def test_sgrapp_closed_form():
+    wc = np.array([5.0, 7.0, 1.0])
+    ce = np.array([10.0, 25.0, 31.0])
+    est = np.asarray(sgrapp_estimate(wc, ce, 1.5))
+    want0 = 5.0
+    want1 = want0 + 7.0 + 25.0**1.5
+    want2 = want1 + 1.0 + 31.0**1.5
+    np.testing.assert_allclose(est, [want0, want1, want2], rtol=1e-6)
+
+
+def test_sgrapp_first_window_no_interwindow_term():
+    wc = np.array([3.0]); ce = np.array([50.0])
+    assert float(sgrapp_estimate(wc, ce, 2.0)[0]) == 3.0
+
+
+def test_sgrapp_reasonable_accuracy_uniform():
+    """Paper SS5.1: on hub-dominated streams with uniform temporal
+    distribution there is an (alpha, nt_w) with MAPE well under 0.15."""
+    s = make_pa_stream(n=6000, seed=0)
+    wb = windowize(s.tau, s.edge_i, s.edge_j, 50)
+    truths = ground_truth(s, window_bounds(s.tau, 50))
+    best = min(
+        run_sgrapp(wb, a, truths=truths).mape()
+        for a in [0.84, 0.88, 0.9, 0.92, 0.96, 1.0]
+    )
+    assert best < 0.15, f"no alpha achieves paper-regime MAPE, best={best}"
+
+
+def test_sgrapp_x_adapts_alpha_direction():
+    s = make_stream(n=3000, seed=2)
+    wb = windowize(s.tau, s.edge_i, s.edge_j, 60)
+    truths = ground_truth(s, window_bounds(s.tau, 60))
+    # start with an exponent that wildly overestimates -> alpha must decrease
+    res_hi = run_sgrapp_x(wb, 1.8, truths, x_percent=100)
+    assert res_hi.alpha_final < 1.8
+    # and a tiny exponent underestimates -> alpha must increase
+    res_lo = run_sgrapp_x(wb, 0.1, truths, x_percent=100)
+    assert res_lo.alpha_final > 0.1
+
+
+def test_sgrapp_x_improves_or_matches_sgrapp():
+    s = make_stream(n=4000, temporal="bursty", seed=3)
+    wb = windowize(s.tau, s.edge_i, s.edge_j, 60)
+    truths = ground_truth(s, window_bounds(s.tau, 60))
+    base = run_sgrapp(wb, 1.3, truths=truths).mape()
+    opt = run_sgrapp_x(wb, 1.3, truths, x_percent=100).mape()
+    assert opt <= base * 1.05  # never meaningfully worse with full supervision
+
+
+def test_sgrapp_x_alpha_frozen_without_truth():
+    s = make_stream(n=2000, seed=4)
+    wb = windowize(s.tau, s.edge_i, s.edge_j, 60)
+    truths = ground_truth(s, window_bounds(s.tau, 60))
+    res = run_sgrapp_x(wb, 1.0, truths, x_percent=0.0)
+    # no supervision -> behaves exactly like sGrapp
+    base = run_sgrapp(wb, 1.0)
+    np.testing.assert_allclose(res.estimates, base.estimates, rtol=1e-6)
+    assert res.alpha_final == pytest.approx(1.0)
+
+
+# -- paper invariants (Lemma 4.3) ---------------------------------------------
+
+def test_lemma_4_3_interwindow_bounds():
+    """|E_Wk| - 2|V_i,Wk| <= B_interW <= C(|V_i,Wk|, 2) on the exact counts."""
+    s = make_stream(n=2500, seed=5)
+    nt_w = 70
+    wb = windowize(s.tau, s.edge_i, s.edge_j, nt_w)
+    b = window_bounds(s.tau, nt_w)
+    cum_truth = ground_truth(s, b)
+    wc = np.asarray(window_exact_counts(wb), dtype=np.float64)
+    cum_in_window = np.cumsum(wc)
+    for k in range(1, wb.n_windows):
+        # butterflies not fully inside any single window so far:
+        inter_k = cum_truth[k] - cum_in_window[k]
+        assert inter_k >= 0  # windowed counting never overcounts the truth
+        # upper bound: all-pairs of i-vertices seen in the whole prefix
+        n_i_seen = len(np.unique(s.edge_i[: b[k][1]]))
+        assert inter_k <= n_i_seen * (n_i_seen - 1) / 2 * (cum_truth[k] + 1)
+
+
+def test_mape_helper():
+    assert mape(np.array([11.0]), np.array([10.0])) == pytest.approx(0.1)
