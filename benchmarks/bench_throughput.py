@@ -2,8 +2,10 @@
 
 Throughput = processed edges / elapsed wall seconds, both suites measured
 host-side on the same stream (the paper measured its Java impls the same
-way).  sGrapp's pipeline = windowize (host) + jitted exact window counts +
-estimator; FLEET = sequential reservoir (numpy/python).
+way).  sGrapp's pipeline = windowize (host) + bucket-batched exact window
+counts through the window executor + estimator; FLEET = sequential reservoir
+(numpy/python).  Per-tier rows compare the executor's counting backends —
+every tier runs at bucket capacity, never the global [n_i, n_j] biadjacency.
 """
 from __future__ import annotations
 
@@ -11,9 +13,10 @@ import time
 
 import numpy as np
 
+from repro.core.executor import WindowExecutor
 from repro.core.fleet import fleet_run
 from repro.core.sgrapp import mape, run_sgrapp
-from repro.core.windows import window_bounds, windowize
+from repro.core.windows import window_bounds
 from repro.streams import bipartite_pa_stream
 
 from .common import ground_truth_cumulative
@@ -21,14 +24,15 @@ from .common import ground_truth_cumulative
 __all__ = ["run"]
 
 
-def run() -> list[tuple]:
+def run(*, quick: bool = False) -> list[tuple]:
     rows = []
-    s = bipartite_pa_stream(30_000, temporal="uniform", n_unique=6000, seed=3)
+    n = 8_000 if quick else 30_000
+    s = bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5, seed=3)
     ntw, alpha = 120, 0.95
 
     # -- sGrapp throughput (Table 8 analogue) ---------------------------------
     t0 = time.perf_counter()
-    wb = windowize(s.tau, s.edge_i, s.edge_j, ntw)
+    wb = s.windowize(ntw)
     res = run_sgrapp(wb, alpha)
     dt = time.perf_counter() - t0
     n_processed = int(wb.cum_sgrs[-1])
@@ -36,11 +40,24 @@ def run() -> list[tuple]:
                  f"{n_processed / dt:.0f}"))
     # warm path (jit cached): streaming steady-state rate
     t0 = time.perf_counter()
-    wb2 = windowize(s.tau, s.edge_i, s.edge_j, ntw)
+    wb2 = s.windowize(ntw)
     run_sgrapp(wb2, alpha)
     dt2 = time.perf_counter() - t0
     rows.append(("throughput/sgrapp_edges_per_s_warm", dt2 * 1e6,
                  f"{n_processed / dt2:.0f}"))
+
+    # -- executor counting tiers (bucketed capacities, no global biadjacency) --
+    tiers = ("dense", "tiled") if quick else ("numpy", "dense", "tiled")
+    for tier in tiers:
+        ex = WindowExecutor(tier)
+        ex.run(wb)  # compile every bucket
+        t0 = time.perf_counter()
+        ex.run(wb)
+        dte = time.perf_counter() - t0
+        buckets = ex.plan(wb)
+        caps = "+".join(f"{b.cap_i}x{b.cap_j}x{b.n_windows}" for b in buckets)
+        rows.append((f"throughput/executor_{tier}_windows_per_s", dte * 1e6,
+                     f"{wb.n_windows / dte:.0f} (buckets {caps})"))
 
     # -- FLEET throughput ------------------------------------------------------
     for variant in (2, 3):
@@ -55,7 +72,7 @@ def run() -> list[tuple]:
     # -- accuracy comparison on a prefix (Table 9 analogue) --------------------
     prefix = s.prefix(8000)
     ntw9 = 80
-    wb9 = windowize(prefix.tau, prefix.edge_i, prefix.edge_j, ntw9)
+    wb9 = prefix.windowize(ntw9)
     truths = ground_truth_cumulative(prefix, ntw9)
     bounds = window_bounds(prefix.tau, ntw9)
     best_sg = min(run_sgrapp(wb9, a, truths=truths).mape()
@@ -69,14 +86,13 @@ def run() -> list[tuple]:
         rows.append((f"mape/fleet{variant}", 0.0, f"{mape(est, truths):.4f}"))
 
     # -- Figs 31-36: per-window latency/throughput trace ------------------------
-    import jax
-    from repro.core.sgrapp import window_exact_counts
-    window_exact_counts(wb9)  # compile
+    ex = WindowExecutor("dense")
+    ex.window_counts(wb9)  # compile
     lat = []
     for k in range(min(6, wb9.n_windows)):
-        one = windowize(prefix.tau, prefix.edge_i, prefix.edge_j, ntw9)
+        one = prefix.windowize(ntw9)
         t0 = time.perf_counter()
-        jax.block_until_ready(window_exact_counts(one))
+        ex.window_counts(one)
         lat.append((time.perf_counter() - t0) / one.n_windows)
     rows.append(("latency/per_window_s", float(np.mean(lat)) * 1e6,
                  f"mean={np.mean(lat)*1e3:.2f}ms"))

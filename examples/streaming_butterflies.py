@@ -1,20 +1,20 @@
-"""End-to-end streaming driver: online adaptive windows -> jitted exact
-in-window counting -> sGrapp-x estimation -> periodic fault-tolerant
-checkpointing of (estimator state + stream cursor).
+"""End-to-end streaming driver: online adaptive windows -> tier-selectable
+in-window counting (window executor) -> sGrapp-x estimation -> periodic
+fault-tolerant checkpointing of (estimator state + stream cursor).
 
 Simulates a live deployment: sgrs arrive one at a time through the online
-windowizer; each closed window is counted on-device; the estimator state
-survives a simulated crash/restart halfway through.
+windowizer; each closed window is relabelled, bucketed and counted on-device
+by the :class:`repro.core.executor.WindowExecutor` (set ``SGRAPP_TIER`` to
+numpy | dense | tiled | pallas); the estimator state survives a simulated
+crash/restart halfway through.
 
     PYTHONPATH=src python examples/streaming_butterflies.py
+    SGRAPP_TIER=pallas PYTHONPATH=src python examples/streaming_butterflies.py
 """
 import os
 import tempfile
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.butterfly import snapshot_count
+from repro.core.executor import WindowExecutor
 from repro.core.windows import adaptive_window_stream
 from repro.streams import bipartite_pa_stream
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint, latest_step
@@ -22,17 +22,8 @@ from repro.train.checkpoint import restore_checkpoint, save_checkpoint, latest_s
 NT_W = 120
 ALPHA0 = 0.95
 TOL, STEP = 0.05, 0.005
-CAP, NI, NJ = 1024, 512, 1024   # padded window capacity (static shapes)
 
-
-def pad_window(ei, ej):
-    ui, inv_i = np.unique(ei, return_inverse=True)
-    uj, inv_j = np.unique(ej, return_inverse=True)
-    m = len(ei)
-    out_i = np.zeros(CAP, np.int32); out_j = np.zeros(CAP, np.int32)
-    v = np.zeros(CAP, bool)
-    out_i[:m], out_j[:m], v[:m] = inv_i, inv_j, True
-    return jnp.asarray(out_i), jnp.asarray(out_j), jnp.asarray(v)
+EXECUTOR = WindowExecutor(os.environ.get("SGRAPP_TIER", "dense"))
 
 
 def process(stream, ckpt_dir, *, crash_after: int | None = None):
@@ -44,15 +35,12 @@ def process(stream, ckpt_dir, *, crash_after: int | None = None):
         print(f"  restored at window {state['window']} "
               f"(cum={state['cum']:.0f}, alpha={state['alpha']:.3f})")
 
-    records = zip(stream.tau.tolist(), stream.edge_i.tolist(),
-                  stream.edge_j.tolist())
     k = 0
-    for tau_w, ei, ej in adaptive_window_stream(records, NT_W):
+    for tau_w, ei, ej in adaptive_window_stream(stream.records(), NT_W):
         if k < state["window"]:
             k += 1
             continue  # already processed before the crash
-        pi, pj, v = pad_window(ei, ej)
-        in_window = float(snapshot_count(pi, pj, v, n_i=NI, n_j=NJ))
+        in_window = EXECUTOR.count_edges(ei, ej)
         state["edges"] += len(ei)
         inter = state["edges"] ** state["alpha"] if k > 0 else 0.0
         state["cum"] += in_window + inter

@@ -11,6 +11,7 @@ from .butterfly import (
     enumerate_butterflies_np,
 )
 from .windows import WindowBatch, window_bounds, window_ids, windowize
+from .executor import ExecutorResult, WindowExecutor
 from .sgrapp import (
     SGrappResult,
     mape,
@@ -28,7 +29,8 @@ __all__ = [
     "count_butterflies_from_edges", "count_butterflies_np",
     "count_butterflies_tiled", "count_caterpillars_np",
     "enumerate_butterflies_np", "WindowBatch", "window_bounds", "window_ids",
-    "windowize", "SGrappResult", "mape", "run_sgrapp", "run_sgrapp_x",
+    "windowize", "ExecutorResult", "WindowExecutor",
+    "SGrappResult", "mape", "run_sgrapp", "run_sgrapp_x",
     "sgrapp_estimate", "sgrapp_x_estimate", "window_exact_counts",
     "FleetState", "fleet_run", "fleet_run_chunked",
 ]

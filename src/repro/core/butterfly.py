@@ -10,12 +10,20 @@ where ``A`` is the |V_i| x |V_j| 0/1 biadjacency matrix and ``W_uv`` is the
 number of common j-neighbors (wedge multiplicity).  ``A @ A.T`` maps straight
 onto the MXU; the epilogue ``w(w-1)/2`` fuses into the matmul tiles.
 
-Counting tiers (each validated against the one above it in tests/):
+Counting tiers — the validation ladder (each tier validated against every
+other on adversarial snapshots in ``tests/test_tier_differential.py``, and
+pairwise against the one above it in the unit tests):
 
 1. :func:`count_butterflies_np` -- numpy wedge-hash oracle, int64, always exact.
 2. :func:`count_butterflies_dense` -- pure-jnp Gram formulation.
 3. :func:`count_butterflies_tiled` -- lax.scan over tile grid; O(tile^2) memory.
 4. ``repro.kernels.butterfly`` -- Pallas TPU kernel (fused epilogue in VMEM).
+
+Production window counting selects a tier at runtime through
+``repro.core.executor.WindowExecutor`` (see ``docs/executor.md``): the
+estimators call the executor, the executor calls these primitives at
+bucketed static capacities.  All four tiers produce identical integer-valued
+counts, so tier choice never changes an estimate — only its speed.
 
 All device paths accumulate in float32 by default (exact below 2**24 per
 partial sum; in-window counts live far below that for realistic window

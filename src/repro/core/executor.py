@@ -1,0 +1,281 @@
+"""Streaming window executor: tier-selectable, bucket-batched window counting.
+
+The estimators (sGrapp / sGrapp-x) need one number per closed window: the
+exact in-window butterfly count.  Naively every window pays the *global*
+compact id-space capacity ``[n_i, n_j]`` — one giant biadjacency per window
+even when the window itself touches 100 vertices.  The executor instead:
+
+1. **Buckets** windows by their per-window compact sizes.  Each window's
+   ``(n_edges, n_i, n_j)`` is rounded up a geometric capacity ladder
+   (``align * growth**k``: 128, 256, 512, ...), and windows sharing a rung
+   form one bucket.  XLA compiles once per bucket shape — not per window,
+   and not at global capacity.
+2. **Batches** each bucket into a single ``lax.map`` dispatch through the
+   selected counting tier.  Peak device memory is one ``[cap_i, cap_j]``
+   bucket biadjacency (plus tile scratch), never the global ``n_i * n_j``.
+3. **Routes** through a selectable tier — the validation ladder of
+   ``repro.core.butterfly``:
+
+   ========  ==========================================================
+   tier      implementation
+   ========  ==========================================================
+   numpy     host wedge-hash oracle (`count_butterflies_np`), int64
+   dense     jnp Gram (`count_butterflies_from_edges`), MXU matmul
+   tiled     `count_butterflies_tiled` lax.scan over tile pairs
+   pallas    fused Pallas kernel (`butterfly_count_pallas`); interpret
+             mode on CPU hosts, Mosaic on TPU
+   ========  ==========================================================
+
+Every tier returns identical integer-valued counts (differential suite:
+``tests/test_tier_differential.py``), so the production tier is a config
+knob, not a semantics decision.
+
+**Window modes.**  ``tumbling`` is the paper's Algorithm 3: disjoint panes
+of ``nt_w`` unique timestamps.  ``sliding`` derives *overlapping* windows
+from the same panes by prefix-difference: output window ``k`` spans panes
+``[k - span + 1, k]`` and its count is ``P[k] - P[k - span]`` with ``P`` the
+prefix sum of pane counts.  Butterflies straddling pane boundaries are — as
+in tumbling mode — the estimator's inter-window term, so the sliding counts
+feed ``sgrapp_estimate`` unchanged.
+
+Entry points: :class:`WindowExecutor` (stateful, caches compiled buckets)
+and the module-level :func:`run` convenience.  ``run_sgrapp`` /
+``run_sgrapp_x`` accept ``tier=...`` and route here.
+"""
+from __future__ import annotations
+
+import functools
+import weakref
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from .butterfly import (
+    build_biadjacency,
+    count_butterflies_from_edges,
+    count_butterflies_np,
+    count_butterflies_tiled,
+)
+from .windows import WindowBatch
+
+__all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket", "run"]
+
+TIERS = ("numpy", "dense", "tiled", "pallas")
+MODES = ("tumbling", "sliding")
+
+
+def bucket_capacity(n: int, *, align: int = 128, growth: int = 2) -> int:
+    """Smallest ladder rung ``align * growth**k`` >= max(n, 1)."""
+    cap = align
+    n = max(int(n), 1)
+    while cap < n:
+        cap *= growth
+    return cap
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One static-shape compilation unit: same-capacity windows."""
+
+    cap_e: int                      # edge-lane capacity
+    cap_i: int                      # i-side id-space capacity
+    cap_j: int                      # j-side id-space capacity
+    windows: np.ndarray = field(compare=False)  # window indices in the batch
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.windows)
+
+
+@dataclass
+class ExecutorResult:
+    """Per-output-window counts plus the stream bookkeeping the estimators
+    consume.  In tumbling mode ``counts[k]`` is the exact in-window count of
+    pane k.  In sliding mode it is the prefix-difference of pane counts over
+    the span — butterflies whose edges straddle pane boundaries are NOT
+    included (they belong to the estimator's inter-window ``|E_k|^alpha``
+    term, exactly as in tumbling mode; see the module docstring).
+    ``cum_sgrs[k]`` is |E_k|, total sgrs seen when window k closed."""
+
+    counts: np.ndarray
+    cum_sgrs: np.ndarray
+    tier: str
+    mode: str
+    span: int = 1
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.counts)
+
+
+# ---------------------------------------------------------------------------
+# per-bucket compiled counters (cached across executors: the cache key is the
+# full static configuration, so two executors with the same tier share code)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
+                    block_i: int, block_k: int, interpret: bool):
+    """Jitted (edge_i, edge_j, valid) [B, cap_e] -> [B] counts at a static
+    ``(cap_i, cap_j)`` id-space capacity.  ``lax.map`` keeps the streaming
+    schedule (window k closes before k+1) and bounds peak memory at one
+    bucket-capacity biadjacency."""
+    if tier == "dense":
+        def one(ei, ej, v):
+            return count_butterflies_from_edges(ei, ej, v, cap_i, cap_j)
+    elif tier == "tiled":
+        eff_tile = min(tile, min(cap_i, cap_j))
+
+        def one(ei, ej, v):
+            adj = build_biadjacency(ei, ej, v, cap_i, cap_j)
+            return count_butterflies_tiled(adj, tile=eff_tile)
+    elif tier == "pallas":
+        from ..kernels.butterfly import butterfly_count_pallas
+
+        def one(ei, ej, v):
+            # butterfly_count_pallas clamps blocks to the bucket capacity
+            adj = build_biadjacency(ei, ej, v, cap_i, cap_j)
+            return butterfly_count_pallas(
+                adj, block_i=block_i, block_k=block_k, interpret=interpret)
+    else:  # pragma: no cover - guarded by WindowExecutor.__init__
+        raise ValueError(f"unknown device tier {tier!r}")
+
+    return jax.jit(lambda ei, ej, v: jax.lax.map(lambda t: one(*t), (ei, ej, v)))
+
+
+class WindowExecutor:
+    """Counts closed windows through one of the four tiers (see module doc).
+
+    Parameters
+    ----------
+    tier : "numpy" | "dense" | "tiled" | "pallas"
+    align, growth : capacity-ladder geometry (rungs ``align * growth**k``).
+    tile : tile edge for the ``tiled`` tier (clamped to bucket capacity).
+    block_i, block_k : Pallas kernel block shape (clamped per bucket).
+    interpret : Pallas interpreter mode; default auto (True off-TPU).
+    """
+
+    def __init__(self, tier: str = "dense", *, align: int = 128,
+                 growth: int = 2, tile: int = 512, block_i: int = 256,
+                 block_k: int = 512, interpret: bool | None = None):
+        if tier not in TIERS:
+            raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
+        if align < 1 or growth < 2:
+            raise ValueError("align must be >= 1 and growth >= 2")
+        self.tier = tier
+        self.align = align
+        self.growth = growth
+        self.tile = tile
+        self.block_i = block_i
+        self.block_k = block_k
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        self._plan_cache: tuple[weakref.ref, list[Bucket]] | None = None
+
+    # -- planning -----------------------------------------------------------
+
+    def plan(self, batch: WindowBatch) -> list[Bucket]:
+        """Group windows into static-capacity buckets (stable window order
+        within a bucket).  The last batch's plan is memoized by identity, so
+        repeated counts of the same batch skip the host-side grouping."""
+        if self._plan_cache is not None and self._plan_cache[0]() is batch:
+            return self._plan_cache[1]
+        groups: dict[tuple[int, int, int], list[int]] = {}
+        for k in range(batch.n_windows):
+            # every ladder rung clamps to the batch's own padded capacity:
+            # a bucket must never exceed what the global path would have paid
+            key = (
+                min(bucket_capacity(int(batch.n_edges[k]), align=self.align,
+                                    growth=self.growth), batch.capacity),
+                min(bucket_capacity(int(batch.n_i_per_window[k]),
+                                    align=self.align, growth=self.growth),
+                    max(batch.n_i, 1)),
+                min(bucket_capacity(int(batch.n_j_per_window[k]),
+                                    align=self.align, growth=self.growth),
+                    max(batch.n_j, 1)),
+            )
+            groups.setdefault(key, []).append(k)
+        buckets = [
+            Bucket(cap_e, cap_i, cap_j, np.asarray(idx, dtype=np.int64))
+            for (cap_e, cap_i, cap_j), idx in sorted(groups.items())
+        ]
+        self._plan_cache = (weakref.ref(batch), buckets)
+        return buckets
+
+    # -- counting -----------------------------------------------------------
+
+    def window_counts(self, batch: WindowBatch) -> np.ndarray:
+        """Exact in-window count per tumbling window, [n_windows] float64."""
+        out = np.zeros(batch.n_windows, dtype=np.float64)
+        if batch.n_windows == 0:
+            return out
+        for b in self.plan(batch):
+            if self.tier == "numpy":
+                for k in b.windows:
+                    v = batch.valid[k]
+                    out[k] = count_butterflies_np(
+                        np.stack([batch.edge_i[k][v], batch.edge_j[k][v]],
+                                 axis=1))
+                continue
+            fn = _bucket_counter(self.tier, b.cap_i, b.cap_j, self.tile,
+                                 self.block_i, self.block_k, self.interpret)
+            sub = batch.take(b.windows, capacity=b.cap_e)
+            counts = fn(sub.edge_i, sub.edge_j, sub.valid)
+            out[b.windows] = np.asarray(counts, dtype=np.float64)
+        return out
+
+    def count_edges(self, edge_i, edge_j) -> float:
+        """Count one online window from raw (possibly duplicated) edge ids —
+        the true-streaming entry (`adaptive_window_stream` consumers).
+        Relabels to a compact id space, picks the bucket, dispatches."""
+        ei = np.asarray(edge_i, dtype=np.int64)
+        ej = np.asarray(edge_j, dtype=np.int64)
+        if ei.size == 0:
+            return 0.0
+        if self.tier == "numpy":
+            return float(count_butterflies_np(np.stack([ei, ej], axis=1)))
+        ui, inv_i = np.unique(ei, return_inverse=True)
+        uj, inv_j = np.unique(ej, return_inverse=True)
+        cap_e = bucket_capacity(len(ei), align=self.align, growth=self.growth)
+        cap_i = bucket_capacity(len(ui), align=self.align, growth=self.growth)
+        cap_j = bucket_capacity(len(uj), align=self.align, growth=self.growth)
+        pi = np.zeros((1, cap_e), np.int32)
+        pj = np.zeros((1, cap_e), np.int32)
+        pv = np.zeros((1, cap_e), bool)
+        pi[0, : len(ei)] = inv_i
+        pj[0, : len(ej)] = inv_j
+        pv[0, : len(ei)] = True
+        fn = _bucket_counter(self.tier, cap_i, cap_j, self.tile,
+                             self.block_i, self.block_k, self.interpret)
+        return float(np.asarray(fn(pi, pj, pv))[0])
+
+    # -- the single entry point ---------------------------------------------
+
+    def run(self, batch: WindowBatch, *, mode: str = "tumbling",
+            span: int = 1) -> ExecutorResult:
+        """Count every window of ``batch`` through the configured tier.
+
+        ``mode="tumbling"`` returns the paper's disjoint pane counts.
+        ``mode="sliding"`` returns overlapping-window counts spanning
+        ``span`` panes via prefix-difference (module doc).
+        """
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if mode == "sliding" and span < 1:
+            raise ValueError("sliding span must be >= 1")
+        counts = self.window_counts(batch)
+        cum = np.asarray(batch.cum_sgrs, dtype=np.float64)
+        if mode == "tumbling":
+            return ExecutorResult(counts, cum, self.tier, mode)
+        prefix = np.concatenate([[0.0], np.cumsum(counts)])
+        lo = np.maximum(np.arange(len(counts)) - span + 1, 0)
+        sliding = prefix[1:] - prefix[lo]
+        return ExecutorResult(sliding, cum, self.tier, mode, span)
+
+
+def run(batch: WindowBatch, *, tier: str = "dense", mode: str = "tumbling",
+        span: int = 1, **kwargs) -> ExecutorResult:
+    """One-shot convenience: ``WindowExecutor(tier, **kwargs).run(batch)``."""
+    return WindowExecutor(tier, **kwargs).run(batch, mode=mode, span=span)

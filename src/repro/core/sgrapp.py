@@ -17,21 +17,25 @@ windows as "a certain number of unique timestamps", which is what we
 implement.  The difference is a few sgrs per boundary and does not change any
 reported metric's shape.
 
-Everything here is jit-compiled: the per-window exact counts come from a
-vmapped Gram counter over the padded WindowBatch; the sequential alpha
-recurrence of sGrapp-x is a lax.scan (the paper's loop is inherently serial
-in k, but each window body is fully parallel on-device).
+Per-window exact counts route through the streaming window executor
+(:mod:`repro.core.executor`): windows are bucketed into a small set of static
+capacities (no window pays the global ``[n_i, n_j]`` biadjacency) and each
+bucket dispatches as one ``lax.map`` through the selected counting tier —
+``numpy`` oracle, ``dense`` Gram, ``tiled`` scan, or the Pallas kernel.  All
+tiers return identical counts (``tests/test_tier_differential.py``), so
+``tier=`` is a deployment knob.  The sequential alpha recurrence of sGrapp-x
+is a lax.scan (the paper's loop is inherently serial in k, but each window
+body is fully parallel on-device).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .butterfly import count_butterflies_from_edges
+from .executor import WindowExecutor
 from .windows import WindowBatch
 
 __all__ = [
@@ -49,26 +53,27 @@ __all__ = [
 # exact in-window counting over a padded window batch
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_i", "n_j"))
-def _window_counts_jit(edge_i, edge_j, valid, *, n_i: int, n_j: int):
-    def one(ei, ej, v):
-        return count_butterflies_from_edges(ei, ej, v, n_i, n_j)
+def window_exact_counts(
+    batch: WindowBatch,
+    *,
+    tier: str | None = None,
+    executor: WindowExecutor | None = None,
+) -> jax.Array:
+    """Exact butterfly count per window, [n_windows] float.
 
-    # lax.map (not vmap): windows are counted sequentially, bounding peak
-    # memory at one [n_i, n_j] adjacency + one Gram tile set -- the same
-    # schedule a streaming deployment uses (window k closes before k+1).
-    return jax.lax.map(lambda t: one(*t), (edge_i, edge_j, valid))
-
-
-def window_exact_counts(batch: WindowBatch) -> jax.Array:
-    """Exact butterfly count per window, [n_windows] float."""
-    return _window_counts_jit(
-        jnp.asarray(batch.edge_i),
-        jnp.asarray(batch.edge_j),
-        jnp.asarray(batch.valid),
-        n_i=batch.n_i,
-        n_j=batch.n_j,
-    )
+    Dispatches through the bucket-batched :class:`WindowExecutor`; pass an
+    executor instance to reuse its compiled buckets across calls, or a
+    ``tier`` name for one-shot use (default "dense").  Passing both with a
+    mismatched tier is an error, never a silent override.
+    """
+    if executor is not None:
+        if tier is not None and executor.tier != tier:
+            raise ValueError(
+                f"tier={tier!r} conflicts with executor.tier={executor.tier!r}")
+        ex = executor
+    else:
+        ex = WindowExecutor(tier if tier is not None else "dense")
+    return jnp.asarray(ex.window_counts(batch), dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -161,8 +166,18 @@ class SGrappResult:
         return float(np.mean(np.abs(self.relative_errors())))
 
 
-def run_sgrapp(batch: WindowBatch, alpha: float, *, truths: np.ndarray | None = None) -> SGrappResult:
-    wc = np.asarray(window_exact_counts(batch))
+def run_sgrapp(
+    batch: WindowBatch,
+    alpha: float,
+    *,
+    truths: np.ndarray | None = None,
+    tier: str | None = None,
+    executor: WindowExecutor | None = None,
+) -> SGrappResult:
+    """Algorithm 4 end-to-end.  ``tier`` selects the exact-count backend
+    (numpy | dense | tiled | pallas); estimates are bit-identical across
+    tiers because every tier returns the same integer-valued counts."""
+    wc = np.asarray(window_exact_counts(batch, tier=tier, executor=executor))
     est = np.asarray(sgrapp_estimate(wc, batch.cum_sgrs, alpha))
     return SGrappResult(est, wc, np.asarray(batch.cum_sgrs, dtype=np.float64),
                         float(alpha), truths)
@@ -176,10 +191,12 @@ def run_sgrapp_x(
     x_percent: float = 100.0,
     tol: float = 0.05,
     step: float = 0.005,
+    tier: str | None = None,
+    executor: WindowExecutor | None = None,
 ) -> SGrappResult:
     """x_percent: fraction of windows with ground truth available (SS5: the
     paper's x is the percentage of available ground truth)."""
-    wc = np.asarray(window_exact_counts(batch))
+    wc = np.asarray(window_exact_counts(batch, tier=tier, executor=executor))
     n = wc.shape[0]
     n_sup = int(round(n * x_percent / 100.0))
     full_truth = np.zeros(n, dtype=np.float64)

@@ -87,6 +87,35 @@ class WindowBatch:
     def capacity(self) -> int:
         return self.edge_i.shape[1]
 
+    def take(self, indices, capacity: int | None = None) -> "WindowBatch":
+        """Sub-batch of the given window indices, optionally sliced to a
+        smaller edge capacity (must cover every selected window's edges).
+        The executor uses this to carve same-capacity buckets out of a batch
+        without copying the global-capacity tensors onto the device.
+        """
+        idx = np.asarray(indices, dtype=np.int64)
+        cap = self.capacity if capacity is None else capacity
+        if cap > self.capacity:
+            raise ValueError(
+                f"capacity {cap} > batch capacity {self.capacity}")
+        if idx.size and int(self.n_edges[idx].max()) > cap:
+            raise ValueError(
+                f"capacity {cap} < max selected in-window edges "
+                f"{int(self.n_edges[idx].max())}")
+        return WindowBatch(
+            edge_i=self.edge_i[idx, :cap],
+            edge_j=self.edge_j[idx, :cap],
+            valid=self.valid[idx, :cap],
+            n_edges=self.n_edges[idx],
+            n_sgrs=self.n_sgrs[idx],
+            cum_sgrs=self.cum_sgrs[idx],
+            n_i=self.n_i,
+            n_j=self.n_j,
+            window_end_tau=self.window_end_tau[idx],
+            n_i_per_window=self.n_i_per_window[idx],
+            n_j_per_window=self.n_j_per_window[idx],
+        )
+
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m

@@ -1,4 +1,13 @@
-from .ops import butterfly_count_pallas, butterfly_count_tiles
+from .ops import (
+    butterfly_count_pallas,
+    butterfly_count_pallas_batched,
+    butterfly_count_tiles,
+)
 from .ref import butterfly_count_ref
 
-__all__ = ["butterfly_count_pallas", "butterfly_count_tiles", "butterfly_count_ref"]
+__all__ = [
+    "butterfly_count_pallas",
+    "butterfly_count_pallas_batched",
+    "butterfly_count_tiles",
+    "butterfly_count_ref",
+]

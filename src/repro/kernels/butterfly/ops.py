@@ -5,6 +5,12 @@ side is the Gram side (the paper loops over the lower-average-degree side;
 here that is a transpose decision), launches the kernel and reduces the
 per-tile partials.  On hosts (tests/CPU) pass ``interpret=True``; on TPU the
 same call lowers to Mosaic.
+
+``butterfly_count_pallas_batched`` is the streaming-window entry: a batch of
+same-capacity biadjacencies (one bucket of the window executor) is counted
+with a single ``lax.map`` over kernel launches, so the whole bucket compiles
+once and peak memory stays at one ``[cap_i, cap_j]`` adjacency plus the
+kernel's VMEM tiles.
 """
 from __future__ import annotations
 
@@ -16,7 +22,11 @@ import numpy as np
 
 from .butterfly_kernel import butterfly_pairs_kernel_call
 
-__all__ = ["butterfly_count_pallas", "butterfly_count_tiles"]
+__all__ = [
+    "butterfly_count_pallas",
+    "butterfly_count_pallas_batched",
+    "butterfly_count_tiles",
+]
 
 
 def _pad_to(x: jax.Array, bi: int, bk: int) -> jax.Array:
@@ -37,15 +47,51 @@ def butterfly_count_pallas(
     interpret: bool = False,
     orient: bool = True,
 ) -> jax.Array:
-    """Butterfly count of a dense 0/1 biadjacency via the Pallas kernel."""
+    """Butterfly count of a dense 0/1 biadjacency via the Pallas kernel.
+
+    Block shapes clamp to the (oriented) matrix shape, so small bucket
+    capacities never pad up to the production tile shape.
+    """
     a = adj
     if orient and a.shape[0] > a.shape[1]:
         a = a.T
+    # clamp blocks toward the matrix shape, preserving the fp32 minimum tile
+    # (8 sublanes x 128 lanes) so Mosaic lowering stays legal on TPU
+    block_i = min(block_i, max(8, -(-a.shape[0] // 8) * 8))
+    block_k = min(block_k, max(128, -(-a.shape[1] // 128) * 128))
     a = _pad_to(a, block_i, block_k)
     partials = butterfly_pairs_kernel_call(
         a, block_i=block_i, block_k=block_k, interpret=interpret
     )
     return jnp.sum(partials)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_k", "interpret", "orient")
+)
+def butterfly_count_pallas_batched(
+    adjs: jax.Array,
+    *,
+    block_i: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+    orient: bool = True,
+) -> jax.Array:
+    """Count a [batch, n_i, n_j] stack of biadjacencies -> [batch] counts.
+
+    Stacked-adjacency entry for bucket-shaped batches (benchmarks and
+    validation; the window executor fuses adjacency construction into its
+    own ``lax.map`` to avoid materializing the stack).  Kernel launches run
+    sequentially (the streaming schedule: window k closes before k+1), each
+    fully parallel on-device.
+    """
+    return jax.lax.map(
+        lambda a: butterfly_count_pallas(
+            a, block_i=block_i, block_k=block_k, interpret=interpret,
+            orient=orient,
+        ),
+        adjs,
+    )
 
 
 def butterfly_count_tiles(

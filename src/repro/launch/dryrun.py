@@ -113,6 +113,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns a one-element list of per-program dicts
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         rec.update(
             status="ok",

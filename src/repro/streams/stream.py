@@ -68,6 +68,17 @@ class SgrStream:
     def edges(self) -> np.ndarray:
         return np.stack([self.edge_i, self.edge_j], axis=1)
 
+    def windowize(self, nt_w: int, **kwargs):
+        """Compile this stream into padded adaptive-window tensors
+        (``repro.core.windows.windowize``) ready for the window executor."""
+        from repro.core.windows import windowize as _windowize
+
+        return _windowize(self.tau, self.edge_i, self.edge_j, nt_w, **kwargs)
+
+    def records(self):
+        """Iterate (tau, i, j) triples — the online-windowizer wire format."""
+        return zip(self.tau.tolist(), self.edge_i.tolist(), self.edge_j.tolist())
+
 
 def dedupe_stream(s: SgrStream) -> SgrStream:
     """Drop repeat (i, j) arrivals, keeping the first (paper SS2.1)."""

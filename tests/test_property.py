@@ -1,7 +1,14 @@
-"""Hypothesis property tests on the counting/windowing invariants."""
+"""Hypothesis property tests on the counting/windowing invariants.
+
+``hypothesis`` is an optional test dependency (``pip install -e .[test]``);
+without it this module skips at collection instead of erroring the whole run.
+"""
 import numpy as np
+import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.butterfly import (
     count_butterflies_dense,

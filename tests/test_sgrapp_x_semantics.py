@@ -1,0 +1,114 @@
+"""sGrapp-x (Algorithm 5) semantics, validated against an independent
+step-by-step numpy reference: alpha adapts from window k-1's error, freezes
+once ground truth runs out, and ``x_percent=0`` degenerates to plain sGrapp.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sgrapp import (
+    run_sgrapp,
+    run_sgrapp_x,
+    sgrapp_x_estimate,
+)
+from repro.streams import synthetic_rating_stream
+
+
+def sgrapp_x_ref(wc, ce, alpha0, truths, mask, tol=0.05, step=0.005):
+    """Literal Algorithm 5 recurrence (float32 like the scan)."""
+    cum = np.float32(0.0)
+    alpha = np.float32(alpha0)
+    prev_err, prev_sup = np.float32(0.0), False
+    est = []
+    for k in range(len(wc)):
+        if prev_sup:                       # lines 18-21: window k-1's error
+            if prev_err > tol:
+                alpha = np.float32(alpha - step)
+            elif prev_err < -tol:
+                alpha = np.float32(alpha + step)
+        inter = np.float32(ce[k]) ** alpha if k > 0 else np.float32(0.0)
+        cum = np.float32(cum + np.float32(wc[k]) + inter)
+        est.append(float(cum))
+        if mask[k]:                        # lines 24-27
+            prev_err = np.float32((cum - truths[k]) / max(truths[k], 1.0))
+        else:
+            prev_err = np.float32(0.0)
+        prev_sup = bool(mask[k])
+    return np.asarray(est), float(alpha)
+
+
+def random_case(n=24, seed=0, sup_prefix=None):
+    rng = np.random.default_rng(seed)
+    wc = rng.integers(0, 50, n).astype(np.float64)
+    ce = np.cumsum(rng.integers(30, 90, n)).astype(np.float64)
+    truths = np.cumsum(wc) * rng.uniform(0.7, 1.6, n)
+    mask = np.zeros(n, bool)
+    h = n if sup_prefix is None else sup_prefix
+    mask[:h] = True
+    return wc, ce, truths, mask
+
+
+@pytest.mark.parametrize("sup_prefix", [24, 12, 5, 0])
+def test_matches_reference_recurrence(sup_prefix):
+    wc, ce, truths, mask = random_case(seed=sup_prefix, sup_prefix=sup_prefix)
+    est, alpha_f = sgrapp_x_estimate(wc, ce, 1.1, truths, mask)
+    want_est, want_alpha = sgrapp_x_ref(wc, ce, 1.1, truths, mask)
+    np.testing.assert_allclose(np.asarray(est), want_est, rtol=1e-5)
+    assert float(alpha_f) == pytest.approx(want_alpha, abs=1e-6)
+
+
+def test_alpha_frozen_after_truth_mask_ends():
+    """Once truth_mask goes False, no window after h+1 moves alpha: the full
+    run's final alpha equals the run truncated right after the last
+    supervised window (window h still adapts — it uses window h-1's error)."""
+    h = 8
+    wc, ce, truths, mask = random_case(n=30, seed=3, sup_prefix=h)
+    _, alpha_full = sgrapp_x_estimate(wc, ce, 1.4, truths, mask)
+    _, alpha_trunc = sgrapp_x_estimate(
+        wc[: h + 1], ce[: h + 1], 1.4, truths[: h + 1], mask[: h + 1])
+    assert float(alpha_full) == pytest.approx(float(alpha_trunc))
+
+
+def test_first_window_never_adapts():
+    """Alg. 5 ordering: window k adapts from window k-1's error, so window 0
+    runs at alpha0 even when its own error is enormous."""
+    wc = np.array([100.0])
+    ce = np.array([10.0])
+    truths = np.array([1.0])       # wildly overestimated
+    mask = np.array([True])
+    _, alpha_f = sgrapp_x_estimate(wc, ce, 1.25, truths, mask)
+    assert float(alpha_f) == pytest.approx(1.25)
+
+
+def test_adaptation_lags_one_window():
+    """Window 1 must adapt on window 0's error sign, not its own: craft
+    window 0 overestimated (alpha should step DOWN at window 1) while window
+    1 itself underestimates — k-own-error adaptation would step UP."""
+    wc = np.array([100.0, 0.0])
+    ce = np.array([10.0, 20.0])
+    truths = np.array([1.0, 1e6])  # w0: over by 100x; w1: under by ~1e4x
+    mask = np.array([True, True])
+    _, alpha_f = sgrapp_x_estimate(wc, ce, 1.0, truths, mask, step=0.005)
+    assert float(alpha_f) == pytest.approx(1.0 - 0.005)
+
+
+def test_x_percent_zero_is_plain_sgrapp():
+    s = synthetic_rating_stream(n_users=90, n_items=70, n_edges=1800, seed=11,
+                                temporal="uniform", n_unique=360)
+    wb = s.windowize(60)
+    truths = np.ones(wb.n_windows)  # present but never exposed at x=0
+    base = run_sgrapp(wb, 1.05)
+    x0 = run_sgrapp_x(wb, 1.05, truths, x_percent=0.0)
+    np.testing.assert_allclose(x0.estimates, base.estimates, rtol=1e-6)
+    assert x0.alpha_final == pytest.approx(1.05)
+
+
+def test_run_sgrapp_x_tier_invariant():
+    s = synthetic_rating_stream(n_users=90, n_items=70, n_edges=1500, seed=12,
+                                temporal="uniform", n_unique=300)
+    wb = s.windowize(50)
+    truths = np.cumsum(np.ones(wb.n_windows)) * 10
+    ref = run_sgrapp_x(wb, 1.0, truths, tier="dense")
+    for tier in ("numpy", "tiled", "pallas"):
+        res = run_sgrapp_x(wb, 1.0, truths, tier=tier)
+        np.testing.assert_array_equal(res.estimates, ref.estimates)
+        assert res.alpha_final == ref.alpha_final

@@ -1,0 +1,222 @@
+"""Differential validation of the window executor across all counting tiers.
+
+The ladder: ``numpy`` wedge-hash oracle == ``dense`` Gram == ``tiled`` scan
+== ``pallas`` (interpret mode on hosts), on adversarial window snapshots —
+empty windows, all-duplicate edges, hub stars, non-tile-multiple shapes and
+``n_i > n_j`` orientation flips — and bit-identical ``run_sgrapp`` estimates
+regardless of tier.
+"""
+import numpy as np
+import pytest
+
+from repro.core.butterfly import count_butterflies_np
+from repro.core.executor import (
+    TIERS,
+    WindowExecutor,
+    bucket_capacity,
+    run as executor_run,
+)
+from repro.core.sgrapp import run_sgrapp, window_exact_counts
+from repro.core.windows import WindowBatch, windowize
+from repro.streams import synthetic_rating_stream
+
+DEVICE_TIERS = ("dense", "tiled", "pallas")
+
+
+# -- adversarial snapshot construction ----------------------------------------
+
+def rand_edges(n_i, n_j, m, seed):
+    rng = np.random.default_rng(seed)
+    return list(zip(rng.integers(0, n_i, m).tolist(),
+                    rng.integers(0, n_j, m).tolist()))
+
+
+ADVERSARIAL = {
+    "i_hub_star": [(0, j) for j in range(37)],                  # 0 butterflies
+    "j_hub_star": [(i, 0) for i in range(41)],                  # 0 butterflies
+    "hub_plus_column": [(i, 0) for i in range(40)]
+                       + [(i, 1) for i in range(0, 40, 2)],     # cross-tile pairs
+    "all_duplicates": [(3, 5)] * 25,                            # dedupe -> 1 edge
+    "complete_k9_7": [(i, j) for i in range(9) for j in range(7)],
+    "orientation_flip": rand_edges(150, 40, 400, seed=1),       # n_i > n_j
+    "non_tile_multiple": rand_edges(13, 300, 350, seed=2),      # skinny
+    "dense_random": rand_edges(30, 30, 500, seed=3),
+}
+
+
+def batch_of(edge_lists) -> WindowBatch:
+    """One window per edge list (each window = one unique timestamp)."""
+    tau, ei, ej = [], [], []
+    for k, edges in enumerate(edge_lists):
+        for i, j in edges:
+            tau.append(float(k)); ei.append(i); ej.append(j)
+    return windowize(np.asarray(tau), np.asarray(ei), np.asarray(ej), 1)
+
+
+def empty_window_batch() -> WindowBatch:
+    """Two all-padding windows — no edge is valid."""
+    cap = 8
+    z = np.zeros((2, cap), np.int32)
+    zi = np.zeros(2, np.int64)
+    return WindowBatch(
+        edge_i=z, edge_j=z.copy(), valid=np.zeros((2, cap), bool),
+        n_edges=zi.copy(), n_sgrs=zi.copy(), cum_sgrs=np.array([1, 2]),
+        n_i=1, n_j=1, window_end_tau=np.zeros(2, np.float64),
+        n_i_per_window=zi.copy(), n_j_per_window=zi.copy(),
+    )
+
+
+def oracle_counts(batch: WindowBatch) -> np.ndarray:
+    out = np.zeros(batch.n_windows, dtype=np.float64)
+    for k in range(batch.n_windows):
+        v = batch.valid[k]
+        out[k] = count_butterflies_np(
+            np.stack([batch.edge_i[k][v], batch.edge_j[k][v]], axis=1))
+    return out
+
+
+# -- snapshot-level differential ----------------------------------------------
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize("align", [128, 8])
+def test_all_tiers_match_oracle_on_adversarial(tier, align):
+    batch = batch_of(ADVERSARIAL.values())
+    want = oracle_counts(batch)
+    got = WindowExecutor(tier, align=align).window_counts(batch)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_all_tiers_zero_on_empty_windows(tier):
+    got = WindowExecutor(tier).window_counts(empty_window_batch())
+    np.testing.assert_array_equal(got, np.zeros(2))
+
+
+@pytest.mark.parametrize("tier", DEVICE_TIERS)
+def test_count_edges_online_entry(tier):
+    ex = WindowExecutor(tier, align=8)
+    for name, edges in ADVERSARIAL.items():
+        e = np.asarray(edges, dtype=np.int64)
+        want = count_butterflies_np(e)
+        got = ex.count_edges(e[:, 0], e[:, 1])
+        assert got == want, name
+    assert ex.count_edges([], []) == 0.0
+
+
+# -- bucketing ----------------------------------------------------------------
+
+def test_bucket_capacity_ladder():
+    assert bucket_capacity(0) == 128
+    assert bucket_capacity(1) == 128
+    assert bucket_capacity(128) == 128
+    assert bucket_capacity(129) == 256
+    assert bucket_capacity(300) == 512
+    assert bucket_capacity(5, align=8, growth=2) == 8
+    assert bucket_capacity(9, align=8, growth=2) == 16
+
+
+def test_plan_partitions_all_windows():
+    batch = batch_of(ADVERSARIAL.values())
+    ex = WindowExecutor("dense", align=8)
+    buckets = ex.plan(batch)
+    seen = np.concatenate([b.windows for b in buckets])
+    assert sorted(seen.tolist()) == list(range(batch.n_windows))
+    for b in buckets:
+        # every window fits its bucket capacities
+        assert (batch.n_edges[b.windows] <= b.cap_e).all()
+        assert (batch.n_i_per_window[b.windows] <= b.cap_i).all()
+        assert (batch.n_j_per_window[b.windows] <= b.cap_j).all()
+    # heterogeneous window sizes must not collapse into one bucket
+    assert len(buckets) > 1
+
+
+def test_bucket_caps_never_exceed_global_capacity():
+    """A window whose ladder rung overshoots the batch's padded capacity
+    (e.g. ~300 i-vertices: rung 512 > global 384) must clamp to it — the
+    bucket path never pays more than the global path would have."""
+    batch = batch_of([rand_edges(300, 20, 900, seed=9)])
+    assert batch.n_i < 512  # the scenario is live: rung would exceed global
+    ex = WindowExecutor("dense")
+    for b in ex.plan(batch):
+        assert b.cap_e <= batch.capacity
+        assert b.cap_i <= batch.n_i
+        assert b.cap_j <= batch.n_j
+    np.testing.assert_array_equal(ex.window_counts(batch),
+                                  oracle_counts(batch))
+
+
+def test_take_subbatch_validates_capacity():
+    batch = batch_of(ADVERSARIAL.values())
+    sub = batch.take([0, 2], capacity=64)
+    assert sub.n_windows == 2 and sub.capacity == 64
+    with pytest.raises(ValueError):
+        batch.take([5], capacity=8)  # orientation_flip has ~400 edges
+
+
+# -- executor modes -----------------------------------------------------------
+
+def test_sliding_mode_prefix_difference():
+    batch = batch_of(ADVERSARIAL.values())
+    ex = WindowExecutor("dense", align=8)
+    pane = ex.run(batch, mode="tumbling").counts
+    for span in (1, 2, 3):
+        res = ex.run(batch, mode="sliding", span=span)
+        want = np.array([
+            pane[max(0, k - span + 1): k + 1].sum() for k in range(len(pane))
+        ])
+        np.testing.assert_array_equal(res.counts, want)
+    # span=1 sliding degenerates to tumbling
+    np.testing.assert_array_equal(
+        ex.run(batch, mode="sliding", span=1).counts, pane)
+
+
+def test_run_rejects_bad_config():
+    batch = batch_of([ADVERSARIAL["dense_random"]])
+    with pytest.raises(ValueError):
+        WindowExecutor("nope")
+    with pytest.raises(ValueError):
+        WindowExecutor("dense").run(batch, mode="hopping")
+    with pytest.raises(ValueError):
+        WindowExecutor("dense").run(batch, mode="sliding", span=0)
+
+
+# -- estimator-level differential --------------------------------------------
+
+def test_run_sgrapp_bit_identical_across_tiers():
+    s = synthetic_rating_stream(n_users=80, n_items=60, n_edges=1500, seed=6,
+                                temporal="uniform", n_unique=300)
+    wb = s.windowize(50)
+    ref = run_sgrapp(wb, 0.95, tier="dense")
+    for tier in TIERS:
+        res = run_sgrapp(wb, 0.95, tier=tier)
+        np.testing.assert_array_equal(res.window_counts, ref.window_counts)
+        np.testing.assert_array_equal(res.estimates, ref.estimates)
+
+
+def test_window_exact_counts_rejects_tier_executor_conflict():
+    batch = batch_of([ADVERSARIAL["dense_random"]])
+    ex = WindowExecutor("tiled")
+    with pytest.raises(ValueError):
+        window_exact_counts(batch, tier="pallas", executor=ex)
+    # matching tier (or omitting it) is fine
+    a = np.asarray(window_exact_counts(batch, tier="tiled", executor=ex))
+    b = np.asarray(window_exact_counts(batch, executor=ex))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_window_exact_counts_executor_reuse():
+    s = synthetic_rating_stream(n_users=80, n_items=60, n_edges=1200, seed=7,
+                                temporal="uniform", n_unique=240)
+    wb = s.windowize(40)
+    ex = WindowExecutor("tiled")
+    a = np.asarray(window_exact_counts(wb, executor=ex))
+    b = np.asarray(window_exact_counts(wb, tier="dense"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_module_level_run_entry():
+    batch = batch_of(ADVERSARIAL.values())
+    res = executor_run(batch, tier="dense", align=8)
+    np.testing.assert_array_equal(res.counts, oracle_counts(batch))
+    assert res.tier == "dense" and res.mode == "tumbling"
+    assert res.n_windows == batch.n_windows
