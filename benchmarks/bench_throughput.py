@@ -6,8 +6,31 @@ way).  sGrapp's pipeline = windowize (host) + bucket-batched exact window
 counts through the window executor + estimator; FLEET = sequential reservoir
 (numpy/python).  Per-tier rows compare the executor's counting backends —
 every tier runs at bucket capacity, never the global [n_i, n_j] biadjacency.
+
+``--devices N`` adds a device-count sweep over the executor's sharded
+dispatch path (1, 2, 4, ... up to N).  On a CPU-only host pass it on the
+command line — the module forces ``--xla_force_host_platform_device_count``
+*before* jax initializes, which is why the flag is sniffed at import time
+when run as a script.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # must precede any jax import: device count locks at first jax init;
+    # accept both argparse spellings, "--devices N" and "--devices=N"
+    _n = 0
+    for _k, _arg in enumerate(sys.argv):
+        if _arg == "--devices" and _k + 1 < len(sys.argv):
+            _n = int(sys.argv[_k + 1])
+        elif _arg.startswith("--devices="):
+            _n = int(_arg.split("=", 1)[1])
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _n > 1 and "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={_n}".strip())
 
 import time
 
@@ -24,7 +47,7 @@ from .common import ground_truth_cumulative
 __all__ = ["run"]
 
 
-def run(*, quick: bool = False) -> list[tuple]:
+def run(*, quick: bool = False, devices: int = 0) -> list[tuple]:
     rows = []
     n = 8_000 if quick else 30_000
     s = bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5, seed=3)
@@ -58,6 +81,28 @@ def run(*, quick: bool = False) -> list[tuple]:
         caps = "+".join(f"{b.cap_i}x{b.cap_j}x{b.n_windows}" for b in buckets)
         rows.append((f"throughput/executor_{tier}_windows_per_s", dte * 1e6,
                      f"{wb.n_windows / dte:.0f} (buckets {caps})"))
+
+    # -- sharded dispatch sweep (scaling with device count) --------------------
+    if devices > 0:
+        import jax
+
+        avail = jax.device_count()
+        ks, k = [], 1
+        while k <= min(devices, avail):
+            ks.append(k)
+            k *= 2
+        if min(devices, avail) not in ks:
+            ks.append(min(devices, avail))
+        for k in ks:
+            ex = WindowExecutor("dense", devices=k) if k > 1 else \
+                WindowExecutor("dense")
+            ex.run(wb)  # compile every bucket (per device count)
+            t0 = time.perf_counter()
+            res = ex.run(wb)
+            dts = time.perf_counter() - t0
+            rows.append((f"throughput/sharded_dense_d{k}_windows_per_s",
+                         dts * 1e6,
+                         f"{wb.n_windows / dts:.0f} (shards {res.n_shards})"))
 
     # -- FLEET throughput ------------------------------------------------------
     for variant in (2, 3):
@@ -97,3 +142,22 @@ def run(*, quick: bool = False) -> list[tuple]:
     rows.append(("latency/per_window_s", float(np.mean(lat)) * 1e6,
                  f"mean={np.mean(lat)*1e3:.2f}ms"))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller stream (CI smoke check)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="sweep the sharded executor over 1..N devices "
+                         "(forces N virtual host devices on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick, devices=args.devices):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

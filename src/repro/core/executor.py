@@ -38,9 +38,22 @@ prefix sum of pane counts.  Butterflies straddling pane boundaries are — as
 in tumbling mode — the estimator's inter-window term, so the sliding counts
 feed ``sgrapp_estimate`` unchanged.
 
+**Sharded dispatch.**  Closed windows are embarrassingly parallel, so each
+bucket's window axis can shard across devices: pass ``devices=N`` (or a
+prebuilt ``mesh=``) and every bucket batch is padded to a multiple of the
+shard count and dispatched through ``shard_map`` (window axis split over the
+mesh's data axes) composed with the same per-device ``lax.map`` schedule.
+Each window is still counted whole on exactly one device by exactly the same
+per-window program, so sharded counts are bit-identical to the single-device
+path — verified by the multi-device differential cases in
+``tests/test_tier_differential.py``.  Host/device work is double-buffered:
+while bucket k computes, the host drains bucket k-1 and materializes bucket
+k+1 (see :meth:`WindowExecutor.window_counts`).
+
 Entry points: :class:`WindowExecutor` (stateful, caches compiled buckets)
 and the module-level :func:`run` convenience.  ``run_sgrapp`` /
-``run_sgrapp_x`` accept ``tier=...`` and route here.
+``run_sgrapp_x`` accept ``tier=...`` / ``devices=...`` / ``mesh=...`` and
+route here.
 """
 from __future__ import annotations
 
@@ -96,13 +109,16 @@ class ExecutorResult:
     the span — butterflies whose edges straddle pane boundaries are NOT
     included (they belong to the estimator's inter-window ``|E_k|^alpha``
     term, exactly as in tumbling mode; see the module docstring).
-    ``cum_sgrs[k]`` is |E_k|, total sgrs seen when window k closed."""
+    ``cum_sgrs[k]`` is |E_k|, total sgrs seen when window k closed.
+    ``n_shards`` is the device count the bucket batches were sharded over
+    (1 = single-device dispatch)."""
 
     counts: np.ndarray
     cum_sgrs: np.ndarray
     tier: str
     mode: str
     span: int = 1
+    n_shards: int = 1
 
     @property
     def n_windows(self) -> int:
@@ -114,13 +130,13 @@ class ExecutorResult:
 # full static configuration, so two executors with the same tier share code)
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
-def _bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
-                    block_i: int, block_k: int, interpret: bool):
-    """Jitted (edge_i, edge_j, valid) [B, cap_e] -> [B] counts at a static
-    ``(cap_i, cap_j)`` id-space capacity.  ``lax.map`` keeps the streaming
-    schedule (window k closes before k+1) and bounds peak memory at one
-    bucket-capacity biadjacency."""
+def _one_window_fn(tier: str, cap_i: int, cap_j: int, tile: int,
+                   block_i: int, block_k: int, interpret: bool):
+    """(edge_i, edge_j, valid) [cap_e] -> scalar count for ONE window at a
+    static ``(cap_i, cap_j)`` id-space capacity — the per-window body both
+    the single-device and the sharded dispatch map over.  Sharding the
+    window axis never changes what runs per window, which is why the two
+    paths are bit-identical."""
     if tier == "dense":
         def one(ei, ej, v):
             return count_butterflies_from_edges(ei, ej, v, cap_i, cap_j)
@@ -140,8 +156,92 @@ def _bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
                 adj, block_i=block_i, block_k=block_k, interpret=interpret)
     else:  # pragma: no cover - guarded by WindowExecutor.__init__
         raise ValueError(f"unknown device tier {tier!r}")
+    return one
 
+
+@functools.lru_cache(maxsize=None)
+def _bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
+                    block_i: int, block_k: int, interpret: bool):
+    """Jitted (edge_i, edge_j, valid) [B, cap_e] -> [B] counts at a static
+    ``(cap_i, cap_j)`` id-space capacity.  ``lax.map`` keeps the streaming
+    schedule (window k closes before k+1) and bounds peak memory at one
+    bucket-capacity biadjacency."""
+    one = _one_window_fn(tier, cap_i, cap_j, tile, block_i, block_k, interpret)
     return jax.jit(lambda ei, ej, v: jax.lax.map(lambda t: one(*t), (ei, ej, v)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
+                            block_i: int, block_k: int, interpret: bool,
+                            mesh, axes: tuple):
+    """Sharded twin of :func:`_bucket_counter`: the window axis is split over
+    the mesh's data-parallel ``axes`` via shard_map, and each device runs the
+    single-device ``lax.map`` schedule over its shard.  Per-device peak
+    memory stays one bucket-capacity biadjacency; the batch dimension must be
+    padded to a multiple of the shard count (padding lanes are all-invalid
+    windows, which every tier counts as 0)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..distributed.sharding import shard_map_compat
+
+    one = _one_window_fn(tier, cap_i, cap_j, tile, block_i, block_k, interpret)
+
+    def local(ei, ej, v):
+        return jax.lax.map(lambda t: one(*t), (ei, ej, v))
+
+    batch = axes if len(axes) > 1 else axes[0]
+    fn = shard_map_compat(local, mesh,
+                          in_specs=(P(batch, None),) * 3,
+                          out_specs=P(batch),
+                          # pallas_call has no replication rule to check
+                          check_rep=(tier != "pallas"))
+    return jax.jit(fn)
+
+
+def _resolve_window_mesh(devices, mesh):
+    """Normalize the ``devices=`` / ``mesh=`` knobs to
+    ``(mesh | None, shard_axes, n_shards)``.
+
+    ``devices`` is an int (first N of ``jax.devices()``) or an explicit
+    device sequence; ``mesh`` is a prebuilt ``jax.sharding.Mesh`` whose
+    data-parallel axes (``batch_partition_axes``) carry the window dimension.
+    A single-device resolution collapses to the unsharded dispatch path.
+    """
+    if devices is not None and mesh is not None:
+        raise ValueError("pass devices= or mesh=, not both")
+    if mesh is None:
+        if devices is None:
+            return None, (), 1
+        if isinstance(devices, int) and devices == 1:
+            return None, (), 1
+        from ..launch.mesh import make_window_mesh
+
+        mesh = make_window_mesh(devices)
+    from ..distributed.sharding import batch_partition_axes
+
+    axes = tuple(batch_partition_axes(mesh))
+    n_shards = 1
+    for a in axes:
+        n_shards *= int(mesh.shape[a])
+    if n_shards <= 1:
+        return None, (), 1
+    return mesh, axes, n_shards
+
+
+def _pad_window_axis(ei: np.ndarray, ej: np.ndarray, v: np.ndarray,
+                     multiple: int):
+    """Pad the leading (window) axis to a multiple of the shard count with
+    all-invalid windows — every tier counts an all-padding window as 0, so
+    the pad lanes are sliced off host-side without touching the real ones."""
+    pad = (-ei.shape[0]) % multiple
+    if pad == 0:
+        return ei, ej, v
+
+    def z(a):
+        return np.concatenate(
+            [a, np.zeros((pad,) + a.shape[1:], dtype=a.dtype)])
+
+    return z(ei), z(ej), z(v)
 
 
 class WindowExecutor:
@@ -154,11 +254,19 @@ class WindowExecutor:
     tile : tile edge for the ``tiled`` tier (clamped to bucket capacity).
     block_i, block_k : Pallas kernel block shape (clamped per bucket).
     interpret : Pallas interpreter mode; default auto (True off-TPU).
+    devices : int (first N of ``jax.devices()``) or device sequence —
+        shard each bucket's window axis over a 1-D data mesh of those
+        devices.  Counts stay bit-identical to the single-device path.
+    mesh : prebuilt ``jax.sharding.Mesh`` (mutually exclusive with
+        ``devices``); windows shard over its data-parallel axes and
+        replicate over the rest.  The ``numpy`` tier is a host oracle and
+        ignores both knobs.
     """
 
     def __init__(self, tier: str = "dense", *, align: int = 128,
                  growth: int = 2, tile: int = 512, block_i: int = 256,
-                 block_k: int = 512, interpret: bool | None = None):
+                 block_k: int = 512, interpret: bool | None = None,
+                 devices=None, mesh=None):
         if tier not in TIERS:
             raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
         if align < 1 or growth < 2:
@@ -172,6 +280,13 @@ class WindowExecutor:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = interpret
+        if tier == "numpy":
+            # host oracle: never dispatches to a device, so the sharding
+            # knobs are ignored and n_shards honestly reports 1
+            self.mesh, self.shard_axes, self.n_shards = None, (), 1
+        else:
+            self.mesh, self.shard_axes, self.n_shards = _resolve_window_mesh(
+                devices, mesh)
         self._plan_cache: tuple[weakref.ref, list[Bucket]] | None = None
 
     # -- planning -----------------------------------------------------------
@@ -206,30 +321,57 @@ class WindowExecutor:
 
     # -- counting -----------------------------------------------------------
 
+    def _counter(self, b: Bucket):
+        """The compiled counter for one bucket's static configuration —
+        sharded over the window mesh when one is configured."""
+        if self.n_shards > 1:
+            return _sharded_bucket_counter(
+                self.tier, b.cap_i, b.cap_j, self.tile, self.block_i,
+                self.block_k, self.interpret, self.mesh, self.shard_axes)
+        return _bucket_counter(self.tier, b.cap_i, b.cap_j, self.tile,
+                               self.block_i, self.block_k, self.interpret)
+
     def window_counts(self, batch: WindowBatch) -> np.ndarray:
-        """Exact in-window count per tumbling window, [n_windows] float64."""
+        """Exact in-window count per tumbling window, [n_windows] float64.
+
+        Device tiers run double-buffered: each bucket's dispatch is
+        asynchronous, so while bucket k computes on-device the host drains
+        bucket k-1's counts and materializes bucket k+1's padded tensors
+        (``take`` + shard padding) — window materialization overlaps device
+        compute instead of serializing with it.
+        """
         out = np.zeros(batch.n_windows, dtype=np.float64)
         if batch.n_windows == 0:
             return out
-        for b in self.plan(batch):
-            if self.tier == "numpy":
+        if self.tier == "numpy":
+            for b in self.plan(batch):
                 for k in b.windows:
                     v = batch.valid[k]
                     out[k] = count_butterflies_np(
                         np.stack([batch.edge_i[k][v], batch.edge_j[k][v]],
                                  axis=1))
-                continue
-            fn = _bucket_counter(self.tier, b.cap_i, b.cap_j, self.tile,
-                                 self.block_i, self.block_k, self.interpret)
+            return out
+        pending: tuple[np.ndarray, object] | None = None
+        for b in self.plan(batch):
             sub = batch.take(b.windows, capacity=b.cap_e)
-            counts = fn(sub.edge_i, sub.edge_j, sub.valid)
-            out[b.windows] = np.asarray(counts, dtype=np.float64)
+            ei, ej, v = sub.edge_i, sub.edge_j, sub.valid
+            if self.n_shards > 1:
+                ei, ej, v = _pad_window_axis(ei, ej, v, self.n_shards)
+            counts = self._counter(b)(ei, ej, v)  # async dispatch
+            if pending is not None:
+                idx, dev = pending
+                out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
+            pending = (b.windows, counts)
+        idx, dev = pending
+        out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
         return out
 
     def count_edges(self, edge_i, edge_j) -> float:
         """Count one online window from raw (possibly duplicated) edge ids —
         the true-streaming entry (`adaptive_window_stream` consumers).
-        Relabels to a compact id space, picks the bucket, dispatches."""
+        Relabels to a compact id space, picks the bucket, dispatches.
+        Always single-device: window sharding is data parallelism over the
+        batch axis, and an online window is a batch of one."""
         ei = np.asarray(edge_i, dtype=np.int64)
         ej = np.asarray(edge_j, dtype=np.int64)
         if ei.size == 0:
@@ -268,11 +410,13 @@ class WindowExecutor:
         counts = self.window_counts(batch)
         cum = np.asarray(batch.cum_sgrs, dtype=np.float64)
         if mode == "tumbling":
-            return ExecutorResult(counts, cum, self.tier, mode)
+            return ExecutorResult(counts, cum, self.tier, mode,
+                                  n_shards=self.n_shards)
         prefix = np.concatenate([[0.0], np.cumsum(counts)])
         lo = np.maximum(np.arange(len(counts)) - span + 1, 0)
         sliding = prefix[1:] - prefix[lo]
-        return ExecutorResult(sliding, cum, self.tier, mode, span)
+        return ExecutorResult(sliding, cum, self.tier, mode, span,
+                              n_shards=self.n_shards)
 
 
 def run(batch: WindowBatch, *, tier: str = "dense", mode: str = "tumbling",

@@ -58,21 +58,31 @@ def window_exact_counts(
     *,
     tier: str | None = None,
     executor: WindowExecutor | None = None,
+    devices=None,
+    mesh=None,
 ) -> jax.Array:
     """Exact butterfly count per window, [n_windows] float.
 
     Dispatches through the bucket-batched :class:`WindowExecutor`; pass an
     executor instance to reuse its compiled buckets across calls, or a
     ``tier`` name for one-shot use (default "dense").  Passing both with a
-    mismatched tier is an error, never a silent override.
+    mismatched tier is an error, never a silent override.  ``devices=`` /
+    ``mesh=`` shard the one-shot executor's window axis across devices
+    (bit-identical counts; see the executor module doc) — combining them
+    with ``executor=`` is an error, the executor already owns its mesh.
     """
     if executor is not None:
         if tier is not None and executor.tier != tier:
             raise ValueError(
                 f"tier={tier!r} conflicts with executor.tier={executor.tier!r}")
+        if devices is not None or mesh is not None:
+            raise ValueError(
+                "devices=/mesh= conflict with executor=; configure the "
+                "executor's sharding at construction instead")
         ex = executor
     else:
-        ex = WindowExecutor(tier if tier is not None else "dense")
+        ex = WindowExecutor(tier if tier is not None else "dense",
+                            devices=devices, mesh=mesh)
     return jnp.asarray(ex.window_counts(batch), dtype=jnp.float32)
 
 
@@ -173,11 +183,16 @@ def run_sgrapp(
     truths: np.ndarray | None = None,
     tier: str | None = None,
     executor: WindowExecutor | None = None,
+    devices=None,
+    mesh=None,
 ) -> SGrappResult:
     """Algorithm 4 end-to-end.  ``tier`` selects the exact-count backend
-    (numpy | dense | tiled | pallas); estimates are bit-identical across
-    tiers because every tier returns the same integer-valued counts."""
-    wc = np.asarray(window_exact_counts(batch, tier=tier, executor=executor))
+    (numpy | dense | tiled | pallas); ``devices=`` / ``mesh=`` shard the
+    window axis across devices.  Estimates are bit-identical across tiers
+    and device counts because every path returns the same integer-valued
+    counts."""
+    wc = np.asarray(window_exact_counts(batch, tier=tier, executor=executor,
+                                        devices=devices, mesh=mesh))
     est = np.asarray(sgrapp_estimate(wc, batch.cum_sgrs, alpha))
     return SGrappResult(est, wc, np.asarray(batch.cum_sgrs, dtype=np.float64),
                         float(alpha), truths)
@@ -193,10 +208,14 @@ def run_sgrapp_x(
     step: float = 0.005,
     tier: str | None = None,
     executor: WindowExecutor | None = None,
+    devices=None,
+    mesh=None,
 ) -> SGrappResult:
     """x_percent: fraction of windows with ground truth available (SS5: the
-    paper's x is the percentage of available ground truth)."""
-    wc = np.asarray(window_exact_counts(batch, tier=tier, executor=executor))
+    paper's x is the percentage of available ground truth).  ``devices=`` /
+    ``mesh=`` shard the exact-count window axis (see :func:`run_sgrapp`)."""
+    wc = np.asarray(window_exact_counts(batch, tier=tier, executor=executor,
+                                        devices=devices, mesh=mesh))
     n = wc.shape[0]
     n_sup = int(round(n * x_percent / 100.0))
     full_truth = np.zeros(n, dtype=np.float64)

@@ -1,3 +1,3 @@
-from .sharding import Sharder, NO_SHARD
+from .sharding import NO_SHARD, Sharder, batch_partition_axes, shard_map_compat
 
-__all__ = ["Sharder", "NO_SHARD"]
+__all__ = ["Sharder", "NO_SHARD", "shard_map_compat", "batch_partition_axes"]

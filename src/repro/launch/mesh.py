@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_mesh_compat", "make_production_mesh", "make_tiny_mesh"]
+__all__ = ["make_mesh_compat", "make_production_mesh", "make_tiny_mesh",
+           "make_window_mesh"]
 
 
 def make_mesh_compat(shape, axes):
@@ -34,6 +35,35 @@ def make_mesh_compat(shape, axes):
     from jax.experimental import mesh_utils
 
     return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
+def make_window_mesh(devices=None, *, axis: str = "data"):
+    """1-D data-parallel mesh for window sharding (the executor's sharded
+    dispatch path).
+
+    ``devices`` is an int (the first N of ``jax.devices()``), an explicit
+    device sequence, or None for every device.  The axis is named "data" so
+    ``distributed.sharding.Sharder`` / ``batch_partition_axes`` resolve it as
+    data-parallel.  Prefix meshes (N < device count) bypass ``make_mesh_compat``
+    — ``jax.make_mesh`` insists on consuming every device.
+    """
+    import numpy as np
+
+    avail = jax.devices()
+    if devices is None:
+        devs = avail
+    elif isinstance(devices, int):
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"devices={devices} outside [1, {len(avail)}] available")
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+        if not devs:
+            raise ValueError("empty device sequence")
+    if devs == avail:
+        return make_mesh_compat((len(devs),), (axis,))
+    return jax.sharding.Mesh(np.asarray(devs), (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

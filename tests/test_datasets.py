@@ -1,0 +1,160 @@
+"""Unit tests for the KONECT-style edge-list loader (`repro.streams.datasets`).
+
+The paper's real datasets are KONECT TSVs; the loader must cope with both
+on-disk layouts — the full 4-column ``i j weight timestamp`` and the
+weightless 3-column ``i j timestamp`` — plus % / # comment headers, 1-based
+vertex ids (compacted to dense 0-based), and ``max_edges`` truncation.
+"""
+import numpy as np
+import pytest
+
+from repro.streams.datasets import available_datasets, load_edge_tsv, load_konect
+
+
+def write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_four_column_layout_uses_fourth_column_timestamps(tmp_path):
+    p = write(tmp_path, "out.four", "\n".join([
+        "% bip unweighted",
+        "1 1 1 100.5",
+        "1 2 1 101.0",
+        "2 1 1 103.0",
+    ]) + "\n")
+    s = load_edge_tsv(p)
+    np.testing.assert_array_equal(s.tau, [100.5, 101.0, 103.0])
+    assert len(s) == 3
+
+
+def test_three_column_layout_is_timestamp_not_weight(tmp_path):
+    """KONECT temporal files without weights are ``i j t`` — the third
+    column must load as the timestamp, not be dropped for synthetic ones."""
+    p = write(tmp_path, "out.three", "\n".join([
+        "% sym posedge",
+        "1 1 10",
+        "1 2 11",
+        "2 1 15",
+        "2 2 15",
+    ]) + "\n")
+    s = load_edge_tsv(p)
+    np.testing.assert_array_equal(s.tau, [10.0, 11.0, 15.0, 15.0])
+    assert s.n_unique_timestamps == 3
+
+
+def test_three_column_weight_like_falls_back_to_arrival_index(tmp_path):
+    """A 3-column NON-temporal KONECT file is ``i j weight`` (e.g. star
+    ratings): the jumpy third column must not be mistaken for timestamps,
+    which would meaninglessly reorder the stream."""
+    p = write(tmp_path, "out.rated", "\n".join([
+        "1 1 5",
+        "1 2 2",
+        "2 1 4",
+        "2 2 1",
+    ]) + "\n")
+    s = load_edge_tsv(p)
+    np.testing.assert_array_equal(s.tau, [0.0, 1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(s.edge_i, [0, 0, 1, 1])  # order preserved
+
+
+def test_three_column_constant_weight_falls_back_to_arrival_index(tmp_path):
+    """The ubiquitous all-ones weight column ('i j 1') is non-decreasing but
+    constant — mistaking it for timestamps would collapse the stream to one
+    unique timestamp and silently drop every window."""
+    p = write(tmp_path, "out.ones", "1 1 1\n1 2 1\n2 1 1\n2 2 1\n")
+    s = load_edge_tsv(p)
+    np.testing.assert_array_equal(s.tau, [0.0, 1.0, 2.0, 3.0])
+    assert s.windowize(2).n_windows == 2  # the stream still windowizes
+
+
+def test_two_column_layout_falls_back_to_arrival_index(tmp_path):
+    p = write(tmp_path, "out.two", "1 1\n1 2\n2 1\n")
+    s = load_edge_tsv(p)
+    np.testing.assert_array_equal(s.tau, [0.0, 1.0, 2.0])
+
+
+def test_has_timestamps_false_ignores_timestamp_columns(tmp_path):
+    p = write(tmp_path, "out.ts", "1 1 50\n1 2 40\n")
+    s = load_edge_tsv(p, has_timestamps=False)
+    np.testing.assert_array_equal(s.tau, [0.0, 1.0])
+
+
+def test_header_comments_and_blank_lines_skipped(tmp_path):
+    p = write(tmp_path, "out.hdr", "\n".join([
+        "% KONECT header",
+        "# generic comment",
+        "",
+        "3 7 1 5",
+        "",
+        "4 9 1 6",
+    ]) + "\n")
+    s = load_edge_tsv(p)
+    assert len(s) == 2
+
+
+def test_one_based_ids_compact_to_dense_zero_based(tmp_path):
+    # sparse 1-based ids on both sides compact to dense 0-based ranges
+    p = write(tmp_path, "out.ids", "1 10 1 1\n5 20 1 2\n9 10 1 3\n")
+    s = load_edge_tsv(p)
+    np.testing.assert_array_equal(np.sort(np.unique(s.edge_i)), [0, 1, 2])
+    np.testing.assert_array_equal(np.sort(np.unique(s.edge_j)), [0, 1])
+    assert s.n_i == 3 and s.n_j == 2
+
+
+def test_max_edges_truncates_in_stream_order(tmp_path):
+    rows = "\n".join(f"{k + 1} {k + 1} {k}" for k in range(10))
+    p = write(tmp_path, "out.trunc", rows + "\n")
+    s = load_edge_tsv(p, max_edges=4)
+    assert len(s) == 4
+    np.testing.assert_array_equal(s.tau, [0.0, 1.0, 2.0, 3.0])
+
+
+def test_load_konect_directory_layout(tmp_path):
+    d = tmp_path / "moreno"
+    d.mkdir()
+    (d / "out.moreno").write_text("1 1 5\n1 2 6\n")
+    s = load_konect(str(tmp_path), "moreno")
+    assert len(s) == 2
+    np.testing.assert_array_equal(s.tau, [5.0, 6.0])
+
+
+def test_load_konect_falls_back_to_any_out_file(tmp_path):
+    d = tmp_path / "weird"
+    d.mkdir()
+    (d / "out.weird-variant_a").write_text("1 1 2\n")
+    s = load_konect(str(tmp_path), "weird")
+    assert len(s) == 1
+
+
+def test_load_konect_missing_raises(tmp_path):
+    (tmp_path / "empty").mkdir()
+    with pytest.raises(FileNotFoundError):
+        load_konect(str(tmp_path), "empty")
+    with pytest.raises(FileNotFoundError):
+        load_konect(str(tmp_path), "nonexistent")
+
+
+def test_available_datasets_scans_out_dirs(tmp_path):
+    for name, has_out in [("a", True), ("b", False), ("c", True)]:
+        d = tmp_path / name
+        d.mkdir()
+        if has_out:
+            (d / f"out.{name}").write_text("1 1 1\n")
+        else:
+            (d / "README").write_text("no data")
+    assert available_datasets(str(tmp_path)) == ["a", "c"]
+    assert available_datasets(str(tmp_path / "missing")) == []
+
+
+def test_loaded_stream_windowizes_end_to_end(tmp_path):
+    """A 3-column file drives the windowizer: real timestamps, not synthetic
+    ones, decide the window boundaries."""
+    rows = []
+    for t in range(6):
+        for e in range(3):
+            rows.append(f"{e + 1} {t + e + 1} {t * 10}")
+    p = write(tmp_path, "out.win", "\n".join(rows) + "\n")
+    wb = load_edge_tsv(p).windowize(2)
+    assert wb.n_windows == 3  # 6 unique timestamps / nt_w=2

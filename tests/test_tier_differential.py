@@ -5,7 +5,18 @@ The ladder: ``numpy`` wedge-hash oracle == ``dense`` Gram == ``tiled`` scan
 empty windows, all-duplicate edges, hub stars, non-tile-multiple shapes and
 ``n_i > n_j`` orientation flips — and bit-identical ``run_sgrapp`` estimates
 regardless of tier.
+
+The sharded dispatch path (``devices=`` / ``mesh=``) gets the same
+treatment: multi-device-CPU differential cases run in a subprocess (the
+``--xla_force_host_platform_device_count`` flag must precede jax init) and
+in-process whenever the test runner itself already has >= 2 devices (the CI
+multi-device job sets ``XLA_FLAGS`` for the whole suite).
 """
+import os
+import subprocess
+import sys
+
+import jax
 import numpy as np
 import pytest
 
@@ -153,6 +164,103 @@ def test_take_subbatch_validates_capacity():
         batch.take([5], capacity=8)  # orientation_flip has ~400 edges
 
 
+# -- sharded dispatch (multi-device) ------------------------------------------
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_subprocess(code: str, n_virtual_devices: int):
+    # XLA honours the LAST occurrence of a repeated flag, so appending
+    # overrides any ambient device-count setting (e.g. the CI job's =2)
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(REPO, "src"),
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                         + f" --xla_force_host_platform_device_count="
+                           f"{n_virtual_devices}").strip()}
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=540, env=env, cwd=REPO)
+
+
+def test_sharded_differential_all_tiers_subprocess():
+    """Bit-identical counts single-device vs sharded, every tier, on >= 2
+    virtual CPU devices — including a shard count that does NOT divide the
+    window count (the padding path) and the estimator-level plumbing."""
+    code = r"""
+import numpy as np
+from repro.core.executor import TIERS, WindowExecutor
+from repro.core.sgrapp import run_sgrapp
+from repro.launch.mesh import make_window_mesh
+from repro.streams import bipartite_pa_stream
+
+s = bipartite_pa_stream(2500, temporal="uniform", n_unique=600, seed=5)
+wb = s.windowize(40)
+assert wb.n_windows > 3
+ref = WindowExecutor("dense").window_counts(wb)
+for tier in TIERS:
+    for dev in (2, 3):  # 3 never divides evenly here -> padding lanes live
+        got = WindowExecutor(tier, devices=dev).window_counts(wb)
+        np.testing.assert_array_equal(got, ref, err_msg=f"{tier} dev={dev}")
+# prebuilt-mesh knob
+got = WindowExecutor("dense", mesh=make_window_mesh(2)).window_counts(wb)
+np.testing.assert_array_equal(got, ref)
+# estimator-level: estimates bit-identical across device counts
+a = run_sgrapp(wb, 0.95, tier="dense")
+b = run_sgrapp(wb, 0.95, tier="dense", devices=4)
+np.testing.assert_array_equal(a.estimates, b.estimates)
+assert WindowExecutor("dense", devices=4).run(wb).n_shards == 4
+print("SHARDED_EXACT")
+"""
+    r = _run_subprocess(code, 4)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARDED_EXACT" in r.stdout
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+@pytest.mark.parametrize("tier", DEVICE_TIERS)
+def test_sharded_matches_single_device_in_process(tier):
+    batch = batch_of(ADVERSARIAL.values())
+    want = WindowExecutor(tier, align=8).window_counts(batch)
+    got = WindowExecutor(tier, align=8,
+                         devices=jax.device_count()).window_counts(batch)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sharding_knobs_validate():
+    with pytest.raises(ValueError):
+        WindowExecutor("dense", devices=2, mesh=object())  # mutually exclusive
+    with pytest.raises(ValueError):
+        WindowExecutor("dense", devices=0)
+    with pytest.raises(ValueError):
+        WindowExecutor("dense", devices=jax.device_count() + 1)
+    # executor= already owns its mesh: devices=/mesh= alongside it is an error
+    batch = batch_of([ADVERSARIAL["dense_random"]])
+    ex = WindowExecutor("dense")
+    with pytest.raises(ValueError):
+        window_exact_counts(batch, executor=ex, devices=2)
+
+
+def test_numpy_tier_ignores_sharding_knobs():
+    """The numpy tier never dispatches to a device: sharding knobs are
+    ignored outright (even impossible device counts) and n_shards honestly
+    reports 1 — the executor must not claim parallelism that never ran."""
+    ex = WindowExecutor("numpy", devices=jax.device_count() + 7)
+    assert ex.mesh is None and ex.n_shards == 1
+    batch = batch_of(ADVERSARIAL.values())
+    res = ex.run(batch)
+    assert res.n_shards == 1
+    np.testing.assert_array_equal(res.counts, oracle_counts(batch))
+
+
+def test_devices_one_collapses_to_unsharded():
+    ex = WindowExecutor("dense", devices=1)
+    assert ex.mesh is None and ex.n_shards == 1 and ex.shard_axes == ()
+    batch = batch_of(ADVERSARIAL.values())
+    res = ex.run(batch)
+    assert res.n_shards == 1
+    np.testing.assert_array_equal(res.counts, oracle_counts(batch))
+
+
 # -- executor modes -----------------------------------------------------------
 
 def test_sliding_mode_prefix_difference():
@@ -168,6 +276,52 @@ def test_sliding_mode_prefix_difference():
     # span=1 sliding degenerates to tumbling
     np.testing.assert_array_equal(
         ex.run(batch, mode="sliding", span=1).counts, pane)
+
+
+def test_sliding_span_exceeding_pane_count():
+    """span > n_panes: the lower bound clamps at pane 0, so window k holds
+    the cumulative count of every closed pane — no index underflow, and the
+    final window equals the all-pane total regardless of how far the span
+    overshoots."""
+    batch = batch_of(ADVERSARIAL.values())
+    ex = WindowExecutor("dense", align=8)
+    pane = ex.run(batch, mode="tumbling").counts
+    cum = np.cumsum(pane)
+    for span in (batch.n_windows, batch.n_windows + 1, batch.n_windows * 10):
+        res = ex.run(batch, mode="sliding", span=span)
+        np.testing.assert_array_equal(res.counts, cum)
+        assert res.span == span and res.mode == "sliding"
+
+
+def test_sliding_span_one_equals_tumbling_result():
+    """span=1 degenerates to tumbling for the full ExecutorResult contract,
+    not just the counts array."""
+    batch = batch_of(ADVERSARIAL.values())
+    ex = WindowExecutor("dense", align=8)
+    tum = ex.run(batch, mode="tumbling")
+    sli = ex.run(batch, mode="sliding", span=1)
+    np.testing.assert_array_equal(sli.counts, tum.counts)
+    np.testing.assert_array_equal(sli.cum_sgrs, tum.cum_sgrs)
+    assert sli.n_windows == tum.n_windows
+
+
+def test_sliding_prefix_difference_non_negative():
+    """Prefix-differencing must never produce a negative count: pane counts
+    are non-negative integers far below 2**53, so the float64 cumsum is
+    exact and differences stay >= 0 — and sliding counts grow monotonically
+    with span."""
+    rng_batches = [
+        batch_of(ADVERSARIAL.values()),
+        batch_of([rand_edges(60, 45, 700, seed=s) for s in range(12)]),
+    ]
+    for batch in rng_batches:
+        ex = WindowExecutor("dense", align=8)
+        prev = np.zeros(batch.n_windows)
+        for span in range(1, batch.n_windows + 2):
+            c = ex.run(batch, mode="sliding", span=span).counts
+            assert (c >= 0).all()
+            assert (c >= prev).all()  # widening the span never loses panes
+            prev = c
 
 
 def test_run_rejects_bad_config():
