@@ -1,0 +1,71 @@
+"""Machine-readable bench artifacts: ``BENCH_*.json`` next to the CSV.
+
+Every bench module prints ``name,us_per_call,derived`` CSV rows (scaffold
+contract).  This module serializes the same rows as JSON records::
+
+    [{"name": ..., "us_per_call": ..., "derived": ...,
+      "meta": {"devices": ..., "tier": ..., "git_sha": ...}}, ...]
+
+so CI can upload them as artifacts and the regression gate
+(``benchmarks/gate.py``) can diff runs without parsing CSV out of logs.
+``tier`` is recovered from the row name when the row is tier-specific
+(``.../executor_dense_...``, ``.../engine_pallas_...``), else null.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+
+__all__ = ["git_sha", "rows_to_records", "write_bench_json"]
+
+_TIERS = ("numpy", "dense", "tiled", "pallas")
+
+
+def git_sha() -> str:
+    """Short sha of HEAD, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def _tier_of(name: str) -> str | None:
+    for tier in _TIERS:
+        if re.search(rf"(^|[_/]){tier}([_/]|$)", name):
+            return tier
+    return None
+
+
+def rows_to_records(rows, *, devices: int = 0, quick: bool = False) -> list[dict]:
+    sha = git_sha()
+    return [
+        {
+            "name": str(name),
+            "us_per_call": float(us),
+            "derived": str(derived),
+            "meta": {"devices": int(devices), "tier": _tier_of(str(name)),
+                     "quick": bool(quick), "git_sha": sha},
+        }
+        for name, us, derived in rows
+    ]
+
+
+def write_bench_json(path: str, rows, *, devices: int = 0,
+                     quick: bool = False) -> str:
+    """Write rows as a ``BENCH_*.json`` artifact; returns the path.
+
+    ``quick`` records which bench mode produced the rows — quick and full
+    mode share row names but not magnitudes (us_per_call is total wall time
+    over differently sized streams), so the regression gate keys on it.
+    """
+    records = rows_to_records(rows, devices=devices, quick=quick)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+        f.write("\n")
+    return path

@@ -7,11 +7,22 @@ counts through the window executor + estimator; FLEET = sequential reservoir
 (numpy/python).  Per-tier rows compare the executor's counting backends —
 every tier runs at bucket capacity, never the global [n_i, n_j] biadjacency.
 
+``--streaming`` adds the online-ingestion sweep (:func:`run_streaming`):
+the same stream pushed through :class:`repro.streams.StreamingSGrapp` at
+several micro-batch sizes, so batch-replay and streaming edges/sec are
+directly comparable (replayed windows and pushed windows produce
+bit-identical estimates, so the delta is pure ingestion overhead).
+
 ``--devices N`` adds a device-count sweep over the executor's sharded
 dispatch path (1, 2, 4, ... up to N).  On a CPU-only host pass it on the
 command line — the module forces ``--xla_force_host_platform_device_count``
 *before* jax initializes, which is why the flag is sniffed at import time
 when run as a script.
+
+Both sweeps emit machine-readable artifacts next to the CSV:
+``BENCH_throughput.json`` and (with ``--streaming``)
+``BENCH_streaming.json`` — schema in :mod:`benchmarks.artifacts`, regression
+gate in :mod:`benchmarks.gate`.
 """
 from __future__ import annotations
 
@@ -40,11 +51,11 @@ from repro.core.executor import WindowExecutor
 from repro.core.fleet import fleet_run
 from repro.core.sgrapp import mape, run_sgrapp
 from repro.core.windows import window_bounds
-from repro.streams import bipartite_pa_stream
+from repro.streams import StreamingSGrapp, bipartite_pa_stream
 
 from .common import ground_truth_cumulative
 
-__all__ = ["run"]
+__all__ = ["run", "run_streaming"]
 
 
 def run(*, quick: bool = False, devices: int = 0) -> list[tuple]:
@@ -144,8 +155,64 @@ def run(*, quick: bool = False, devices: int = 0) -> list[tuple]:
     return rows
 
 
+def run_streaming(*, quick: bool = False, tier: str = "dense",
+                  devices: int = 0) -> list[tuple]:
+    """Online-ingestion throughput: the same stream as :func:`run`, pushed
+    through the streaming engine at several micro-batch sizes.
+
+    Per micro-batch size B the row is ``streaming/engine_{tier}_mb{B}_
+    edges_per_s``; a warm batch-replay row on the identical stream anchors
+    the comparison (streaming and replay estimates are bit-identical, so any
+    gap is pure ingestion/dispatch overhead).  ``flush_every`` scales with B
+    so small micro-batches still amortize executor dispatch.
+    """
+    rows = []
+    n = 8_000 if quick else 30_000
+    s = bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5, seed=3)
+    ntw, alpha = 120, 0.95
+    # windows are contiguous from sgr 0, so the last close bound = |E| processed
+    n_processed = int(window_bounds(s.tau, ntw)[-1, 1])
+
+    # warm replay anchor (compile caches hot after the first run)
+    run_sgrapp(s.windowize(ntw), alpha, tier=tier)
+    t0 = time.perf_counter()
+    run_sgrapp(s.windowize(ntw), alpha, tier=tier)
+    dt = time.perf_counter() - t0
+    rows.append((f"streaming/replay_{tier}_edges_per_s", dt * 1e6,
+                 f"{n_processed / dt:.0f}"))
+
+    import jax
+
+    eng_devices = (min(devices, jax.device_count())
+                   if devices > 1 and jax.device_count() > 1 else None)
+    sizes = (1, 256) if quick else (1, 64, 1024)
+    for mb in sizes:
+        flush_every = max(4, min(64, 4096 // max(mb, 1)))
+
+        def ingest():
+            eng = StreamingSGrapp(ntw, alpha, tier=tier,
+                                  flush_every=flush_every,
+                                  devices=eng_devices)
+            for a in range(0, len(s), mb):
+                eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb],
+                         s.edge_j[a:a + mb])
+            return eng.finalize()
+
+        ingest()  # warm every bucket shape this stream produces
+        t0 = time.perf_counter()
+        res = ingest()
+        dts = time.perf_counter() - t0
+        rows.append((f"streaming/engine_{tier}_mb{mb}_edges_per_s",
+                     dts * 1e6,
+                     f"{n_processed / dts:.0f} (flush_every={flush_every}, "
+                     f"{len(res.estimates)} windows)"))
+    return rows
+
+
 def main() -> None:
     import argparse
+
+    from .artifacts import write_bench_json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -153,10 +220,29 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="sweep the sharded executor over 1..N devices "
                          "(forces N virtual host devices on CPU)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="add the online micro-batch ingestion sweep "
+                         "(StreamingSGrapp push path)")
+    ap.add_argument("--tier", default="dense",
+                    help="counting tier for the streaming sweep")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_*.json artifacts")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for name, us, derived in run(quick=args.quick, devices=args.devices):
+    rows = run(quick=args.quick, devices=args.devices)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if not args.no_json:
+        write_bench_json("BENCH_throughput.json", rows, devices=args.devices,
+                         quick=args.quick)
+    if args.streaming:
+        srows = run_streaming(quick=args.quick, tier=args.tier,
+                              devices=args.devices)
+        for name, us, derived in srows:
+            print(f"{name},{us:.1f},{derived}")
+        if not args.no_json:
+            write_bench_json("BENCH_streaming.json", srows,
+                             devices=args.devices, quick=args.quick)
 
 
 if __name__ == "__main__":

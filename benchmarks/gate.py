@@ -1,0 +1,107 @@
+"""Bench regression gate: fail CI on a per-row slowdown vs the committed baseline.
+
+Usage::
+
+    python -m benchmarks.gate BENCH_throughput.json            # gate
+    python -m benchmarks.gate BENCH_throughput.json --update-baseline
+
+Compares each row's ``us_per_call`` against ``benchmarks/baseline.json`` by
+row name and exits non-zero if any row is more than ``--max-slowdown`` times
+slower (default 2x — wide enough for CI-runner noise, tight enough to catch
+a lost compile cache or an accidentally serialized dispatch).  Rows missing
+from the baseline (new benches) and rows with non-positive timings (pure
+accuracy rows like ``mape/...``) are skipped, so adding a bench never breaks
+the gate; refreshing the committed numbers is one command away.
+
+``--update-baseline`` rewrites the baseline from the fresh JSON instead of
+gating (commit the result; see README "Benchmark artifacts and the
+regression gate").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+__all__ = ["gate", "update_baseline"]
+
+
+def _load_rows(path: str) -> dict[str, float]:
+    """BENCH_*.json records keyed on name plus bench mode — quick and full
+    runs share row names but time differently sized streams, so they gate
+    against separate baseline entries."""
+    with open(path) as f:
+        records = json.load(f)
+    return {
+        r["name"] + ("@quick" if r.get("meta", {}).get("quick") else ""):
+            float(r["us_per_call"])
+        for r in records
+    }
+
+
+def update_baseline(fresh_path: str, baseline_path: str = DEFAULT_BASELINE) -> str:
+    """Rewrite the committed baseline (name -> us_per_call) from a fresh
+    ``BENCH_*.json``; merges over existing entries so multiple bench files
+    can contribute rows."""
+    base: dict[str, float] = {}
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            base = json.load(f)
+    base.update(_load_rows(fresh_path))
+    with open(baseline_path, "w") as f:
+        json.dump(dict(sorted(base.items())), f, indent=1)
+        f.write("\n")
+    return baseline_path
+
+
+def gate(fresh_path: str, baseline_path: str = DEFAULT_BASELINE,
+         *, max_slowdown: float = 2.0) -> list[str]:
+    """Returns the list of violation messages (empty = gate passes)."""
+    fresh = _load_rows(fresh_path)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    violations = []
+    for name, us in sorted(fresh.items()):
+        base_us = base.get(name)
+        if base_us is None or base_us <= 0 or us <= 0:
+            continue  # new row or non-timing row: never gates
+        ratio = us / base_us
+        if ratio > max_slowdown:
+            violations.append(
+                f"{name}: {us:.1f}us vs baseline {base_us:.1f}us "
+                f"({ratio:.2f}x > {max_slowdown:.1f}x)")
+    return violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="fresh BENCH_*.json to gate")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--max-slowdown", type=float, default=2.0)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the fresh run instead "
+                         "of gating")
+    args = ap.parse_args()
+    if args.update_baseline:
+        path = update_baseline(args.fresh, args.baseline)
+        print(f"baseline updated: {path}")
+        return
+    violations = gate(args.fresh, args.baseline,
+                      max_slowdown=args.max_slowdown)
+    fresh = _load_rows(args.fresh)
+    gated = sum(1 for us in fresh.values() if us > 0)
+    if violations:
+        print(f"bench-gate: {len(violations)} row(s) regressed "
+              f"(of {gated} gated):")
+        for v in violations:
+            print(f"  {v}")
+        raise SystemExit(1)
+    print(f"bench-gate: OK ({gated} timed rows within "
+          f"{args.max_slowdown:.1f}x of baseline)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  The
-roofline table (assignment deliverable g) is emitted at the end when dry-run
-artifacts exist under experiments/dryrun/.
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) and writes
+one machine-readable ``BENCH_<suite>.json`` per suite next to the CSV
+(schema: :mod:`benchmarks.artifacts`; regression gate:
+:mod:`benchmarks.gate`).  The roofline table (assignment deliverable g) is
+emitted at the end when dry-run artifacts exist under experiments/dryrun/.
 """
 from __future__ import annotations
 
@@ -20,22 +22,25 @@ def main() -> None:
         bench_kernel,
         bench_throughput,
     )
+    from .artifacts import write_bench_json
 
-    modules = [
-        ("densification", bench_densification),
-        ("hubs", bench_hubs),
-        ("interarrival", bench_interarrival),
-        ("accuracy", bench_accuracy),
-        ("throughput", bench_throughput),
-        ("kernel", bench_kernel),
+    suites = [
+        ("densification", bench_densification.run),
+        ("hubs", bench_hubs.run),
+        ("interarrival", bench_interarrival.run),
+        ("accuracy", bench_accuracy.run),
+        ("throughput", bench_throughput.run),
+        ("streaming", bench_throughput.run_streaming),
+        ("kernel", bench_kernel.run),
     ]
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in modules:
+    for name, fn in suites:
         try:
-            for row in mod.run():
-                n, us, derived = row
+            rows = list(fn())
+            for n, us, derived in rows:
                 print(f"{n},{us:.1f},{derived}")
+            write_bench_json(f"BENCH_{name}.json", rows)
         except Exception:
             failures += 1
             print(f"{name},NaN,ERROR", file=sys.stdout)

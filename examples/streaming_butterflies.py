@@ -1,12 +1,12 @@
-"""End-to-end streaming driver: online adaptive windows -> tier-selectable
-in-window counting (window executor) -> sGrapp-x estimation -> periodic
-fault-tolerant checkpointing of (estimator state + stream cursor).
+"""End-to-end streaming driver on the online ingestion engine.
 
-Simulates a live deployment: sgrs arrive one at a time through the online
-windowizer; each closed window is relabelled, bucketed and counted on-device
-by the :class:`repro.core.executor.WindowExecutor` (set ``SGRAPP_TIER`` to
-numpy | dense | tiled | pallas); the estimator state survives a simulated
-crash/restart halfway through.
+Simulates a live deployment of :class:`repro.streams.StreamingSGrapp`: sgrs
+arrive in micro-batches through ``push``, adaptive windows close online,
+closed windows flush in bucketed batches through the persistent window
+executor (set ``SGRAPP_TIER`` to numpy | dense | tiled | pallas), and the
+full engine state — open-window buffer, unique-timestamp quota, adapted
+alpha, estimate — survives a simulated crash/restart halfway through via
+``state_dict()`` + the fault-tolerant checkpointer.
 
     PYTHONPATH=src python examples/streaming_butterflies.py
     SGRAPP_TIER=pallas PYTHONPATH=src python examples/streaming_butterflies.py
@@ -14,46 +14,58 @@ crash/restart halfway through.
 import os
 import tempfile
 
-from repro.core.executor import WindowExecutor
-from repro.core.windows import adaptive_window_stream
-from repro.streams import bipartite_pa_stream
-from repro.train.checkpoint import restore_checkpoint, save_checkpoint, latest_step
+import numpy as np
+
+from repro.streams import StreamingSGrapp, bipartite_pa_stream
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
 NT_W = 120
 ALPHA0 = 0.95
-TOL, STEP = 0.05, 0.005
+MICRO_BATCH = 256     # sgrs per push (a serving request's worth)
+FLUSH_EVERY = 4       # closed windows per executor dispatch
+TIER = os.environ.get("SGRAPP_TIER", "dense")
 
-EXECUTOR = WindowExecutor(os.environ.get("SGRAPP_TIER", "dense"))
+
+def make_engine() -> StreamingSGrapp:
+    return StreamingSGrapp(NT_W, ALPHA0, tier=TIER, flush_every=FLUSH_EVERY)
 
 
 def process(stream, ckpt_dir, *, crash_after: int | None = None):
-    # restore estimator state if a checkpoint exists (restart path)
-    state = {"cum": 0.0, "alpha": ALPHA0, "edges": 0, "window": 0}
+    """Push the stream through the engine in micro-batches, checkpointing
+    every few windows; resume from the latest checkpoint if one exists."""
+    eng = make_engine()
+    cursor = 0
     if latest_step(ckpt_dir) is not None:
-        _, extra = restore_checkpoint(ckpt_dir, {})
-        state = extra["estimator"]
-        print(f"  restored at window {state['window']} "
-              f"(cum={state['cum']:.0f}, alpha={state['alpha']:.3f})")
+        state, extra = restore_checkpoint(ckpt_dir, eng.state_dict(), host=True)
+        eng.restore(state)
+        cursor = extra["cursor"]
+        print(f"  restored at sgr {cursor} (windows={eng.n_windows}, "
+              f"B-hat={float(eng.result().estimates[-1]):.0f}, "
+              f"alpha={eng.alpha:.3f})")
 
-    k = 0
-    for tau_w, ei, ej in adaptive_window_stream(stream.records(), NT_W):
-        if k < state["window"]:
-            k += 1
-            continue  # already processed before the crash
-        in_window = EXECUTOR.count_edges(ei, ej)
-        state["edges"] += len(ei)
-        inter = state["edges"] ** state["alpha"] if k > 0 else 0.0
-        state["cum"] += in_window + inter
-        state["window"] = k + 1
-        if (k + 1) % 5 == 0:
-            save_checkpoint(ckpt_dir, k + 1, {}, extra={"estimator": state})
-        print(f"  window {k:3d}: in-window={in_window:8.0f}  "
-              f"B-hat={state['cum']:12.0f}")
-        k += 1
-        if crash_after is not None and k >= crash_after:
+    reported = eng.n_windows
+    saved = reported
+    while cursor < len(stream):
+        nxt = min(cursor + MICRO_BATCH, len(stream))
+        eng.push(stream.tau[cursor:nxt], stream.edge_i[cursor:nxt],
+                 stream.edge_j[cursor:nxt])
+        cursor = nxt
+        if eng.n_windows - eng.n_pending > reported:
+            est = eng.result().estimates
+            for k in range(reported, len(est)):
+                print(f"  window {k:3d}: B-hat={float(est[k]):12.0f}")
+            reported = len(est)
+        if reported >= saved + 5 and crash_after is None:
+            save_checkpoint(ckpt_dir, reported, eng.state_dict(),
+                            extra={"cursor": cursor})
+            saved = reported
+        if crash_after is not None and reported >= crash_after:
+            # checkpoint BEFORE the crash point, then die mid-stream
+            save_checkpoint(ckpt_dir, reported, eng.state_dict(),
+                            extra={"cursor": cursor})
             print("  !! simulated crash !!")
-            return state, False
-    return state, True
+            return None
+    return eng.finalize()
 
 
 def main() -> None:
@@ -63,9 +75,16 @@ def main() -> None:
         print("run 1 (crashes after 10 windows):")
         process(stream, ckpt, crash_after=10)
         print("run 2 (restart from checkpoint):")
-        state, done = process(stream, ckpt)
-        assert done
-        print(f"final estimate: {state['cum']:,.0f} over {state['window']} windows")
+        res = process(stream, ckpt)
+        assert res is not None
+
+        # the restarted run must agree exactly with an uninterrupted one
+        uninterrupted = make_engine()
+        uninterrupted.push(stream.tau, stream.edge_i, stream.edge_j)
+        want = uninterrupted.finalize()
+        assert np.array_equal(res.estimates, want.estimates)
+        print(f"final estimate: {float(res.estimates[-1]):,.0f} over "
+              f"{len(res.estimates)} windows (crash/restart bit-identical)")
 
 
 if __name__ == "__main__":

@@ -72,7 +72,8 @@ from .butterfly import (
 )
 from .windows import WindowBatch
 
-__all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket", "run"]
+__all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket",
+           "run", "compiled_bucket_cache_info"]
 
 TIERS = ("numpy", "dense", "tiled", "pallas")
 MODES = ("tumbling", "sliding")
@@ -196,6 +197,21 @@ def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
                           # pallas_call has no replication rule to check
                           check_rep=(tier != "pallas"))
     return jax.jit(fn)
+
+
+def compiled_bucket_cache_info() -> dict:
+    """Sizes of the process-wide compiled-bucket caches.
+
+    The per-bucket counters are memoized on their full static configuration,
+    so every executor — and every flush of the streaming engine — reuses the
+    same compiled program for a recurring bucket shape instead of re-tracing.
+    ``tests/test_streaming_engine.py`` asserts the size stays flat across
+    flushes with recurring shapes.
+    """
+    return {
+        "single_device": _bucket_counter.cache_info().currsize,
+        "sharded": _sharded_bucket_counter.cache_info().currsize,
+    }
 
 
 def _resolve_window_mesh(devices, mesh):

@@ -29,6 +29,7 @@ body is fully parallel on-device).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
@@ -40,6 +41,8 @@ from .windows import WindowBatch
 
 __all__ = [
     "window_exact_counts",
+    "estimator_init",
+    "estimator_step",
     "sgrapp_estimate",
     "sgrapp_x_estimate",
     "SGrappResult",
@@ -87,19 +90,94 @@ def window_exact_counts(
 
 
 # ---------------------------------------------------------------------------
+# the shared per-window recurrence (Algorithms 4 and 5 share one body)
+# ---------------------------------------------------------------------------
+#
+# Both estimators are a sequential recurrence over closed windows.  Plain
+# sGrapp is the degenerate case of sGrapp-x with no supervised windows (the
+# truth mask is always False, so alpha never moves).  One body serves three
+# consumers with bit-identical float32 arithmetic:
+#
+#   * ``sgrapp_estimate`` / ``sgrapp_x_estimate``: a ``lax.scan`` over the
+#     full pre-windowed batch (the replay path);
+#   * :func:`estimator_step`: the same body jitted standalone, applied once
+#     per closed window by the online engine
+#     (:class:`repro.streams.engine.StreamingSGrapp`).
+#
+# XLA compiles the body to the same arithmetic inside a scan and standalone,
+# so replaying a stream and ingesting it online produce *bit-identical*
+# estimates — the differential suite (tests/test_streaming_engine.py) pins
+# this.  (The previous closed-form ``cumsum`` implementation of sGrapp could
+# not be matched incrementally: XLA's f32 cumsum is not sequentially
+# associated.)
+
+def _make_estimator_body(tol: float, step: float):
+    def body(carry, xs):
+        cumB, alpha, prev_err, prev_supervised = carry
+        w_count, e_k, truth, has_truth, k = xs
+        # -- adapt alpha from the previous window's error (Alg. 5 lines 18-21)
+        dec = jnp.logical_and(prev_supervised, prev_err > tol)
+        inc = jnp.logical_and(prev_supervised, prev_err < -tol)
+        alpha = alpha - step * dec.astype(alpha.dtype) + step * inc.astype(alpha.dtype)
+        # -- estimate (Alg. 4 line 17 / Alg. 5 line 22)
+        inter = jnp.where(k > 0, e_k**alpha, 0.0)
+        cumB = cumB + w_count + inter
+        # -- error for this window if ground truth exists (Alg. 5 lines 24-27)
+        err = jnp.where(has_truth, (cumB - truth) / jnp.maximum(truth, 1.0), 0.0)
+        return (cumB, alpha, err, has_truth), cumB
+
+    return body
+
+
+def estimator_init(alpha0) -> tuple:
+    """Initial carry (cumB, alpha, prev_err, prev_supervised) of the shared
+    estimator recurrence."""
+    return (
+        jnp.zeros((), jnp.float32),
+        jnp.asarray(alpha0, jnp.float32),
+        jnp.zeros((), jnp.float32),
+        jnp.zeros((), bool),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def estimator_step(tol: float = 0.05, step: float = 0.005):
+    """Jitted single-window step ``(carry, (wc, |E|, truth, has_truth, k))
+    -> (carry, B-hat_k)`` — the online twin of the replay scans.  Cached per
+    ``(tol, step)``: the engine compiles it once and reuses it for every
+    window of every stream."""
+    return jax.jit(_make_estimator_body(tol, step))
+
+
+@functools.lru_cache(maxsize=None)
+def _estimator_scan(tol: float, step: float):
+    """Jitted full-batch scan of the shared body (the replay path).  Cached
+    per ``(tol, step)`` so repeated ``run_sgrapp``/``run_sgrapp_x`` calls
+    re-dispatch compiled code instead of re-tracing the body each time
+    (jit's own cache handles distinct window-count shapes)."""
+    body = _make_estimator_body(tol, step)
+    return jax.jit(lambda init, xs: jax.lax.scan(body, init, xs))
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 4 -- sGrapp
 # ---------------------------------------------------------------------------
 
 def sgrapp_estimate(window_counts: jax.Array, cum_edges: jax.Array, alpha) -> jax.Array:
-    """Cumulative estimates B-hat_k for every window, vectorised closed form.
+    """Cumulative estimates B-hat_k for every window.
 
     B-hat_k = sum_{l<=k} B_G^{W_l} + sum_{1<=l<=k} |E_l|^alpha
+
+    Implemented as the shared estimator recurrence with supervision disabled
+    (alpha frozen at its input value) so the replay and online paths share
+    float32 arithmetic exactly.
     """
     wc = jnp.asarray(window_counts, dtype=jnp.float32)
     ce = jnp.asarray(cum_edges, dtype=jnp.float32)
-    k = jnp.arange(wc.shape[0])
-    inter = jnp.where(k > 0, ce**alpha, 0.0)
-    return jnp.cumsum(wc) + jnp.cumsum(inter)
+    n = wc.shape[0]
+    xs = (wc, ce, jnp.zeros(n, jnp.float32), jnp.zeros(n, bool), jnp.arange(n))
+    _, est = _estimator_scan(0.05, 0.005)(estimator_init(alpha), xs)
+    return est
 
 
 # ---------------------------------------------------------------------------
@@ -128,28 +206,8 @@ def sgrapp_x_estimate(
     tr = jnp.asarray(truths, dtype=jnp.float32)
     tm = jnp.asarray(truth_mask, dtype=bool)
     k_idx = jnp.arange(wc.shape[0])
-
-    def body(carry, xs):
-        cumB, alpha, prev_err, prev_supervised = carry
-        w_count, e_k, truth, has_truth, k = xs
-        # -- adapt alpha from the previous window's error (Alg. 5 lines 18-21)
-        dec = jnp.logical_and(prev_supervised, prev_err > tol)
-        inc = jnp.logical_and(prev_supervised, prev_err < -tol)
-        alpha = alpha - step * dec.astype(alpha.dtype) + step * inc.astype(alpha.dtype)
-        # -- estimate (Alg. 5 line 22)
-        inter = jnp.where(k > 0, e_k**alpha, 0.0)
-        cumB = cumB + w_count + inter
-        # -- error for this window if ground truth exists (Alg. 5 lines 24-27)
-        err = jnp.where(has_truth, (cumB - truth) / jnp.maximum(truth, 1.0), 0.0)
-        return (cumB, alpha, err, has_truth), cumB
-
-    init = (
-        jnp.zeros((), jnp.float32),
-        jnp.asarray(alpha0, jnp.float32),
-        jnp.zeros((), jnp.float32),
-        jnp.zeros((), bool),
-    )
-    (_, alpha_f, _, _), est = jax.lax.scan(body, init, (wc, ce, tr, tm, k_idx))
+    (_, alpha_f, _, _), est = _estimator_scan(tol, step)(
+        estimator_init(alpha0), (wc, ce, tr, tm, k_idx))
     return est, alpha_f
 
 

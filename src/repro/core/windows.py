@@ -13,7 +13,8 @@ from typing import Iterator
 
 import numpy as np
 
-__all__ = ["window_ids", "window_bounds", "WindowBatch", "windowize", "adaptive_window_stream"]
+__all__ = ["window_ids", "window_bounds", "WindowBatch", "pack_windows",
+           "windowize", "adaptive_window_stream"]
 
 
 def window_ids(tau: np.ndarray, nt_w: int) -> np.ndarray:
@@ -121,29 +122,32 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def windowize(
-    tau: np.ndarray,
-    edge_i: np.ndarray,
-    edge_j: np.ndarray,
-    nt_w: int,
+def pack_windows(
+    per_window_edges: list[np.ndarray],
     *,
+    n_sgrs: np.ndarray,
+    cum_sgrs: np.ndarray,
+    window_end_tau: np.ndarray,
     capacity: int | None = None,
     align: int = 128,
-    drop_partial: bool = True,
     dedupe: bool = True,
 ) -> WindowBatch:
-    """Compile a time-ordered sgr stream into padded window tensors.
+    """Pack per-window raw edge lists into padded device-ready tensors.
 
-    Per window: dedupe (i, j) pairs (paper semantics), relabel vertices to a
-    compact per-window id space (tumbling windows renew the graph, Alg. 4
-    line 19, so ids never leak across windows), pad to a common capacity
-    aligned to ``align`` lanes.
+    Each entry of ``per_window_edges`` is an ``[m, 2]`` int64 array of (i, j)
+    sgrs in arrival order.  Per window: dedupe (i, j) pairs keeping first
+    arrival (paper semantics), relabel vertices to a compact per-window id
+    space (tumbling windows renew the graph, Alg. 4 line 19, so ids never
+    leak across windows), pad to a common capacity aligned to ``align``
+    lanes.  Shared by the batch :func:`windowize` path and the online
+    :class:`repro.streams.engine.StreamingSGrapp` flush path — both pack
+    through here, so a window's device-side representation is identical no
+    matter which ingestion mode produced it.
     """
-    tau = np.asarray(tau)
-    edge_i = np.asarray(edge_i, dtype=np.int64)
-    edge_j = np.asarray(edge_j, dtype=np.int64)
-    bounds = window_bounds(tau, nt_w, drop_partial=drop_partial)
-    n_win = bounds.shape[0]
+    n_win = len(per_window_edges)
+    n_sgrs = np.asarray(n_sgrs, dtype=np.int64)
+    cum_sgrs = np.asarray(cum_sgrs, dtype=np.int64)
+    window_end_tau = np.asarray(window_end_tau, dtype=np.float64)
     if n_win == 0:
         z2 = np.zeros((0, 0), dtype=np.int32)
         z1 = np.zeros(0, dtype=np.int64)
@@ -151,12 +155,8 @@ def windowize(
                            np.zeros(0, dtype=np.float64), z1, z1)
 
     per_edges: list[np.ndarray] = []
-    n_sgrs = np.zeros(n_win, dtype=np.int64)
-    end_tau = np.zeros(n_win, dtype=np.float64)
-    for k, (s, e) in enumerate(bounds):
-        n_sgrs[k] = e - s
-        end_tau[k] = tau[e - 1]
-        ew = np.stack([edge_i[s:e], edge_j[s:e]], axis=1)
+    for ew in per_window_edges:
+        ew = np.asarray(ew, dtype=np.int64).reshape(-1, 2)
         if dedupe:
             key = ew[:, 0] << 32 | (ew[:, 1] & 0xFFFFFFFF)
             _, idx = np.unique(key, return_index=True)
@@ -186,21 +186,57 @@ def windowize(
 
     n_i = _round_up(max(1, int(ni_w.max())), align)
     n_j = _round_up(max(1, int(nj_w.max())), align)
-    cum_sgrs = np.cumsum(n_sgrs)
     return WindowBatch(
         edge_i=out_i, edge_j=out_j, valid=valid, n_edges=n_edges, n_sgrs=n_sgrs,
-        cum_sgrs=cum_sgrs, n_i=n_i, n_j=n_j, window_end_tau=end_tau,
+        cum_sgrs=cum_sgrs, n_i=n_i, n_j=n_j, window_end_tau=window_end_tau,
         n_i_per_window=ni_w, n_j_per_window=nj_w,
+    )
+
+
+def windowize(
+    tau: np.ndarray,
+    edge_i: np.ndarray,
+    edge_j: np.ndarray,
+    nt_w: int,
+    *,
+    capacity: int | None = None,
+    align: int = 128,
+    drop_partial: bool = True,
+    dedupe: bool = True,
+) -> WindowBatch:
+    """Compile a time-ordered sgr stream into padded window tensors
+    (adaptive tumbling windows -> :func:`pack_windows`)."""
+    tau = np.asarray(tau)
+    edge_i = np.asarray(edge_i, dtype=np.int64)
+    edge_j = np.asarray(edge_j, dtype=np.int64)
+    bounds = window_bounds(tau, nt_w, drop_partial=drop_partial)
+    n_win = bounds.shape[0]
+    per_edges = [np.stack([edge_i[s:e], edge_j[s:e]], axis=1) for s, e in bounds]
+    n_sgrs = bounds[:, 1] - bounds[:, 0] if n_win else np.zeros(0, np.int64)
+    end_tau = (tau[bounds[:, 1] - 1].astype(np.float64) if n_win
+               else np.zeros(0, np.float64))
+    return pack_windows(
+        per_edges, n_sgrs=n_sgrs, cum_sgrs=np.cumsum(n_sgrs),
+        window_end_tau=end_tau, capacity=capacity, align=align, dedupe=dedupe,
     )
 
 
 def adaptive_window_stream(
     records: Iterator[tuple[float, int, int]],
     nt_w: int,
+    *,
+    drop_partial: bool = True,
 ) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """Online variant of Algorithm 3: yields (tau, edge_i, edge_j) arrays as
     each adaptive window closes.  Used by the true-streaming examples; the
     batched :func:`windowize` path is used for replayed/benchmark streams.
+
+    ``drop_partial`` matches :func:`window_bounds`' contract: a trailing
+    window that reached its full ``nt_w``-unique-timestamp quota is always
+    emitted at stream end, and a trailing *partial* window (fewer than
+    ``nt_w`` uniques) is emitted iff ``drop_partial=False`` — so for either
+    setting the yielded windows are exactly the rows of
+    ``window_bounds(tau, nt_w, drop_partial=...)``.
     """
     buf_tau: list[float] = []
     buf_i: list[int] = []
@@ -221,7 +257,8 @@ def adaptive_window_stream(
         uniq.add(tau)
         if len(uniq) == nt_w:
             pending_close = True
-    if pending_close:
-        # final window reached its quota exactly at stream end -> complete
+    if pending_close or (buf_tau and not drop_partial):
+        # either the final window reached its quota exactly at stream end
+        # (always complete, always emitted), or it is a trailing partial
+        # window and the caller asked to keep it
         yield (np.array(buf_tau), np.array(buf_i), np.array(buf_j))
-    # a trailing partial window is dropped (matches windowize drop_partial)

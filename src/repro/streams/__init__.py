@@ -5,6 +5,7 @@ from .generators import (
     synthetic_rating_stream,
     assign_timestamps,
 )
+from .engine import StreamingSGrapp
 
 __all__ = [
     "SgrStream",
@@ -14,4 +15,5 @@ __all__ = [
     "bipartite_pa_stream",
     "synthetic_rating_stream",
     "assign_timestamps",
+    "StreamingSGrapp",
 ]

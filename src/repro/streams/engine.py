@@ -1,0 +1,360 @@
+"""Online streaming ingestion engine: push sgrs, get estimates (paper Alg. 3+5).
+
+:class:`StreamingSGrapp` is the serving-shaped front end of the reproduction:
+an unbounded bipartite edge stream is ingested through :meth:`push` in
+micro-batches of any size (one sgr at a time up to whole replay files), the
+adaptive tumbling windows of Algorithm 3 close *online* as the unique-
+timestamp quota fills, and the sGrapp / sGrapp-x estimate advances window by
+window as windows close — alpha adaptation (Algorithm 5) runs incrementally,
+not over a pre-windowed batch.
+
+The pipeline per closed window::
+
+    push(tau, i, j) ──> online windowizer ──> pending closed windows
+                                               │  (flush_every batching)
+                                               v
+            pack_windows  ──>  persistent WindowExecutor  ──>  exact counts
+            (same packer        (compiled bucket counters
+             as replay)          cached process-wide, all
+                                 tiers + sharded dispatch)
+                                               │
+                                               v
+            estimator_step per window (same jitted body as the replay scans)
+
+Three properties make this more than a convenience wrapper:
+
+* **Bit-identical to replay.**  Feeding the same stream through ``push`` in
+  micro-batches of size 1, 7, or all-at-once produces estimates bit-identical
+  to ``run_sgrapp`` / ``run_sgrapp_x`` over ``windowize`` — same packer, same
+  counting tiers, same float32 estimator arithmetic (XLA compiles the shared
+  body identically inside the replay ``lax.scan`` and in the engine's
+  per-window step).  ``tests/test_streaming_engine.py`` pins this across all
+  tiers and the sharded dispatch path.
+* **No re-tracing across flushes.**  Closed windows accumulate until
+  ``flush_every`` of them are pending, then flush through one persistent
+  :class:`WindowExecutor` whose compiled bucket counters are process-wide
+  caches — a steady-state stream re-dispatches compiled code only.
+* **Checkpointable.**  :meth:`state_dict` / :meth:`restore` capture the full
+  engine state (open-window buffer, unique-timestamp quota progress,
+  cumulative ``|E|``, estimator carry incl. adapted alpha, per-window
+  history) as a flat dict of numpy leaves, ready for
+  ``repro.train.checkpoint.save_checkpoint``.  A restored engine continues
+  the stream with bit-identical results.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.executor import WindowExecutor
+from repro.core.sgrapp import SGrappResult, estimator_init, estimator_step
+from repro.core.windows import pack_windows
+
+__all__ = ["StreamingSGrapp"]
+
+_NO_TAU = float("nan")  # sentinel: no timestamp observed yet
+
+
+class StreamingSGrapp:
+    """Online sGrapp / sGrapp-x over a pushed sgr stream.
+
+    Parameters
+    ----------
+    nt_w : window quota — a window closes after ``nt_w`` unique timestamps
+        (Algorithm 3; whole-timestamp semantics, matching ``windowize``).
+    alpha0 : initial inter-window exponent.
+    truths : optional cumulative ground-truth counts for the supervised
+        prefix: window k adapts alpha (Algorithm 5, ±``step`` per window
+        outside the ±``tol`` error band) while ``k < len(truths)`` and
+        freezes after — i.e. ``truths`` *is* the supervised prefix.  With
+        ``truths=None`` alpha never moves and the engine is plain sGrapp
+        (Algorithm 4).
+    tol, step : Algorithm 5 band and adaptation step.
+    tier : counting tier (numpy | dense | tiled | pallas), or pass a
+        prebuilt ``executor=`` to share one across engines.
+    devices, mesh : shard each flush's window axis across devices (forwarded
+        to :class:`WindowExecutor`; counts stay bit-identical).
+    flush_every : how many closed windows to accumulate before counting
+        them in one bucketed executor dispatch.  1 = count every window the
+        moment it closes (lowest latency); larger values amortize dispatch
+        overhead and keep the device busy (highest throughput).  Estimates
+        for pending windows materialize at the next flush; ``result`` /
+        ``finalize`` always flush first.
+    drop_partial : whether :meth:`finalize` drops a trailing window that
+        never filled its quota (matches ``windowize(drop_partial=...)``).
+    align : edge-lane alignment of packed flush batches (as ``windowize``).
+    """
+
+    def __init__(self, nt_w: int, alpha0: float, *, truths=None,
+                 tol: float = 0.05, step: float = 0.005,
+                 tier: str = "dense", executor: WindowExecutor | None = None,
+                 devices=None, mesh=None, flush_every: int = 32,
+                 drop_partial: bool = True, align: int = 128):
+        if nt_w <= 0:
+            raise ValueError("nt_w must be positive")
+        if flush_every < 1:
+            raise ValueError("flush_every must be >= 1")
+        if executor is not None and (devices is not None or mesh is not None):
+            raise ValueError(
+                "devices=/mesh= conflict with executor=; configure the "
+                "executor's sharding at construction instead")
+        self.nt_w = int(nt_w)
+        self.alpha0 = float(alpha0)
+        self.truths = (None if truths is None
+                       else np.asarray(truths, dtype=np.float64))
+        self.tol = float(tol)
+        self.step = float(step)
+        self.flush_every = int(flush_every)
+        self.drop_partial = bool(drop_partial)
+        self.align = int(align)
+        self.executor = executor if executor is not None else WindowExecutor(
+            tier, align=align, devices=devices, mesh=mesh)
+        self._step_fn = estimator_step(self.tol, self.step)
+
+        # -- open-window buffer (current, not-yet-closed window)
+        self._buf_i: list[np.ndarray] = []
+        self._buf_j: list[np.ndarray] = []
+        self._buf_last_tau = _NO_TAU   # last tau in the open buffer
+        self._buf_len = 0              # raw sgrs buffered
+        self._uniq = 0                 # unique timestamps in the open window
+        self._last_tau = _NO_TAU       # last tau ever seen (order validation)
+
+        # -- closed-but-uncounted windows awaiting a flush
+        self._pending: list[tuple[np.ndarray, np.ndarray, int, float]] = []
+
+        # -- per-window history (materialized at flush)
+        self._counts: list[float] = []
+        self._estimates: list[np.float32] = []
+        self._cum_sgrs: list[int] = []
+        self._end_tau: list[float] = []
+
+        # -- estimator carry (float32 scalars, matching the replay scan)
+        self._carry = tuple(np.asarray(c) for c in estimator_init(alpha0))
+        self._total_sgrs = 0           # cumulative |E| over closed windows
+        self._finalized = False
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def tier(self) -> str:
+        return self.executor.tier
+
+    @property
+    def n_windows(self) -> int:
+        """Windows closed so far (counted or pending)."""
+        return len(self._counts) + len(self._pending)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def alpha(self) -> float:
+        """Current (possibly adapted) alpha — lags pending windows until the
+        next flush."""
+        return float(self._carry[1])
+
+    @property
+    def cum_sgrs(self) -> int:
+        """|E|: total sgrs in closed windows (open buffer excluded)."""
+        return self._total_sgrs
+
+    # -- ingestion -----------------------------------------------------------
+
+    def push(self, tau, edge_i, edge_j) -> int:
+        """Ingest a micro-batch of sgrs (scalars or equal-length arrays),
+        closing adaptive windows online.  Returns the number of windows
+        closed by this call.  Timestamps must be non-decreasing across the
+        whole stream (raises ``ValueError`` otherwise — same contract as
+        ``windowize``)."""
+        if self._finalized:
+            raise RuntimeError("push after finalize(); stream already ended")
+        tau = np.atleast_1d(np.asarray(tau, dtype=np.float64))
+        ei = np.atleast_1d(np.asarray(edge_i, dtype=np.int64))
+        ej = np.atleast_1d(np.asarray(edge_j, dtype=np.int64))
+        if not (tau.shape == ei.shape == ej.shape and tau.ndim == 1):
+            raise ValueError("tau/edge_i/edge_j must be equal-length 1-D")
+        if tau.size == 0:
+            return 0
+        if np.any(np.diff(tau) < 0) or (
+                not np.isnan(self._last_tau) and tau[0] < self._last_tau):
+            raise ValueError("timestamps must be non-decreasing (stream order)")
+
+        # unique-timestamp rank of each record, continuing the open window:
+        # record r is "new" when its tau differs from its predecessor (the
+        # last buffered tau for r=0 — close boundaries always fall on a
+        # strictly increasing tau, so a chunk-global diff is exact)
+        prev = self._buf_last_tau if self._uniq else _NO_TAU
+        is_new = np.empty(tau.shape[0], dtype=np.int64)
+        is_new[0] = 1 if (np.isnan(prev) or tau[0] != prev) else 0
+        is_new[1:] = tau[1:] != tau[:-1]
+        uniq_idx = self._uniq - 1 + np.cumsum(is_new)   # 0-based within window run
+        w_off = uniq_idx // self.nt_w                   # 0 = still the open window
+        w_max = int(w_off[-1])
+
+        closed = 0
+        if w_max == 0:
+            # .copy(): asarray may alias the caller's buffer, which they are
+            # free to overwrite before this window closes (the segment paths
+            # below copy implicitly — fancy indexing never aliases)
+            self._buf_i.append(ei.copy())
+            self._buf_j.append(ej.copy())
+            self._buf_len += tau.shape[0]
+        else:
+            # split the chunk at window-offset boundaries
+            cuts = np.searchsorted(w_off, np.arange(1, w_max + 1), side="left")
+            segs = np.split(np.arange(tau.shape[0]), cuts)
+            # segment 0 completes the open window
+            s0 = segs[0]
+            self._buf_i.append(ei[s0])
+            self._buf_j.append(ej[s0])
+            self._buf_len += s0.shape[0]
+            end_tau = tau[s0[-1]] if s0.shape[0] else self._buf_last_tau
+            self._close_open_window(end_tau)
+            closed += 1
+            # middle segments are whole windows in their own right
+            for seg in segs[1:-1]:
+                self._pending.append((ei[seg], ej[seg],
+                                      int(seg.shape[0]), float(tau[seg[-1]])))
+                closed += 1
+            # the last segment becomes the new open window
+            sl = segs[-1]
+            self._buf_i = [ei[sl]]
+            self._buf_j = [ej[sl]]
+            self._buf_len = int(sl.shape[0])
+
+        self._uniq = int(uniq_idx[-1]) - w_max * self.nt_w + 1
+        self._buf_last_tau = float(tau[-1])
+        self._last_tau = float(tau[-1])
+        if len(self._pending) >= self.flush_every:
+            self.flush()
+        return closed
+
+    def _close_open_window(self, end_tau: float) -> None:
+        ei = (np.concatenate(self._buf_i) if self._buf_i
+              else np.zeros(0, np.int64))
+        ej = (np.concatenate(self._buf_j) if self._buf_j
+              else np.zeros(0, np.int64))
+        self._pending.append((ei, ej, self._buf_len, float(end_tau)))
+        self._buf_i, self._buf_j = [], []
+        self._buf_len = 0
+
+    # -- counting + estimation ----------------------------------------------
+
+    def flush(self) -> int:
+        """Count every pending closed window through the persistent executor
+        (one bucketed dispatch) and advance the estimator over them in close
+        order.  Returns the number of windows flushed.  Idempotent: flushing
+        with nothing pending is a no-op."""
+        if not self._pending:
+            return 0
+        pending, self._pending = self._pending, []
+        per_edges = [np.stack([ei, ej], axis=1) for ei, ej, _, _ in pending]
+        n_sgrs = np.array([m for _, _, m, _ in pending], dtype=np.int64)
+        end_tau = np.array([t for _, _, _, t in pending], dtype=np.float64)
+        cum = self._total_sgrs + np.cumsum(n_sgrs)
+        batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
+                             window_end_tau=end_tau, align=self.align)
+        counts = self.executor.window_counts(batch)   # float64 [m]
+
+        for idx in range(len(pending)):
+            k = len(self._counts)
+            truth, has_truth = 0.0, False
+            if self.truths is not None and k < len(self.truths):
+                truth, has_truth = float(self.truths[k]), True
+            xs = (np.float32(counts[idx]), np.float32(cum[idx]),
+                  np.float32(truth), np.bool_(has_truth), np.int32(k))
+            carry, est = self._step_fn(self._carry, xs)
+            self._carry = tuple(np.asarray(c) for c in carry)
+            self._counts.append(float(counts[idx]))
+            self._estimates.append(np.float32(est))
+            self._cum_sgrs.append(int(cum[idx]))
+            self._end_tau.append(float(end_tau[idx]))
+        self._total_sgrs = int(cum[-1])
+        return len(pending)
+
+    def finalize(self) -> SGrappResult:
+        """End the stream: close the trailing window (kept if it filled its
+        quota, else per ``drop_partial``), flush, and return the result.
+        Further ``push`` calls raise."""
+        if not self._finalized:
+            if self._buf_len and (self._uniq >= self.nt_w
+                                  or not self.drop_partial):
+                self._close_open_window(self._buf_last_tau)
+            self._buf_i, self._buf_j = [], []
+            self._buf_len, self._uniq = 0, 0
+            self._finalized = True
+        return self.result()
+
+    def result(self) -> SGrappResult:
+        """Snapshot of the estimate so far (flushes pending windows first).
+        Field-compatible with the replay drivers' :class:`SGrappResult`."""
+        self.flush()
+        return SGrappResult(
+            estimates=np.array(self._estimates, dtype=np.float32),
+            window_counts=np.array(self._counts, dtype=np.float64),
+            cum_edges=np.array(self._cum_sgrs, dtype=np.float64),
+            alpha_final=float(self._carry[1]),
+            truths=self.truths,
+        )
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Full engine state as a flat dict of numpy leaves (pending windows
+        are flushed first, which is semantically invisible — flushing never
+        changes what any window's estimate will be).  Pass the dict as the
+        ``tree`` of ``repro.train.checkpoint.save_checkpoint``; a fresh
+        engine's ``state_dict()`` is the restore template."""
+        self.flush()
+        ei = (np.concatenate(self._buf_i) if self._buf_i
+              else np.zeros(0, np.int64))
+        ej = (np.concatenate(self._buf_j) if self._buf_j
+              else np.zeros(0, np.int64))
+        return {
+            "nt_w": np.int64(self.nt_w),
+            "buf_i": ei,
+            "buf_j": ej,
+            "buf_last_tau": np.float64(self._buf_last_tau),
+            "buf_len": np.int64(self._buf_len),
+            "uniq": np.int64(self._uniq),
+            "last_tau": np.float64(self._last_tau),
+            "total_sgrs": np.int64(self._total_sgrs),
+            "finalized": np.bool_(self._finalized),
+            "counts": np.array(self._counts, dtype=np.float64),
+            "estimates": np.array(self._estimates, dtype=np.float32),
+            "cum_sgrs": np.array(self._cum_sgrs, dtype=np.int64),
+            "end_tau": np.array(self._end_tau, dtype=np.float64),
+            "carry_cum": np.float32(self._carry[0]),
+            "carry_alpha": np.float32(self._carry[1]),
+            "carry_err": np.float32(self._carry[2]),
+            "carry_sup": np.bool_(self._carry[3]),
+        }
+
+    def restore(self, state: dict) -> "StreamingSGrapp":
+        """Load a :meth:`state_dict` (engine config — tier, truths, tol/step,
+        flush_every — comes from the constructor; the dict carries only
+        stream state).  Returns ``self``.  A restored engine continues the
+        stream bit-identically to one that never checkpointed."""
+        if int(state["nt_w"]) != self.nt_w:
+            raise ValueError(
+                f"checkpoint nt_w={int(state['nt_w'])} != engine nt_w={self.nt_w}")
+        ei = np.asarray(state["buf_i"], dtype=np.int64)
+        ej = np.asarray(state["buf_j"], dtype=np.int64)
+        self._buf_i = [ei] if ei.size else []
+        self._buf_j = [ej] if ej.size else []
+        self._buf_last_tau = float(state["buf_last_tau"])
+        self._buf_len = int(state["buf_len"])
+        self._uniq = int(state["uniq"])
+        self._last_tau = float(state["last_tau"])
+        self._total_sgrs = int(state["total_sgrs"])
+        self._finalized = bool(state["finalized"])
+        self._counts = [float(c) for c in np.asarray(state["counts"])]
+        self._estimates = [np.float32(e) for e in np.asarray(state["estimates"])]
+        self._cum_sgrs = [int(c) for c in np.asarray(state["cum_sgrs"])]
+        self._end_tau = [float(t) for t in np.asarray(state["end_tau"])]
+        self._carry = (np.float32(state["carry_cum"]),
+                       np.float32(state["carry_alpha"]),
+                       np.float32(state["carry_err"]),
+                       np.bool_(state["carry_sup"]))
+        self._pending = []
+        return self

@@ -68,10 +68,16 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore_checkpoint(ckpt_dir: str, template: Any, *, step: int | None = None,
-                       shardings: Any = None) -> tuple[Any, dict]:
+                       shardings: Any = None, host: bool = False) -> tuple[Any, dict]:
     """Restore into the structure of ``template``.  ``shardings`` (a matching
     pytree of NamedShardings or None) places leaves onto the *current* mesh —
-    which may differ from the mesh at save time (elastic restarts)."""
+    which may differ from the mesh at save time (elastic restarts).
+
+    ``host=True`` skips device placement and returns numpy leaves cast to the
+    template's dtypes — required for host-side state like stream cursors or
+    the streaming engine's ``state_dict`` (64-bit timestamps/counters would
+    otherwise be truncated to 32-bit under jax's default x64-disabled mode).
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -80,21 +86,26 @@ def restore_checkpoint(ckpt_dir: str, template: Any, *, step: int | None = None,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
-    host = [data[k] for k in data.files]
+    loaded = [data[k] for k in data.files]
     t_leaves, treedef = jax.tree.flatten(template)
-    if len(host) != len(t_leaves):
+    if len(loaded) != len(t_leaves):
         raise ValueError(
-            f"checkpoint has {len(host)} leaves, template expects {len(t_leaves)}")
-    if shardings is not None:
+            f"checkpoint has {len(loaded)} leaves, template expects {len(t_leaves)}")
+    if host:
+        if shardings is not None:
+            raise ValueError("host=True is mutually exclusive with shardings=")
+        placed = [np.asarray(h, dtype=np.asarray(t).dtype)
+                  for h, t in zip(loaded, t_leaves)]
+    elif shardings is not None:
         s_leaves = jax.tree.leaves(
             shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
         placed = [
             jax.device_put(h.astype(t.dtype), s) if s is not None
             else jax.numpy.asarray(h, dtype=t.dtype)
-            for h, t, s in zip(host, t_leaves, s_leaves)
+            for h, t, s in zip(loaded, t_leaves, s_leaves)
         ]
     else:
-        placed = [jax.numpy.asarray(h, dtype=t.dtype) for h, t in zip(host, t_leaves)]
+        placed = [jax.numpy.asarray(h, dtype=t.dtype) for h, t in zip(loaded, t_leaves)]
     return jax.tree.unflatten(treedef, placed), manifest["extra"]
 
 

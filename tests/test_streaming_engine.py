@@ -1,0 +1,272 @@
+"""Differential validation of the online streaming ingestion engine.
+
+The core contract: feeding a stream through :class:`StreamingSGrapp.push`
+in micro-batches of ANY size produces estimates *bit-identical* to the
+replay path (``run_sgrapp`` / ``run_sgrapp_x`` over ``windowize``) — same
+window packer, same counting tiers, same float32 estimator arithmetic.
+Plus: checkpoint/restore mid-stream is invisible, compiled bucket counters
+are reused across flushes (no re-tracing), and the sharded dispatch path
+stays bit-identical when >= 2 devices are present (the CI multi-device job).
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import TIERS, WindowExecutor, compiled_bucket_cache_info
+from repro.core.sgrapp import run_sgrapp, run_sgrapp_x
+from repro.streams import StreamingSGrapp, synthetic_rating_stream
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+NT_W = 40
+
+
+def make_stream(n=1500, seed=6):
+    return synthetic_rating_stream(n_users=80, n_items=60, n_edges=n,
+                                   seed=seed, temporal="uniform",
+                                   n_unique=n // 5)
+
+
+def push_in_batches(eng, s, mb):
+    for a in range(0, len(s), mb):
+        eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb], s.edge_j[a:a + mb])
+    return eng.finalize()
+
+
+def assert_same_result(res, ref):
+    np.testing.assert_array_equal(res.window_counts, ref.window_counts)
+    np.testing.assert_array_equal(res.estimates, ref.estimates)
+    np.testing.assert_array_equal(res.cum_edges, ref.cum_edges)
+    # the estimator carries alpha in float32; run_sgrapp echoes its input as
+    # a python double, so compare at the arithmetic's actual width
+    assert np.float32(res.alpha_final) == np.float32(ref.alpha_final)
+
+
+# -- micro-batch differential vs replay ---------------------------------------
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_microbatch_bit_identical_to_replay_all_tiers(tier):
+    s = make_stream()
+    ref = run_sgrapp(s.windowize(NT_W), 0.95, tier=tier)
+    for mb in (1, 7, len(s)):
+        eng = StreamingSGrapp(NT_W, 0.95, tier=tier, flush_every=3)
+        res = push_in_batches(eng, s, mb)
+        assert_same_result(res, ref)
+
+
+@pytest.mark.parametrize("flush_every", [1, 2, 1000])
+def test_flush_batching_never_changes_estimates(flush_every):
+    s = make_stream(seed=9)
+    ref = run_sgrapp(s.windowize(NT_W), 0.95, tier="dense")
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=flush_every)
+    res = push_in_batches(eng, s, 11)
+    assert_same_result(res, ref)
+
+
+@pytest.mark.parametrize("x_percent", [100.0, 50.0, 0.0])
+def test_sgrapp_x_adaptation_matches_replay(x_percent):
+    """Window-by-window alpha adaptation == the replay scan, including the
+    supervised->frozen transition at any x."""
+    from benchmarks.common import ground_truth_cumulative
+
+    s = make_stream(seed=3)
+    wb = s.windowize(NT_W)
+    truths = ground_truth_cumulative(s, NT_W)
+    ref = run_sgrapp_x(wb, 1.2, truths, x_percent=x_percent, tier="dense")
+    # the engine's supervised prefix IS its truths argument
+    n_sup = min(int(round(wb.n_windows * x_percent / 100.0)), len(truths))
+    for mb in (1, 13, len(s)):
+        eng = StreamingSGrapp(NT_W, 1.2, truths=truths[:n_sup], tier="dense",
+                              flush_every=2)
+        res = push_in_batches(eng, s, mb)
+        np.testing.assert_array_equal(res.estimates, ref.estimates)
+        assert res.alpha_final == ref.alpha_final
+        assert eng.alpha == ref.alpha_final
+
+
+def test_intermediate_results_are_prefixes():
+    """result() mid-stream is exactly the closed-window prefix of the final
+    answer — streaming never revises an emitted estimate."""
+    s = make_stream()
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=1)
+    seen = []
+    for a in range(0, len(s), 100):
+        eng.push(s.tau[a:a + 100], s.edge_i[a:a + 100], s.edge_j[a:a + 100])
+        seen.append(eng.result().estimates.copy())
+    final = eng.finalize().estimates
+    for prefix in seen:
+        np.testing.assert_array_equal(prefix, final[: len(prefix)])
+
+
+# -- trailing-partial-window contract -----------------------------------------
+
+def make_partial_tail_stream():
+    """A stream whose last window has fewer than NT_W unique timestamps."""
+    s = make_stream(seed=12)
+    # truncate mid-window: keep 2.5 windows' worth of unique timestamps
+    uniq = np.unique(s.tau)
+    cut_tau = uniq[int(2.5 * NT_W)]
+    keep = s.tau <= cut_tau
+    return type(s)(s.tau[keep], s.edge_i[keep], s.edge_j[keep])
+
+
+@pytest.mark.parametrize("drop_partial", [True, False])
+def test_partial_tail_matches_replay(drop_partial):
+    s = make_partial_tail_stream()
+    wb = s.windowize(NT_W, drop_partial=drop_partial)
+    ref = run_sgrapp(wb, 0.95, tier="dense")
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense",
+                          drop_partial=drop_partial)
+    res = push_in_batches(eng, s, 17)
+    assert len(res.estimates) == wb.n_windows
+    assert_same_result(res, ref)
+    # and the flag is live: the partial tail adds exactly one window
+    if not drop_partial:
+        wb_drop = s.windowize(NT_W, drop_partial=True)
+        assert wb.n_windows == wb_drop.n_windows + 1
+
+
+# -- checkpoint / restore ------------------------------------------------------
+
+def test_checkpoint_restore_mid_stream_bit_identical():
+    """Crash/restore at an arbitrary sgr (mid-window, mid-flush-batch) is
+    invisible: the restored engine's final result equals the uninterrupted
+    run bit-for-bit, through an on-disk checkpoint roundtrip."""
+    s = make_stream()
+    want = push_in_batches(StreamingSGrapp(NT_W, 0.95, flush_every=2), s, 10)
+
+    h = 731  # deliberately not a window or micro-batch boundary
+    a = StreamingSGrapp(NT_W, 0.95, flush_every=2)
+    a.push(s.tau[:h], s.edge_i[:h], s.edge_j[:h])
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, a.state_dict())
+        b = StreamingSGrapp(NT_W, 0.95, flush_every=5)
+        state, _ = restore_checkpoint(d, b.state_dict(), host=True)
+        b.restore(state)
+    b.push(s.tau[h:], s.edge_i[h:], s.edge_j[h:])
+    assert_same_result(b.finalize(), want)
+
+
+def test_checkpoint_restore_preserves_adapted_alpha():
+    from benchmarks.common import ground_truth_cumulative
+
+    s = make_stream(seed=3)
+    truths = ground_truth_cumulative(s, NT_W)
+    want = push_in_batches(
+        StreamingSGrapp(NT_W, 1.2, truths=truths), s, len(s))
+
+    h = 900
+    a = StreamingSGrapp(NT_W, 1.2, truths=truths)
+    a.push(s.tau[:h], s.edge_i[:h], s.edge_j[:h])
+    b = StreamingSGrapp(NT_W, 1.2, truths=truths).restore(a.state_dict())
+    b.push(s.tau[h:], s.edge_i[h:], s.edge_j[h:])
+    res = b.finalize()
+    np.testing.assert_array_equal(res.estimates, want.estimates)
+    assert res.alpha_final == want.alpha_final
+
+
+def test_restore_rejects_mismatched_nt_w():
+    a = StreamingSGrapp(NT_W, 0.95)
+    with pytest.raises(ValueError):
+        StreamingSGrapp(NT_W + 1, 0.95).restore(a.state_dict())
+
+
+# -- engine state machine ------------------------------------------------------
+
+def test_push_validates_stream_order():
+    eng = StreamingSGrapp(NT_W, 0.95)
+    eng.push([1.0, 2.0], [0, 1], [0, 1])
+    with pytest.raises(ValueError):
+        eng.push(1.5, 0, 0)  # earlier than the last seen timestamp
+    with pytest.raises(ValueError):
+        eng.push([3.0, 2.5], [0, 1], [0, 1])  # decreasing within the batch
+    with pytest.raises(ValueError):
+        eng.push([3.0, 4.0], [0], [0, 1])  # ragged columns
+
+
+def test_push_after_finalize_raises():
+    eng = StreamingSGrapp(NT_W, 0.95)
+    eng.push(1.0, 0, 0)
+    eng.finalize()
+    with pytest.raises(RuntimeError):
+        eng.push(2.0, 1, 1)
+
+
+def test_engine_constructor_validates():
+    with pytest.raises(ValueError):
+        StreamingSGrapp(0, 0.95)
+    with pytest.raises(ValueError):
+        StreamingSGrapp(NT_W, 0.95, flush_every=0)
+    with pytest.raises(ValueError):
+        StreamingSGrapp(NT_W, 0.95, executor=WindowExecutor("dense"),
+                        devices=2)
+
+
+def test_empty_and_scalar_push():
+    eng = StreamingSGrapp(NT_W, 0.95)
+    assert eng.push(np.zeros(0), np.zeros(0, int), np.zeros(0, int)) == 0
+    eng.push(1.0, 3, 4)  # scalars are a micro-batch of one
+    assert eng.n_windows == 0 and eng.cum_sgrs == 0  # window still open
+    res = eng.finalize()  # drop_partial drops the open tail
+    assert len(res.estimates) == 0
+
+
+def test_push_copies_caller_buffers():
+    """Ingestion from a reused caller buffer: push() must snapshot the edge
+    ids, not alias them — overwriting the buffer before the window closes
+    must not corrupt the open window."""
+    s = make_stream()
+    ref = run_sgrapp(s.windowize(NT_W), 0.95, tier="dense")
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense")
+    mb = 64
+    buf_t = np.empty(mb); buf_i = np.empty(mb, np.int64); buf_j = np.empty(mb, np.int64)
+    for a in range(0, len(s), mb):
+        n = min(mb, len(s) - a)
+        buf_t[:n] = s.tau[a:a + n]
+        buf_i[:n] = s.edge_i[a:a + n]
+        buf_j[:n] = s.edge_j[a:a + n]
+        eng.push(buf_t[:n], buf_i[:n], buf_j[:n])
+        buf_i[:n] = -1  # caller reuses the buffer immediately
+        buf_j[:n] = -1
+    assert_same_result(eng.finalize(), ref)
+
+
+def test_flush_reuses_compiled_buckets():
+    """Steady-state streaming must not re-trace: after the first flush has
+    compiled this stream's bucket shapes, further flushes (and a second
+    engine on the same stream shape) add no new compiled entries."""
+    s = make_stream()
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=2)
+    eng.push(s.tau[:750], s.edge_i[:750], s.edge_j[:750])
+    eng.flush()
+    before = compiled_bucket_cache_info()
+    eng.push(s.tau[750:], s.edge_i[750:], s.edge_j[750:])
+    eng.finalize()
+    eng2 = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=4)
+    push_in_batches(eng2, s, 50)
+    assert compiled_bucket_cache_info() == before
+
+
+def test_shared_executor_across_engines():
+    s = make_stream()
+    ex = WindowExecutor("tiled")
+    ref = run_sgrapp(s.windowize(NT_W), 0.95, tier="tiled")
+    for flush_every in (1, 8):
+        eng = StreamingSGrapp(NT_W, 0.95, executor=ex,
+                              flush_every=flush_every)
+        assert eng.tier == "tiled"
+        assert_same_result(push_in_batches(eng, s, 33), ref)
+
+
+# -- sharded dispatch (CI multi-device job) ------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+def test_sharded_engine_bit_identical_to_replay():
+    s = make_stream()
+    ref = run_sgrapp(s.windowize(NT_W), 0.95, tier="dense")
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense",
+                          devices=jax.device_count(), flush_every=3)
+    assert eng.executor.n_shards == jax.device_count()
+    assert_same_result(push_in_batches(eng, s, 29), ref)

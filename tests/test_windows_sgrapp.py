@@ -88,6 +88,33 @@ def test_online_windowizer_matches_batch():
         np.testing.assert_array_equal(ej_w, s.edge_j[st:e])
 
 
+@pytest.mark.parametrize("drop_partial", [True, False])
+def test_online_windowizer_partial_tail_contract(drop_partial):
+    """Both windowizers expose one drop_partial contract: on a stream whose
+    tail never fills its unique-timestamp quota, the online generator yields
+    exactly the rows of window_bounds(..., drop_partial=...) — the trailing
+    partial window is kept iff drop_partial=False (it used to be dropped
+    unconditionally, silently diverging from windowize)."""
+    nt_w = 3
+    tau = np.array([0, 0, 1, 2, 3, 3, 4, 5, 6, 7])  # 8 uniques: 2 windows + 2
+    s = make_stream(n=len(tau))
+    online = list(adaptive_window_stream(
+        zip(tau.tolist(), s.edge_i.tolist(), s.edge_j.tolist()), nt_w,
+        drop_partial=drop_partial))
+    bounds = window_bounds(tau, nt_w, drop_partial=drop_partial)
+    assert len(online) == bounds.shape[0] == (3 if not drop_partial else 2)
+    for (tau_w, ei_w, ej_w), (st, e) in zip(online, bounds):
+        np.testing.assert_array_equal(tau_w, tau[st:e])
+        np.testing.assert_array_equal(ei_w, s.edge_i[st:e])
+    # a tail that exactly fills its quota is complete: emitted either way
+    full = tau[:8]  # uniques 0..5 -> two exact windows
+    for dp in (True, False):
+        wins = list(adaptive_window_stream(
+            zip(full.tolist(), s.edge_i.tolist(), s.edge_j.tolist()), nt_w,
+            drop_partial=dp))
+        assert len(wins) == 2
+
+
 # -- sGrapp -------------------------------------------------------------------
 
 def test_sgrapp_closed_form():
