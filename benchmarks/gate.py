@@ -13,6 +13,11 @@ from the baseline (new benches) and rows with non-positive timings (pure
 accuracy rows like ``mape/...``) are skipped, so adding a bench never breaks
 the gate; refreshing the committed numbers is one command away.
 
+Rows present in the fresh run but missing from the baseline (a new bench or
+a new tier leg) are *reported* as ``new row`` — visible in the CI log so a
+fresh ``--update-baseline`` commit is an informed decision — but never fail
+the gate.
+
 ``--update-baseline`` rewrites the baseline from the fresh JSON instead of
 gating (commit the result; see README "Benchmark artifacts and the
 regression gate").
@@ -26,7 +31,7 @@ import os
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "baseline.json")
 
-__all__ = ["gate", "update_baseline"]
+__all__ = ["gate", "new_rows", "update_baseline"]
 
 
 def _load_rows(path: str) -> dict[str, float]:
@@ -55,6 +60,20 @@ def update_baseline(fresh_path: str, baseline_path: str = DEFAULT_BASELINE) -> s
         json.dump(dict(sorted(base.items())), f, indent=1)
         f.write("\n")
     return baseline_path
+
+
+def new_rows(fresh_path: str, baseline_path: str = DEFAULT_BASELINE
+             ) -> list[str]:
+    """Timed rows in the fresh run with no baseline entry (new benches or
+    new tier legs).  These never gate — they are surfaced so the operator
+    knows the baseline is due an ``--update-baseline`` refresh."""
+    fresh = _load_rows(fresh_path)
+    base: dict[str, float] = {}
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            base = json.load(f)
+    return [name for name, us in sorted(fresh.items())
+            if us > 0 and name not in base]
 
 
 def gate(fresh_path: str, baseline_path: str = DEFAULT_BASELINE,
@@ -93,6 +112,10 @@ def main() -> None:
                       max_slowdown=args.max_slowdown)
     fresh = _load_rows(args.fresh)
     gated = sum(1 for us in fresh.values() if us > 0)
+    fresh_only = new_rows(args.fresh, args.baseline)
+    for name in fresh_only:
+        print(f"bench-gate: new row (not in baseline, not gated): {name}")
+    gated -= len(fresh_only)
     if violations:
         print(f"bench-gate: {len(violations)} row(s) regressed "
               f"(of {gated} gated):")

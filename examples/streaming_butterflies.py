@@ -3,7 +3,8 @@
 Simulates a live deployment of :class:`repro.streams.StreamingSGrapp`: sgrs
 arrive in micro-batches through ``push``, adaptive windows close online,
 closed windows flush in bucketed batches through the persistent window
-executor (set ``SGRAPP_TIER`` to numpy | dense | tiled | pallas), and the
+executor (set ``SGRAPP_TIER`` to numpy | dense | tiled | pallas | sparse
+| auto), and the
 full engine state — open-window buffer, unique-timestamp quota, adapted
 alpha, estimate — survives a simulated crash/restart halfway through via
 ``state_dict()`` + the fault-tolerant checkpointer.

@@ -18,11 +18,15 @@ pairwise against the one above it in the unit tests):
 2. :func:`count_butterflies_dense` -- pure-jnp Gram formulation.
 3. :func:`count_butterflies_tiled` -- lax.scan over tile grid; O(tile^2) memory.
 4. ``repro.kernels.butterfly`` -- Pallas TPU kernel (fused epilogue in VMEM).
+5. :func:`count_butterflies_sparse` -- wedge sort + rank aggregation;
+   O(cap_e + wedge_cap) memory, never builds the biadjacency (the
+   sparse-window tier the executor's ``auto`` router picks when
+   edges << cap_i * cap_j).
 
 Production window counting selects a tier at runtime through
 ``repro.core.executor.WindowExecutor`` (see ``docs/executor.md``): the
 estimators call the executor, the executor calls these primitives at
-bucketed static capacities.  All four tiers produce identical integer-valued
+bucketed static capacities.  All tiers produce identical integer-valued
 counts, so tier choice never changes an estimate — only its speed.
 
 All device paths accumulate in float32 by default (exact below 2**24 per
@@ -45,6 +49,8 @@ __all__ = [
     "count_butterflies_dense",
     "count_butterflies_from_edges",
     "count_butterflies_tiled",
+    "count_butterflies_sparse",
+    "window_wedge_counts_np",
     "butterfly_support_dense",
     "count_caterpillars_np",
     "build_biadjacency",
@@ -56,14 +62,57 @@ __all__ = [
 # numpy oracle tier (host, always exact, independent algorithm)
 # ---------------------------------------------------------------------------
 
+_MAX_ID = np.int64(1) << 32  # ids pack two-per-int64 key: each must fit 32 bits
+
+
+def _check_id_range_np(e: np.ndarray) -> None:
+    """Host paths pack (a, b) id pairs into one int64 sort key (``a << 32 |
+    b``).  The key is injective for ids in ``[0, 2**32)`` (numpy's int64
+    shift wraps deterministically, mapping a/b onto disjoint halves of the
+    64-bit pattern), but an id >= 2**32 wraps onto another id's key and a
+    negative id smears its sign bits over the other half — either silently
+    *collides* distinct pairs and corrupts counts.  Fail loudly instead."""
+    if e.size and (int(e.min()) < 0 or int(e.max()) >= _MAX_ID):
+        raise ValueError(
+            "vertex ids must be in [0, 2**32): got range "
+            f"[{int(e.min())}, {int(e.max())}] — ids outside it silently "
+            "collide in the packed int64 wedge/edge keys; relabel to a "
+            "compact id space first (e.g. np.unique(..., "
+            "return_inverse=True))")
+
+
 def _dedupe_edges_np(edges: np.ndarray) -> np.ndarray:
     """Drop duplicate (i, j) pairs, preserving nothing about order."""
     if edges.size == 0:
         return edges.reshape(0, 2).astype(np.int64)
     e = np.asarray(edges, dtype=np.int64)
-    key = e[:, 0] << 32 | (e[:, 1] & 0xFFFFFFFF)
+    _check_id_range_np(e)
+    key = e[:, 0] << 32 | e[:, 1]
     _, idx = np.unique(key, return_index=True)
     return e[np.sort(idx)]
+
+
+def _group_pairs_np(starts: np.ndarray, counts: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """All within-group index pairs (p, t) with p < t, fully vectorized.
+
+    ``starts``/``counts`` describe contiguous groups of a sorted array; every
+    element pairs with each *earlier* element of its group (rank r emits r
+    pairs), so a group of size c emits C(c, 2) pairs total.  This replaces
+    the per-hub ``np.triu_indices`` Python loop — the pair-emission cost is
+    one ``repeat`` + arithmetic over the output size.
+    """
+    m = int(counts.sum())
+    start_pos = np.repeat(starts, counts)                    # group start per row
+    r = np.arange(m, dtype=np.int64) - start_pos             # rank within group
+    total = int(r.sum())
+    if total == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    t = np.repeat(np.arange(m, dtype=np.int64), r)           # later element
+    off = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(r) - r, r)
+    p = start_pos[t] + off                                   # earlier element
+    return p, t
 
 
 def count_butterflies_np(edges: np.ndarray) -> int:
@@ -73,7 +122,10 @@ def count_butterflies_np(edges: np.ndarray) -> int:
     ignored, mirroring the paper's duplicate-insertion semantics.  Algorithm:
     every j-vertex of degree d contributes C(d, 2) wedges (i1, i2); butterflies
     are pairs of wedges with identical endpoints:  B = sum_p C(mult_p, 2).
-    This is the same arithmetic as Alg. 1 but organised for vectorised numpy.
+    This is the same arithmetic as Alg. 1 but organised for vectorised numpy —
+    wedge emission is one vectorized ``repeat`` (:func:`_group_pairs_np`),
+    never a Python loop over hubs.  Ids must lie in ``[0, 2**32)`` (raises
+    otherwise: larger ids would collide in the packed int64 wedge keys).
     """
     e = _dedupe_edges_np(np.asarray(edges))
     if e.shape[0] < 4:
@@ -82,20 +134,14 @@ def count_butterflies_np(edges: np.ndarray) -> int:
     order = np.lexsort((e[:, 0], e[:, 1]))
     i_sorted = e[order, 0]
     j_sorted = e[order, 1]
-    # Wedge endpoints for each j-group: all pairs within the group.
-    # Emit pairs groupwise without a Python loop over hubs where possible.
-    uniq_j, starts = np.unique(j_sorted, return_index=True)
+    _, starts = np.unique(j_sorted, return_index=True)
     counts = np.diff(np.append(starts, j_sorted.shape[0]))
-    pair_key: list[np.ndarray] = []
-    for s, c in zip(starts, counts):
-        if c < 2:
-            continue
-        grp = i_sorted[s : s + c]
-        iu, iv = np.triu_indices(c, k=1)
-        pair_key.append(grp[iu].astype(np.int64) << 32 | grp[iv].astype(np.int64))
-    if not pair_key:
+    # Wedge endpoints for each j-group: all pairs within the group.  In-group
+    # i is sorted ascending and deduped, so i_sorted[p] < i_sorted[t].
+    p, t = _group_pairs_np(starts, counts)
+    if p.size == 0:
         return 0
-    keys = np.concatenate(pair_key)
+    keys = i_sorted[p] << 32 | i_sorted[t]
     _, mult = np.unique(keys, return_counts=True)
     mult = mult.astype(np.int64)
     return int((mult * (mult - 1) // 2).sum())
@@ -112,49 +158,26 @@ def enumerate_butterflies_np(edges: np.ndarray) -> np.ndarray:
         return np.zeros((0, 4), dtype=np.int64)
     order = np.lexsort((e[:, 0], e[:, 1]))
     i_sorted, j_sorted = e[order, 0], e[order, 1]
-    uniq_j, starts = np.unique(j_sorted, return_index=True)
+    _, starts = np.unique(j_sorted, return_index=True)
     counts = np.diff(np.append(starts, j_sorted.shape[0]))
-    wedge_i1, wedge_i2, wedge_j = [], [], []
-    for jj, s, c in zip(uniq_j, starts, counts):
-        if c < 2:
-            continue
-        grp = np.sort(i_sorted[s : s + c])
-        iu, iv = np.triu_indices(c, k=1)
-        wedge_i1.append(grp[iu])
-        wedge_i2.append(grp[iv])
-        wedge_j.append(np.full(iu.shape[0], jj, dtype=np.int64))
-    if not wedge_i1:
+    # wedges (i1 < i2, hub j), emitted with the vectorized pair kernel
+    p, t = _group_pairs_np(starts, counts)
+    if p.size == 0:
         return np.zeros((0, 4), dtype=np.int64)
-    w1 = np.concatenate(wedge_i1)
-    w2 = np.concatenate(wedge_i2)
-    wj = np.concatenate(wedge_j)
+    w1, w2, wj = i_sorted[p], i_sorted[t], j_sorted[t]
+    # butterflies: pairs of wedges sharing (i1, i2); sorting by (key, j)
+    # keeps each key-group's hubs ascending, so the emitted (j1, j2) pairs
+    # satisfy j1 < j2 (hubs within a key group are distinct after dedupe)
     key = w1 << 32 | w2
-    order2 = np.argsort(key, kind="stable")
+    order2 = np.lexsort((wj, key))
     key_s, wj_s = key[order2], wj[order2]
     w1_s, w2_s = w1[order2], w2[order2]
-    uniq_k, kstarts = np.unique(key_s, return_index=True)
+    _, kstarts = np.unique(key_s, return_index=True)
     kcounts = np.diff(np.append(kstarts, key_s.shape[0]))
-    out = []
-    for s, c in zip(kstarts, kcounts):
-        if c < 2:
-            continue
-        js = np.sort(wj_s[s : s + c])
-        ju, jv = np.triu_indices(c, k=1)
-        n = ju.shape[0]
-        out.append(
-            np.stack(
-                [
-                    np.full(n, w1_s[s]),
-                    np.full(n, w2_s[s]),
-                    js[ju],
-                    js[jv],
-                ],
-                axis=1,
-            )
-        )
-    if not out:
+    p2, t2 = _group_pairs_np(kstarts, kcounts)
+    if p2.size == 0:
         return np.zeros((0, 4), dtype=np.int64)
-    return np.concatenate(out, axis=0)
+    return np.stack([w1_s[t2], w2_s[t2], wj_s[p2], wj_s[t2]], axis=1)
 
 
 def butterfly_support_np(edges: np.ndarray, n_i: int, n_j: int) -> tuple[np.ndarray, np.ndarray]:
@@ -215,7 +238,10 @@ def count_butterflies_dense(adj: jax.Array) -> jax.Array:
     """B = sum_{u<v} C((A A^T)_uv, 2) on a dense biadjacency.
 
     Loops over whichever side is smaller (the paper iterates the lower-degree
-    side; the Gram trick makes that a transpose decision).
+    side; the Gram trick makes that a transpose decision).  One full Gram
+    GEMM beats triangle-blocked variants in practice: backends schedule a
+    single large matmul far better than several small ones, so the 25%
+    flop saving of a 2-block triangle loses to GEMM efficiency.
     """
     a = adj.astype(_acc_dtype())
     if a.shape[0] > a.shape[1]:
@@ -293,6 +319,124 @@ def count_butterflies_tiled(adj: jax.Array, tile: int = 512) -> jax.Array:
 
     total, _ = jax.lax.scan(outer, jnp.zeros((), acc), jnp.arange(n_blocks))
     return total
+
+
+# ---------------------------------------------------------------------------
+# sparse tier (wedge sort + segment_sum; never builds the biadjacency)
+# ---------------------------------------------------------------------------
+
+def count_butterflies_sparse(
+    edge_i: jax.Array,
+    edge_j: jax.Array,
+    valid: jax.Array,
+    n_i: int,
+    n_j: int,
+    wedge_cap: int,
+) -> jax.Array:
+    """Butterfly count from a padded edge list via wedge aggregation —
+    the paper's sort-side formulation (Wang et al.'s wedge iteration) in
+    pure JAX, O(cap_e + wedge_cap) memory instead of O(n_i * n_j).
+
+    Schedule (all static shapes, fully vmap/shard_map-compatible):
+
+    1. sort edges by ``(j, i)`` — invalid lanes carry sentinel ids ``(n_j,
+       n_i)`` so they group last — and invalidate exact duplicates;
+    2. a second stable sort compacts the surviving edges back into
+       contiguous j-groups (dup lanes rejoin the sentinel group);
+    3. every edge of in-group rank ``r`` owes ``r`` wedges, one per earlier
+       group member; an inclusive rank cumsum + ``searchsorted`` scatters
+       the wedge slots ``[0, wedge_cap)`` to their ``(earlier, later)``
+       edge pair — in-group ``i`` is ascending and deduped, so the wedge
+       endpoints satisfy ``i1 < i2`` by construction;
+    4. sort wedges by ``(i1, i2)`` and aggregate each run of equal keys:
+       summing every live wedge's within-run rank is exactly
+       ``sum_runs C(mult, 2)`` — the segment-sum of wedge multiplicities
+       with the C(w, 2) epilogue algebraically folded in, computed with a
+       cummax instead of a segment scatter (scatters are the slowest
+       primitive on every XLA backend).
+
+    Both sort phases pack their id pair into a single int32 key — XLA's
+    variadic multi-key sort lowers to a generic comparator loop that is
+    several times slower than the single-key path.
+
+    ``wedge_cap`` must bound the window's wedge count (the executor computes
+    it host-side per bucket and rounds it up the capacity ladder); dead
+    slots carry sentinel endpoints and contribute a zero multiplicity.
+    """
+    if wedge_cap < 1:
+        raise ValueError("wedge_cap must be >= 1")
+    # both sort phases pack their two ids into ONE int32 key (XLA's variadic
+    # two-key sort lowers to a slow generic comparator; a single-key sort is
+    # several times faster on every backend) — the packing needs headroom
+    if (n_i + 2) * (n_j + 2) >= 2**31 or (n_i + 2) * (n_i + 2) >= 2**31:
+        raise ValueError(
+            "sparse tier requires (n_i + 2) * (max(n_i, n_j) + 2) < 2**31 "
+            "to pack sort keys into int32; use the dense/tiled tiers for "
+            "id spaces this large")
+    acc = _acc_dtype()
+    cap_e = edge_i.shape[0]
+    pos = jnp.arange(cap_e, dtype=jnp.int32)
+    first = pos == 0
+    ii = jnp.where(valid, edge_i, n_i).astype(jnp.int32)
+    jj = jnp.where(valid, edge_j, n_j).astype(jnp.int32)
+    # sort edges by packed (j, i); invalid lanes carry (n_j, n_i) => last
+    span_i = jnp.int32(n_i + 2)
+    ekey = jnp.sort(jj * span_i + ii)
+    dup = (~first) & (ekey == jnp.roll(ekey, 1))
+    sent = jnp.int32(n_j) * span_i              # every live key sorts below
+    ekey = jnp.sort(jnp.where(dup, sent + ii, ekey))  # compact dups out
+    jj = ekey // span_i
+    ii = ekey - jj * span_i
+    live = jj < n_j
+    # in-group rank r: distance to the group's first position (cummax of
+    # group-start markers); sentinel lanes rank 0 — they owe no wedges
+    is_start = first | (jj != jnp.roll(jj, 1))
+    start = jax.lax.cummax(jnp.where(is_start, pos, -1))
+    r = jnp.where(live, pos - start, 0)
+    cum_r = jnp.cumsum(r)                       # inclusive; total wedges last
+    total_w = cum_r[-1]
+    w = jnp.arange(wedge_cap, dtype=jnp.int32)
+    t = jnp.clip(jnp.searchsorted(cum_r, w, side="right"), 0, cap_e - 1)
+    t = t.astype(jnp.int32)
+    p = start[t] + (w - (cum_r[t] - r[t]))      # the earlier in-group edge
+    alive = w < total_w
+    i1 = jnp.where(alive, ii[jnp.clip(p, 0, cap_e - 1)], n_i)
+    i2 = jnp.where(alive, ii[t], n_i)
+    # aggregate wedge multiplicities: sort the packed (i1, i2) keys, then
+    # sum each live wedge's rank within its run of equal keys — a run of
+    # multiplicity m contributes 0 + 1 + ... + (m-1) = C(m, 2), which is
+    # exactly the per-key butterfly count, summed without a segment scatter
+    wkey = jnp.sort(i1 * span_i + i2)           # dead wedges (>= n_i*span) last
+    wpos = jnp.arange(wedge_cap, dtype=jnp.int32)
+    head = (wpos == 0) | (wkey != jnp.roll(wkey, 1))
+    wstart = jax.lax.cummax(jnp.where(head, wpos, -1))
+    wrank = jnp.where(wkey < jnp.int32(n_i) * span_i, wpos - wstart, 0)
+    return jnp.sum(wrank.astype(acc))
+
+
+def window_wedge_counts_np(edge_i: np.ndarray, edge_j: np.ndarray,
+                           valid: np.ndarray) -> np.ndarray:
+    """Deduped wedge count per window, host-side: ``sum_j C(d_j, 2)`` over
+    each window's valid lanes.  This is the quantity the executor's sparse
+    tier needs a static capacity for (and the sparse term of the auto
+    router's cost model).  ``edge_i``/``edge_j``/``valid`` are the padded
+    ``[n_windows, capacity]`` window tensors (compact non-negative ids).
+    """
+    ei = np.asarray(edge_i, dtype=np.int64)
+    ej = np.asarray(edge_j, dtype=np.int64)
+    v = np.asarray(valid, dtype=bool)
+    out = np.zeros(ei.shape[0], dtype=np.int64)
+    if ei.size == 0:
+        return out
+    span = max(int(ej.max()), 0) + 1
+    for k in range(ei.shape[0]):
+        i, j = ei[k][v[k]], ej[k][v[k]]
+        if i.size < 2:
+            continue
+        keys = np.unique(i * span + j)          # dedupe (i, j) pairs
+        d = np.bincount(keys % span)
+        out[k] = int((d * (d - 1) // 2).sum())
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -6,13 +6,20 @@ compact id-space capacity ``[n_i, n_j]`` — one giant biadjacency per window
 even when the window itself touches 100 vertices.  The executor instead:
 
 1. **Buckets** windows by their per-window compact sizes.  Each window's
-   ``(n_edges, n_i, n_j)`` is rounded up a geometric capacity ladder
-   (``align * growth**k``: 128, 256, 512, ...), and windows sharing a rung
-   form one bucket.  XLA compiles once per bucket shape — not per window,
-   and not at global capacity.
-2. **Batches** each bucket into a single ``lax.map`` dispatch through the
-   selected counting tier.  Peak device memory is one ``[cap_i, cap_j]``
-   bucket biadjacency (plus tile scratch), never the global ``n_i * n_j``.
+   ``n_edges`` is rounded up a geometric capacity ladder (``align *
+   growth**k``) and its id-space sizes ``(n_i, n_j)`` up a *linear* ladder
+   (multiples of ``align`` — they size the Gram quadratically, so
+   power-of-2 rungs there waste ~2x flops in padding); windows sharing all
+   rungs form one bucket.  XLA compiles once per bucket shape — not per
+   window, and not at global capacity.
+2. **Batches** each bucket through chunked-``vmap`` dispatch: a ``lax.map``
+   over *chunks* of ``vmap``'d windows (``chunk`` knob, default 32).  Within
+   a chunk every window counts in parallel (batched scatters and matmuls
+   instead of a sequential per-window walk); across chunks the schedule is
+   still streaming order, so peak device memory is bounded by
+   ``chunk * cap_i * cap_j`` (plus tile scratch) — never the global
+   ``n_i * n_j`` and never the whole bucket at once.  ``chunk=1`` recovers
+   the fully sequential ``lax.map`` schedule bit-for-bit.
 3. **Routes** through a selectable tier — the validation ladder of
    ``repro.core.butterfly``:
 
@@ -22,8 +29,14 @@ even when the window itself touches 100 vertices.  The executor instead:
    numpy     host wedge-hash oracle (`count_butterflies_np`), int64
    dense     jnp Gram (`count_butterflies_from_edges`), MXU matmul
    tiled     `count_butterflies_tiled` lax.scan over tile pairs
-   pallas    fused Pallas kernel (`butterfly_count_pallas`); interpret
-             mode on CPU hosts, Mosaic on TPU
+   pallas    window-batched Pallas kernel (window axis in the grid: one
+             launch per bucket chunk); interpret mode on CPU hosts,
+             Mosaic on TPU
+   sparse    `count_butterflies_sparse` wedge sort + rank aggregation;
+             O(cap_e + wedge_cap) memory, no biadjacency
+   auto      per-bucket cost-model router: ``sparse`` when the wedge-sort
+             work beats the dense Gram flops (see :func:`route_tier`),
+             ``dense`` otherwise
    ========  ==========================================================
 
 Every tier returns identical integer-valued counts (differential suite:
@@ -42,7 +55,7 @@ feed ``sgrapp_estimate`` unchanged.
 bucket's window axis can shard across devices: pass ``devices=N`` (or a
 prebuilt ``mesh=``) and every bucket batch is padded to a multiple of the
 shard count and dispatched through ``shard_map`` (window axis split over the
-mesh's data axes) composed with the same per-device ``lax.map`` schedule.
+mesh's data axes) composed with the same per-device chunked-vmap schedule.
 Each window is still counted whole on exactly one device by exactly the same
 per-window program, so sharded counts are bit-identical to the single-device
 path — verified by the multi-device differential cases in
@@ -58,6 +71,7 @@ route here.
 from __future__ import annotations
 
 import functools
+import math
 import weakref
 from dataclasses import dataclass, field
 
@@ -68,15 +82,48 @@ from .butterfly import (
     build_biadjacency,
     count_butterflies_from_edges,
     count_butterflies_np,
+    count_butterflies_sparse,
     count_butterflies_tiled,
+    window_wedge_counts_np,
 )
 from .windows import WindowBatch
 
 __all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket",
-           "run", "compiled_bucket_cache_info"]
+           "run", "route_tier", "bucket_capacity", "id_capacity",
+           "compiled_bucket_cache_info"]
 
-TIERS = ("numpy", "dense", "tiled", "pallas")
+TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto")
 MODES = ("tumbling", "sliding")
+
+# tiers that need a per-bucket wedge capacity (host-side wedge counting)
+_WEDGE_TIERS = ("sparse", "auto")
+
+
+def route_tier(cap_e: int, cap_i: int, cap_j: int, cap_w: int,
+               *, sort_cost: float = 96.0) -> str:
+    """The ``auto`` tier's per-bucket density cost model.
+
+    Dense counting pays the Gram matmul: ``cap_i * cap_j * min(cap_i,
+    cap_j)`` MXU flops per window (biadjacency scatter included — it is a
+    lower-order term).  Sparse counting pays sorts: ``cap_e log cap_e``
+    (edge sort) + ``cap_w log cap_w`` (wedge sort), each element costing
+    roughly ``sort_cost`` dense flops.  The default 96 is calibrated on
+    CI-class x86 hosts (XLA CPU sorts run ~6ns/element while the f32 Gram
+    streams ~70ps/flop; the same order holds on TPU, where sorts are
+    scalar-lane work and matmuls hit the MXU).  Route to ``sparse``
+    exactly when its modelled work is cheaper — sparse windows in big id
+    spaces (edges << cap_i * cap_j) go sparse, dense little windows keep
+    the matmul.
+    """
+    hi = max(cap_i, cap_j)
+    if (cap_i + 2) * (hi + 2) >= 2**31:
+        # beyond count_butterflies_sparse's int32 key-packing bound the
+        # sparse tier would refuse at trace time — never route into a crash
+        return "dense"
+    dense_flops = float(cap_i) * float(cap_j) * float(min(cap_i, cap_j))
+    sort_ops = (cap_e * max(math.log2(max(cap_e, 2)), 1.0)
+                + cap_w * max(math.log2(max(cap_w, 2)), 1.0))
+    return "sparse" if sort_cost * sort_ops < dense_flops else "dense"
 
 
 def bucket_capacity(n: int, *, align: int = 128, growth: int = 2) -> int:
@@ -88,14 +135,37 @@ def bucket_capacity(n: int, *, align: int = 128, growth: int = 2) -> int:
     return cap
 
 
+def id_capacity(n: int, *, align: int = 64) -> int:
+    """Smallest multiple of ``align`` >= max(n, 1): the *linear* ladder the
+    id-space capacities (cap_i / cap_j) climb.
+
+    Edge-lane capacity keeps the geometric ladder (:func:`bucket_capacity`)
+    — few rungs, few compilations — but id capacities size the Gram matmul
+    *quadratically*: a 130-vertex side on the power-of-2 ladder pays a
+    256-wide matmul, nearly 4x the flops of the 192 the linear ladder
+    picks.  The linear ladder has more rungs, but windows from one stream
+    cluster tightly in id-space size, so in practice it costs a handful of
+    extra compilations for a large cut in padding flops.
+    """
+    n = max(int(n), 1)
+    return -(-n // align) * align
+
+
 @dataclass(frozen=True)
 class Bucket:
-    """One static-shape compilation unit: same-capacity windows."""
+    """One static-shape compilation unit: same-capacity windows.
+
+    ``cap_w`` is the wedge capacity — the ladder rung over the bucket's
+    max per-window deduped wedge count.  It is only computed (non-zero) for
+    the ``sparse`` / ``auto`` tiers, where it sizes the wedge-sort scratch
+    and feeds the auto router's cost model.
+    """
 
     cap_e: int                      # edge-lane capacity
     cap_i: int                      # i-side id-space capacity
     cap_j: int                      # j-side id-space capacity
     windows: np.ndarray = field(compare=False)  # window indices in the batch
+    cap_w: int = 0                  # wedge capacity (sparse/auto tiers only)
 
     @property
     def n_windows(self) -> int:
@@ -131,13 +201,29 @@ class ExecutorResult:
 # full static configuration, so two executors with the same tier share code)
 # ---------------------------------------------------------------------------
 
-def _one_window_fn(tier: str, cap_i: int, cap_j: int, tile: int,
-                   block_i: int, block_k: int, interpret: bool):
-    """(edge_i, edge_j, valid) [cap_e] -> scalar count for ONE window at a
-    static ``(cap_i, cap_j)`` id-space capacity — the per-window body both
-    the single-device and the sharded dispatch map over.  Sharding the
-    window axis never changes what runs per window, which is why the two
-    paths are bit-identical."""
+def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
+                     tile: int, block_i: int, block_k: int, interpret: bool):
+    """(edge_i, edge_j, valid) [c, cap_e] -> [c] counts for one CHUNK of
+    windows at a static ``(cap_i, cap_j)`` id-space capacity — the batched
+    per-chunk body both the single-device and the sharded dispatch map over.
+    Sharding the window axis never changes what runs per window, which is
+    why the two paths are bit-identical.
+
+    ``dense`` / ``tiled`` / ``sparse`` are the vmap of their per-window
+    primitive (batched scatters, matmuls and sorts).  ``pallas`` dispatches
+    the window-batched kernel: the chunk's window axis rides in the Pallas
+    grid, so a chunk costs one kernel launch."""
+    if tier == "pallas":
+        from ..kernels.butterfly import butterfly_count_pallas_windows
+
+        def chunk(ei, ej, v):
+            adjs = jax.vmap(
+                lambda a, b, c: build_biadjacency(a, b, c, cap_i, cap_j)
+            )(ei, ej, v)
+            # butterfly_count_pallas_windows clamps blocks to the capacity
+            return butterfly_count_pallas_windows(
+                adjs, block_i=block_i, block_k=block_k, interpret=interpret)
+        return chunk
     if tier == "dense":
         def one(ei, ej, v):
             return count_butterflies_from_edges(ei, ej, v, cap_i, cap_j)
@@ -147,48 +233,73 @@ def _one_window_fn(tier: str, cap_i: int, cap_j: int, tile: int,
         def one(ei, ej, v):
             adj = build_biadjacency(ei, ej, v, cap_i, cap_j)
             return count_butterflies_tiled(adj, tile=eff_tile)
-    elif tier == "pallas":
-        from ..kernels.butterfly import butterfly_count_pallas
-
+    elif tier == "sparse":
         def one(ei, ej, v):
-            # butterfly_count_pallas clamps blocks to the bucket capacity
-            adj = build_biadjacency(ei, ej, v, cap_i, cap_j)
-            return butterfly_count_pallas(
-                adj, block_i=block_i, block_k=block_k, interpret=interpret)
+            return count_butterflies_sparse(ei, ej, v, cap_i, cap_j,
+                                            wedge_cap=max(cap_w, 1))
     else:  # pragma: no cover - guarded by WindowExecutor.__init__
         raise ValueError(f"unknown device tier {tier!r}")
-    return one
+    return jax.vmap(one)
+
+
+def _chunked_dispatch(chunk_fn, chunk: int):
+    """Chunked-vmap schedule: ``lax.map`` over chunks of ``chunk`` vmap'd
+    windows.  Peak memory is one chunk's worth of per-window state (e.g.
+    ``chunk * cap_i * cap_j`` for the biadjacency tiers); across chunks the
+    dispatch stays in streaming order.  A batch smaller than ``chunk``
+    dispatches as a single partial chunk; otherwise the window axis pads to
+    a chunk multiple (padding lanes are all-invalid windows that count 0
+    and are sliced off) and reshapes to [n_chunks, chunk, ...]."""
+    def run(ei, ej, v):
+        n = ei.shape[0]
+        c = max(1, min(chunk, n))
+        if n <= c:
+            return chunk_fn(ei, ej, v)
+        nc = -(-n // c)
+        pad = nc * c - n
+
+        def prep(a):
+            if pad:
+                a = jax.numpy.pad(
+                    a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+            return a.reshape((nc, c) + a.shape[1:])
+
+        out = jax.lax.map(lambda t: chunk_fn(*t),
+                          (prep(ei), prep(ej), prep(v)))
+        return out.reshape(nc * c)[:n]
+    return run
 
 
 @functools.lru_cache(maxsize=None)
-def _bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
-                    block_i: int, block_k: int, interpret: bool):
+def _bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int, tile: int,
+                    block_i: int, block_k: int, interpret: bool, chunk: int):
     """Jitted (edge_i, edge_j, valid) [B, cap_e] -> [B] counts at a static
-    ``(cap_i, cap_j)`` id-space capacity.  ``lax.map`` keeps the streaming
-    schedule (window k closes before k+1) and bounds peak memory at one
-    bucket-capacity biadjacency."""
-    one = _one_window_fn(tier, cap_i, cap_j, tile, block_i, block_k, interpret)
-    return jax.jit(lambda ei, ej, v: jax.lax.map(lambda t: one(*t), (ei, ej, v)))
+    ``(cap_i, cap_j)`` id-space capacity via the chunked-vmap schedule
+    (:func:`_chunked_dispatch`): windows count ``chunk`` at a time in one
+    batched dispatch, chunks run in streaming order, and peak memory stays
+    bounded at one chunk of bucket-capacity state."""
+    chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
+                                block_i, block_k, interpret)
+    return jax.jit(_chunked_dispatch(chunk_fn, chunk))
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, tile: int,
-                            block_i: int, block_k: int, interpret: bool,
-                            mesh, axes: tuple):
+def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int,
+                            tile: int, block_i: int, block_k: int,
+                            interpret: bool, chunk: int, mesh, axes: tuple):
     """Sharded twin of :func:`_bucket_counter`: the window axis is split over
     the mesh's data-parallel ``axes`` via shard_map, and each device runs the
-    single-device ``lax.map`` schedule over its shard.  Per-device peak
-    memory stays one bucket-capacity biadjacency; the batch dimension must be
+    identical chunked-vmap schedule over its shard.  Per-device peak memory
+    stays one chunk of bucket-capacity state; the batch dimension must be
     padded to a multiple of the shard count (padding lanes are all-invalid
     windows, which every tier counts as 0)."""
     from jax.sharding import PartitionSpec as P
 
     from ..distributed.sharding import shard_map_compat
 
-    one = _one_window_fn(tier, cap_i, cap_j, tile, block_i, block_k, interpret)
-
-    def local(ei, ej, v):
-        return jax.lax.map(lambda t: one(*t), (ei, ej, v))
+    chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
+                                block_i, block_k, interpret)
+    local = _chunked_dispatch(chunk_fn, chunk)
 
     batch = axes if len(axes) > 1 else axes[0]
     fn = shard_map_compat(local, mesh,
@@ -261,15 +372,35 @@ def _pad_window_axis(ei: np.ndarray, ej: np.ndarray, v: np.ndarray,
 
 
 class WindowExecutor:
-    """Counts closed windows through one of the four tiers (see module doc).
+    """Counts closed windows through one of the six tiers (see module doc).
 
     Parameters
     ----------
-    tier : "numpy" | "dense" | "tiled" | "pallas"
-    align, growth : capacity-ladder geometry (rungs ``align * growth**k``).
+    tier : "numpy" | "dense" | "tiled" | "pallas" | "sparse" | "auto"
+    align, growth : capacity-ladder geometry.  Edge-lane and wedge
+        capacities climb the geometric ladder ``align * growth**k``; the
+        id-space capacities (cap_i / cap_j) climb the *linear* ladder
+        (multiples of ``align``, :func:`id_capacity`) because they size the
+        Gram quadratically — power-of-2 rungs there nearly double the
+        matmul flops in padding.  Default ``align=64``; on TPU the kernels
+        re-pad to their (8, 128) minimum tiles internally.
+    chunk : chunked-vmap dispatch width — how many windows of a bucket count
+        in one batched dispatch.  Peak memory scales as ``chunk * cap_i *
+        cap_j`` for the biadjacency tiers (``chunk * (cap_e + cap_w)`` for
+        ``sparse``); ``chunk=1`` recovers the fully sequential per-window
+        schedule.  Counts are bit-identical for every chunk size.
+    snap : compile each bucket at its windows' actual max id-space sizes
+        rounded to a multiple of ``snap`` (and clamped to the rung), so
+        Gram padding tracks the data instead of the ladder.  0 disables
+        (compile at the rung itself) — the streaming engine does this
+        because its flushes see the stream piecewise and must never
+        re-trace at steady state, while a batch replay knows every
+        window's size up front.
     tile : tile edge for the ``tiled`` tier (clamped to bucket capacity).
     block_i, block_k : Pallas kernel block shape (clamped per bucket).
     interpret : Pallas interpreter mode; default auto (True off-TPU).
+    sort_cost : ``auto`` router knob — modelled cost of one sort element in
+        dense-Gram flops (see :func:`route_tier`).
     devices : int (first N of ``jax.devices()``) or device sequence —
         shard each bucket's window axis over a 1-D data mesh of those
         devices.  Counts stay bit-identical to the single-device path.
@@ -279,20 +410,28 @@ class WindowExecutor:
         ignores both knobs.
     """
 
-    def __init__(self, tier: str = "dense", *, align: int = 128,
-                 growth: int = 2, tile: int = 512, block_i: int = 256,
-                 block_k: int = 512, interpret: bool | None = None,
+    def __init__(self, tier: str = "dense", *, align: int = 64,
+                 growth: int = 2, chunk: int = 32, snap: int = 16,
+                 tile: int = 512, block_i: int = 256, block_k: int = 512,
+                 interpret: bool | None = None, sort_cost: float = 96.0,
                  devices=None, mesh=None):
         if tier not in TIERS:
             raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
         if align < 1 or growth < 2:
             raise ValueError("align must be >= 1 and growth >= 2")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if snap < 0:
+            raise ValueError("snap must be >= 0 (0 disables cap snapping)")
         self.tier = tier
         self.align = align
         self.growth = growth
+        self.chunk = chunk
+        self.snap = snap
         self.tile = tile
         self.block_i = block_i
         self.block_k = block_k
+        self.sort_cost = float(sort_cost)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = interpret
@@ -304,6 +443,10 @@ class WindowExecutor:
             self.mesh, self.shard_axes, self.n_shards = _resolve_window_mesh(
                 devices, mesh)
         self._plan_cache: tuple[weakref.ref, list[Bucket]] | None = None
+        # memoized online counter: (cap key) -> compiled fn; count_edges is
+        # the per-window online entry (adaptive_window_stream consumers)
+        # and must not redo the lru-cache hashing + tier routing per call
+        self._online_cache: tuple[tuple, object] | None = None
 
     # -- planning -----------------------------------------------------------
 
@@ -313,39 +456,101 @@ class WindowExecutor:
         repeated counts of the same batch skip the host-side grouping."""
         if self._plan_cache is not None and self._plan_cache[0]() is batch:
             return self._plan_cache[1]
-        groups: dict[tuple[int, int, int], list[int]] = {}
+        # sparse/auto need a static wedge capacity per bucket: count each
+        # window's deduped wedges host-side and ladder the rung into the
+        # bucket key, so a hub-heavy window never shares a (too small)
+        # wedge scratch with a flat one
+        wedges = (window_wedge_counts_np(batch.edge_i, batch.edge_j,
+                                         batch.valid)
+                  if self.tier in _WEDGE_TIERS else None)
+        groups: dict[tuple[int, int, int, int], list[int]] = {}
         for k in range(batch.n_windows):
             # every ladder rung clamps to the batch's own padded capacity:
             # a bucket must never exceed what the global path would have paid
             key = (
                 min(bucket_capacity(int(batch.n_edges[k]), align=self.align,
                                     growth=self.growth), batch.capacity),
-                min(bucket_capacity(int(batch.n_i_per_window[k]),
-                                    align=self.align, growth=self.growth),
-                    max(batch.n_i, 1)),
-                min(bucket_capacity(int(batch.n_j_per_window[k]),
-                                    align=self.align, growth=self.growth),
-                    max(batch.n_j, 1)),
+                min(id_capacity(int(batch.n_i_per_window[k]),
+                                align=self.align), max(batch.n_i, 1)),
+                min(id_capacity(int(batch.n_j_per_window[k]),
+                                align=self.align), max(batch.n_j, 1)),
+                (bucket_capacity(int(wedges[k]), align=self.align,
+                                 growth=self.growth)
+                 if wedges is not None else 0),
             )
             groups.setdefault(key, []).append(k)
-        buckets = [
-            Bucket(cap_e, cap_i, cap_j, np.asarray(idx, dtype=np.int64))
-            for (cap_e, cap_i, cap_j), idx in sorted(groups.items())
-        ]
+        if self.tier == "auto":
+            # cap_w never reaches a dense-routed program (the compile cache
+            # zeroes it), so dense-routed groups differing only in wedge
+            # rung would fragment into needless extra dispatches — fuse
+            # them, carrying the max rung so any later re-route to sparse
+            # still covers every member window.  Sparse-routed groups stay
+            # split: each keeps a tight wedge scratch.
+            fused: dict[tuple[int, int, int], int] = {}
+            wins: dict[tuple[int, int, int], list[int]] = {}
+            kept: dict[tuple[int, int, int, int], list[int]] = {}
+            for (cap_e, cap_i, cap_j, cap_w), idx in sorted(groups.items()):
+                if route_tier(cap_e, cap_i, cap_j, cap_w,
+                              sort_cost=self.sort_cost) == "dense":
+                    k3 = (cap_e, cap_i, cap_j)
+                    fused[k3] = max(fused.get(k3, 0), cap_w)
+                    wins.setdefault(k3, []).extend(idx)
+                else:
+                    kept[(cap_e, cap_i, cap_j, cap_w)] = idx
+            for k3, cap_w in fused.items():
+                kept[k3 + (cap_w,)] = sorted(wins[k3])
+            groups = kept
+        buckets = []
+        for (cap_e, cap_i, cap_j, cap_w), idx in sorted(groups.items()):
+            win = np.asarray(idx, dtype=np.int64)
+            if self.snap:
+                # the rung groups the windows; the compiled program runs at
+                # the group's *snapped* caps — max actual size rounded to a
+                # multiple of ``snap`` — so the Gram pays for the data, not
+                # the rung.  A whole batch is planned at once (maxes are
+                # known up front), so snapping costs no extra re-traces; the
+                # streaming engine disables it (snap=0) because its flushes
+                # see the stream piecewise and must never re-trace at
+                # steady state.
+                cap_e = min(id_capacity(
+                    int(batch.n_edges[win].max()), align=self.align), cap_e)
+                cap_i = min(id_capacity(
+                    int(batch.n_i_per_window[win].max()), align=self.snap),
+                    cap_i)
+                cap_j = min(id_capacity(
+                    int(batch.n_j_per_window[win].max()), align=self.snap),
+                    cap_j)
+            buckets.append(Bucket(cap_e, cap_i, cap_j, win, cap_w=cap_w))
         self._plan_cache = (weakref.ref(batch), buckets)
         return buckets
 
     # -- counting -----------------------------------------------------------
 
+    def bucket_tier(self, b: Bucket) -> str:
+        """The device tier a bucket actually runs: the configured tier, or
+        the cost model's pick (:func:`route_tier`) under ``auto``.  Routing
+        is host-side and depends only on the bucket's static capacities, so
+        single-device and sharded dispatch route identically."""
+        if self.tier != "auto":
+            return self.tier
+        return route_tier(b.cap_e, b.cap_i, b.cap_j, b.cap_w,
+                          sort_cost=self.sort_cost)
+
     def _counter(self, b: Bucket):
         """The compiled counter for one bucket's static configuration —
         sharded over the window mesh when one is configured."""
+        tier = self.bucket_tier(b)
+        # cap_w only shapes the sparse scratch: zero it out of the cache key
+        # for the biadjacency tiers so auto's dense buckets share programs
+        cap_w = b.cap_w if tier == "sparse" else 0
         if self.n_shards > 1:
             return _sharded_bucket_counter(
-                self.tier, b.cap_i, b.cap_j, self.tile, self.block_i,
-                self.block_k, self.interpret, self.mesh, self.shard_axes)
-        return _bucket_counter(self.tier, b.cap_i, b.cap_j, self.tile,
-                               self.block_i, self.block_k, self.interpret)
+                tier, b.cap_i, b.cap_j, cap_w, self.tile, self.block_i,
+                self.block_k, self.interpret, self.chunk, self.mesh,
+                self.shard_axes)
+        return _bucket_counter(tier, b.cap_i, b.cap_j, cap_w, self.tile,
+                               self.block_i, self.block_k, self.interpret,
+                               self.chunk)
 
     def window_counts(self, batch: WindowBatch) -> np.ndarray:
         """Exact in-window count per tumbling window, [n_windows] float64.
@@ -384,29 +589,54 @@ class WindowExecutor:
 
     def count_edges(self, edge_i, edge_j) -> float:
         """Count one online window from raw (possibly duplicated) edge ids —
-        the true-streaming entry (`adaptive_window_stream` consumers).
-        Relabels to a compact id space, picks the bucket, dispatches.
-        Always single-device: window sharding is data parallelism over the
-        batch axis, and an online window is a batch of one."""
+        the true-streaming entry (`adaptive_window_stream` consumers; the
+        engine's flushes go through :func:`pack_windows` +
+        :meth:`window_counts` instead).  Relabels to a compact id space,
+        picks the bucket, dispatches.  The resolved counter is memoized on
+        the window's capacity key, so a steady-state stream of same-rung
+        windows skips tier routing and counter lookup entirely.  Always
+        single-device: window sharding is data parallelism over the batch
+        axis, and an online window is a batch of one."""
         ei = np.asarray(edge_i, dtype=np.int64)
         ej = np.asarray(edge_j, dtype=np.int64)
         if ei.size == 0:
             return 0.0
-        if self.tier == "numpy":
-            return float(count_butterflies_np(np.stack([ei, ej], axis=1)))
+        # relabel BEFORE the tier branch: every tier (the host oracle
+        # included) must accept the same raw-id domain, so arbitrary int64
+        # ids never hit the oracle's packed-key range guard
         ui, inv_i = np.unique(ei, return_inverse=True)
         uj, inv_j = np.unique(ej, return_inverse=True)
+        if self.tier == "numpy":
+            return float(count_butterflies_np(np.stack([inv_i, inv_j],
+                                                       axis=1)))
         cap_e = bucket_capacity(len(ei), align=self.align, growth=self.growth)
-        cap_i = bucket_capacity(len(ui), align=self.align, growth=self.growth)
-        cap_j = bucket_capacity(len(uj), align=self.align, growth=self.growth)
+        cap_i = id_capacity(len(ui), align=self.align)
+        cap_j = id_capacity(len(uj), align=self.align)
+        cap_w = 0
+        if self.tier in _WEDGE_TIERS:
+            d = np.bincount(
+                np.unique(inv_i * (len(uj) + 1) + inv_j) % (len(uj) + 1))
+            cap_w = bucket_capacity(int((d * (d - 1) // 2).sum()),
+                                    align=self.align, growth=self.growth)
+        key = (cap_e, cap_i, cap_j, cap_w)
+        if self._online_cache is not None and self._online_cache[0] == key:
+            fn = self._online_cache[1]
+        else:
+            tier = self.tier
+            if tier == "auto":
+                tier = route_tier(cap_e, cap_i, cap_j, cap_w,
+                                  sort_cost=self.sort_cost)
+            fn = _bucket_counter(tier, cap_i, cap_j,
+                                 cap_w if tier == "sparse" else 0, self.tile,
+                                 self.block_i, self.block_k, self.interpret,
+                                 self.chunk)
+            self._online_cache = (key, fn)
         pi = np.zeros((1, cap_e), np.int32)
         pj = np.zeros((1, cap_e), np.int32)
         pv = np.zeros((1, cap_e), bool)
         pi[0, : len(ei)] = inv_i
         pj[0, : len(ej)] = inv_j
         pv[0, : len(ei)] = True
-        fn = _bucket_counter(self.tier, cap_i, cap_j, self.tile,
-                             self.block_i, self.block_k, self.interpret)
         return float(np.asarray(fn(pi, pj, pv))[0])
 
     # -- the single entry point ---------------------------------------------

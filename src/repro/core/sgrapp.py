@@ -20,7 +20,7 @@ reported metric's shape.
 Per-window exact counts route through the streaming window executor
 (:mod:`repro.core.executor`): windows are bucketed into a small set of static
 capacities (no window pays the global ``[n_i, n_j]`` biadjacency) and each
-bucket dispatches as one ``lax.map`` through the selected counting tier —
+bucket dispatches through the chunked-vmap schedule of the selected tier —
 ``numpy`` oracle, ``dense`` Gram, ``tiled`` scan, or the Pallas kernel.  All
 tiers return identical counts (``tests/test_tier_differential.py``), so
 ``tier=`` is a deployment knob.  The sequential alpha recurrence of sGrapp-x
@@ -245,7 +245,8 @@ def run_sgrapp(
     mesh=None,
 ) -> SGrappResult:
     """Algorithm 4 end-to-end.  ``tier`` selects the exact-count backend
-    (numpy | dense | tiled | pallas); ``devices=`` / ``mesh=`` shard the
+    (numpy | dense | tiled | pallas | sparse | auto); ``devices=`` /
+    ``mesh=`` shard the
     window axis across devices.  Estimates are bit-identical across tiers
     and device counts because every path returns the same integer-valued
     counts."""

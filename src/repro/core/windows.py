@@ -27,6 +27,10 @@ def window_ids(tau: np.ndarray, nt_w: int) -> np.ndarray:
     tau = np.asarray(tau)
     if tau.shape[0] == 0:
         return np.zeros(0, dtype=np.int64)
+    if not np.isfinite(tau).all():
+        # NaN compares False to everything, so it would slip past the order
+        # check below AND count as a fresh unique timestamp per record
+        raise ValueError("timestamps must be finite")
     if np.any(np.diff(tau) < 0):
         raise ValueError("timestamps must be non-decreasing (stream order)")
     if nt_w <= 0:
@@ -154,13 +158,16 @@ def pack_windows(
         return WindowBatch(z2, z2, z2.astype(bool), z1, z1, z1, 0, 0,
                            np.zeros(0, dtype=np.float64), z1, z1)
 
+    from .butterfly import _dedupe_edges_np
+
     per_edges: list[np.ndarray] = []
     for ew in per_window_edges:
         ew = np.asarray(ew, dtype=np.int64).reshape(-1, 2)
         if dedupe:
-            key = ew[:, 0] << 32 | (ew[:, 1] & 0xFFFFFFFF)
-            _, idx = np.unique(key, return_index=True)
-            ew = ew[np.sort(idx)]
+            # same keep-first-arrival packed-key dedupe as the host oracle,
+            # including its loud guard: raw ids >= 2**32 (or negative) would
+            # silently collide in the packed int64 key and corrupt counts
+            ew = _dedupe_edges_np(ew)
         per_edges.append(ew)
 
     n_edges = np.array([e.shape[0] for e in per_edges], dtype=np.int64)

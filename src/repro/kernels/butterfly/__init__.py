@@ -1,6 +1,7 @@
 from .ops import (
     butterfly_count_pallas,
     butterfly_count_pallas_batched,
+    butterfly_count_pallas_windows,
     butterfly_count_tiles,
 )
 from .ref import butterfly_count_ref
@@ -8,6 +9,7 @@ from .ref import butterfly_count_ref
 __all__ = [
     "butterfly_count_pallas",
     "butterfly_count_pallas_batched",
+    "butterfly_count_pallas_windows",
     "butterfly_count_tiles",
     "butterfly_count_ref",
 ]

@@ -25,7 +25,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["butterfly_pairs_kernel_call"]
+__all__ = ["butterfly_pairs_kernel_call", "butterfly_pairs_windows_kernel_call"]
+
+
+def _triangle_pairs(nu: int):
+    """Triangular tile-pair enumeration (u <= v) as scalar-prefetch arrays."""
+    upair, vpair = [], []
+    for u in range(nu):
+        for v in range(u, nu):
+            upair.append(u)
+            vpair.append(v)
+    return (jnp.asarray(upair, dtype=jnp.int32),
+            jnp.asarray(vpair, dtype=jnp.int32))
 
 
 def _kernel(upair_ref, vpair_ref, au_ref, av_ref, out_ref, acc_ref, *, nk: int, bi: int):
@@ -73,14 +84,7 @@ def butterfly_pairs_kernel_call(
         raise ValueError(f"adj {adj.shape} not padded to ({block_i},{block_k})")
     nu = n_i // block_i
     nk = n_j // block_k
-    # triangular tile-pair enumeration (u <= v)
-    upair, vpair = [], []
-    for u in range(nu):
-        for v in range(u, nu):
-            upair.append(u)
-            vpair.append(v)
-    upair = jnp.asarray(upair, dtype=jnp.int32)
-    vpair = jnp.asarray(vpair, dtype=jnp.int32)
+    upair, vpair = _triangle_pairs(nu)
     T = int(upair.shape[0])
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -102,3 +106,82 @@ def butterfly_pairs_kernel_call(
         interpret=interpret,
     )
     return fn(upair, vpair, adj, adj)[:, 0]
+
+
+def _windows_kernel(upair_ref, vpair_ref, au_ref, av_ref, out_ref, acc_ref,
+                    *, nk: int, bi: int):
+    """Window-batched twin of :func:`_kernel`: grid (B, T, nk) — the window
+    axis is the *outermost* grid dimension, so one launch covers a whole
+    bucket of same-capacity windows.  The accumulator scratch is still per
+    (window, tile-pair): nk is the innermost dimension, so the k==0 zeroing
+    and k==nk-1 epilogue bracket exactly one (b, t) accumulation run."""
+    t = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    au = au_ref[0].astype(jnp.float32)
+    av = av_ref[0].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        au, av, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        u = upair_ref[t]
+        v = vpair_ref[t]
+        w = acc_ref[...]
+        pairs = w * (w - 1.0) * 0.5
+        row = jax.lax.broadcasted_iota(jnp.int32, (bi, bi), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (bi, bi), 1)
+        keep = (u * bi + row) < (v * bi + col)
+        out_ref[0, 0] = jnp.sum(jnp.where(keep, pairs, 0.0))
+
+
+def butterfly_pairs_windows_kernel_call(
+    adjs: jax.Array,
+    *,
+    block_i: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run the window-batched kernel over a [B, n_i, n_j] stack of padded
+    biadjacencies.  Returns per-window per-tile-pair partials [B, T] — one
+    kernel launch for the whole stack (window dimension in the grid), not
+    one launch per window.
+
+    Each ``adjs[b]`` must already be padded to multiples of
+    ``(block_i, block_k)``; all-zero (padding) windows contribute 0.
+    """
+    B, n_i, n_j = adjs.shape
+    if n_i % block_i or n_j % block_k:
+        raise ValueError(
+            f"adjs {adjs.shape} not padded to ({block_i},{block_k})")
+    nu = n_i // block_i
+    nk = n_j // block_k
+    upair, vpair = _triangle_pairs(nu)
+    T = int(upair.shape[0])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_i, block_k),
+                         lambda b, t, k, up, vp: (b, up[t], k)),
+            pl.BlockSpec((1, block_i, block_k),
+                         lambda b, t, k, up, vp: (b, vp[t], k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, t, k, up, vp: (b, t)),
+        scratch_shapes=[pltpu.VMEM((block_i, block_i), jnp.float32)],
+    )
+    import functools
+
+    fn = pl.pallas_call(
+        functools.partial(_windows_kernel, nk=nk, bi=block_i),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(upair, vpair, adjs, adjs)

@@ -6,11 +6,12 @@ here that is a transpose decision), launches the kernel and reduces the
 per-tile partials.  On hosts (tests/CPU) pass ``interpret=True``; on TPU the
 same call lowers to Mosaic.
 
-``butterfly_count_pallas_batched`` is the streaming-window entry: a batch of
-same-capacity biadjacencies (one bucket of the window executor) is counted
-with a single ``lax.map`` over kernel launches, so the whole bucket compiles
-once and peak memory stays at one ``[cap_i, cap_j]`` adjacency plus the
-kernel's VMEM tiles.
+``butterfly_count_pallas_windows`` is the streaming-window entry: a batch of
+same-capacity biadjacencies (one chunk of a window-executor bucket) is
+counted by a *single* kernel launch with the window axis as the outermost
+grid dimension — one dispatch per bucket chunk, not one per window.
+``butterfly_count_pallas_batched`` (the historical stacked entry) now
+delegates to it.
 """
 from __future__ import annotations
 
@@ -20,11 +21,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .butterfly_kernel import butterfly_pairs_kernel_call
+from .butterfly_kernel import (
+    butterfly_pairs_kernel_call,
+    butterfly_pairs_windows_kernel_call,
+)
 
 __all__ = [
     "butterfly_count_pallas",
     "butterfly_count_pallas_batched",
+    "butterfly_count_pallas_windows",
     "butterfly_count_tiles",
 ]
 
@@ -69,6 +74,39 @@ def butterfly_count_pallas(
 @functools.partial(
     jax.jit, static_argnames=("block_i", "block_k", "interpret", "orient")
 )
+def butterfly_count_pallas_windows(
+    adjs: jax.Array,
+    *,
+    block_i: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+    orient: bool = True,
+) -> jax.Array:
+    """Count a [batch, n_i, n_j] stack of biadjacencies -> [batch] counts
+    with ONE kernel launch: the window axis rides in the Pallas grid
+    (outermost dimension), so a whole executor-bucket chunk costs a single
+    dispatch instead of a ``lax.map`` of per-window launches.
+
+    Orientation and block clamping are static per stack — every window in a
+    bucket shares the same capacity, so the same transpose decision the
+    per-window kernel would make applies stack-wide, keeping counts
+    bit-identical to per-window dispatch.
+    """
+    a = adjs
+    if orient and a.shape[1] > a.shape[2]:
+        a = a.transpose(0, 2, 1)
+    block_i = min(block_i, max(8, -(-a.shape[1] // 8) * 8))
+    block_k = min(block_k, max(128, -(-a.shape[2] // 128) * 128))
+    pi = (-a.shape[1]) % block_i
+    pk = (-a.shape[2]) % block_k
+    if pi or pk:
+        a = jnp.pad(a, ((0, 0), (0, pi), (0, pk)))
+    partials = butterfly_pairs_windows_kernel_call(
+        a, block_i=block_i, block_k=block_k, interpret=interpret
+    )
+    return jnp.sum(partials, axis=1)
+
+
 def butterfly_count_pallas_batched(
     adjs: jax.Array,
     *,
@@ -79,19 +117,13 @@ def butterfly_count_pallas_batched(
 ) -> jax.Array:
     """Count a [batch, n_i, n_j] stack of biadjacencies -> [batch] counts.
 
-    Stacked-adjacency entry for bucket-shaped batches (benchmarks and
-    validation; the window executor fuses adjacency construction into its
-    own ``lax.map`` to avoid materializing the stack).  Kernel launches run
-    sequentially (the streaming schedule: window k closes before k+1), each
-    fully parallel on-device.
+    Historical stacked-adjacency entry; now an alias of
+    :func:`butterfly_count_pallas_windows` (single grid-batched launch
+    rather than a ``lax.map`` of sequential per-window launches).
     """
-    return jax.lax.map(
-        lambda a: butterfly_count_pallas(
-            a, block_i=block_i, block_k=block_k, interpret=interpret,
-            orient=orient,
-        ),
-        adjs,
-    )
+    return butterfly_count_pallas_windows(
+        adjs, block_i=block_i, block_k=block_k, interpret=interpret,
+        orient=orient)
 
 
 def butterfly_count_tiles(

@@ -69,8 +69,9 @@ class StreamingSGrapp:
         ``truths=None`` alpha never moves and the engine is plain sGrapp
         (Algorithm 4).
     tol, step : Algorithm 5 band and adaptation step.
-    tier : counting tier (numpy | dense | tiled | pallas), or pass a
-        prebuilt ``executor=`` to share one across engines.
+    tier : counting tier (numpy | dense | tiled | pallas | sparse |
+        auto), or pass a prebuilt ``executor=`` to share one across
+        engines.
     devices, mesh : shard each flush's window axis across devices (forwarded
         to :class:`WindowExecutor`; counts stay bit-identical).
     flush_every : how many closed windows to accumulate before counting
@@ -88,7 +89,7 @@ class StreamingSGrapp:
                  tol: float = 0.05, step: float = 0.005,
                  tier: str = "dense", executor: WindowExecutor | None = None,
                  devices=None, mesh=None, flush_every: int = 32,
-                 drop_partial: bool = True, align: int = 128):
+                 drop_partial: bool = True, align: int = 64):
         if nt_w <= 0:
             raise ValueError("nt_w must be positive")
         if flush_every < 1:
@@ -106,8 +107,12 @@ class StreamingSGrapp:
         self.flush_every = int(flush_every)
         self.drop_partial = bool(drop_partial)
         self.align = int(align)
+        # snap=0: a flush sees the stream piecewise, so bucket programs
+        # compile at ladder rungs — stable shapes, no steady-state re-trace
+        # (test_flush_reuses_compiled_buckets pins this); batch replay
+        # executors keep the default cap snapping instead
         self.executor = executor if executor is not None else WindowExecutor(
-            tier, align=align, devices=devices, mesh=mesh)
+            tier, align=align, snap=0, devices=devices, mesh=mesh)
         self._step_fn = estimator_step(self.tol, self.step)
 
         # -- open-window buffer (current, not-yet-closed window)
@@ -175,6 +180,11 @@ class StreamingSGrapp:
             raise ValueError("tau/edge_i/edge_j must be equal-length 1-D")
         if tau.size == 0:
             return 0
+        if not np.isfinite(tau).all():
+            # a NaN would alias the _NO_TAU sentinel, slip past the order
+            # check (NaN < x is False) and count as a new unique timestamp
+            # per record — reject it loudly, same contract as windowize
+            raise ValueError("timestamps must be finite")
         if np.any(np.diff(tau) < 0) or (
                 not np.isnan(self._last_tau) and tau[0] < self._last_tau):
             raise ValueError("timestamps must be non-decreasing (stream order)")

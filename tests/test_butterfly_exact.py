@@ -133,3 +133,66 @@ def test_caterpillars_nonnegative_and_bound():
     assert cats >= 0
     # each butterfly contains 4 caterpillars (three-paths)
     assert 4 * b <= cats or b == 0
+
+
+# -- id-range guard (packed int64 sort keys) ----------------------------------
+
+BUTTERFLY = [(0, 0), (0, 1), (1, 0), (1, 1)]
+
+
+@pytest.mark.parametrize("bad", [2**32, 2**33, 2**40, -1, -7])
+@pytest.mark.parametrize("col", [0, 1])
+def test_out_of_range_ids_raise_instead_of_colliding(bad, col):
+    """Ids >= 2**32 (or negative) would silently collide in the packed
+    int64 edge/wedge keys — e.g. (2**32 + 5, j) and (5, j) used to dedupe
+    to ONE edge.  The host tiers must refuse them loudly."""
+    extra = [bad, 3]
+    if col == 1:
+        extra = [3, bad]
+    e = np.asarray(BUTTERFLY + [tuple(extra)], dtype=np.int64)
+    for fn in (count_butterflies_np, enumerate_butterflies_np,
+               count_caterpillars_np):
+        with pytest.raises(ValueError, match="vertex ids"):
+            fn(e)
+
+
+def test_regression_large_ids_previously_collided():
+    """The exact collision the old 32-bit packing produced: i ids 2**32
+    apart masked to the same key, so one of two distinct edges vanished."""
+    collide = np.asarray([[2**32 + 5, 1], [5, 1], [5, 2]], dtype=np.int64)
+    with pytest.raises(ValueError):
+        count_butterflies_np(collide)
+
+
+def test_max_valid_ids_still_count():
+    """Ids just inside the 32-bit bound must keep working exactly — the
+    packed key is injective on the full [0, 2**32) range."""
+    top = 2**32 - 1
+    e = np.asarray([(0, 0), (0, top), (top, 0), (top, top)], dtype=np.int64)
+    assert count_butterflies_np(e) == 1
+    quads = enumerate_butterflies_np(e)
+    np.testing.assert_array_equal(quads, [[0, top, 0, top]])
+
+
+# -- vectorized oracle vs brute force -----------------------------------------
+
+def _brute_force_count(e):
+    """O(n_i^2 n_j^2) reference entirely independent of the oracle's
+    wedge/sort machinery."""
+    adj = {}
+    for i, j in e:
+        adj.setdefault(int(i), set()).add(int(j))
+    ids = sorted(adj)
+    total = 0
+    for a in range(len(ids)):
+        for b in range(a + 1, len(ids)):
+            common = len(adj[ids[a]] & adj[ids[b]])
+            total += common * (common - 1) // 2
+    return total
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_vectorized_oracle_matches_brute_force(seed):
+    e = random_bipartite(14, 11, 120, seed=seed, dup_frac=0.3)
+    assert count_butterflies_np(e) == _brute_force_count(e)
+    assert enumerate_butterflies_np(e).shape[0] == _brute_force_count(e)

@@ -270,3 +270,19 @@ def test_sharded_engine_bit_identical_to_replay():
                           devices=jax.device_count(), flush_every=3)
     assert eng.executor.n_shards == jax.device_count()
     assert_same_result(push_in_batches(eng, s, 29), ref)
+
+
+def test_push_rejects_non_finite_timestamps():
+    """A NaN tau would alias the engine's _NO_TAU sentinel, slip past the
+    non-decreasing check (NaN < x is False), and then let genuinely
+    out-of-order records through — same finite-timestamps contract as
+    windowize."""
+    eng = StreamingSGrapp(2, 0.95)
+    eng.push([10.0], [1], [2])
+    with pytest.raises(ValueError, match="finite"):
+        eng.push([np.nan], [1], [2])
+    with pytest.raises(ValueError, match="finite"):
+        eng.push([np.inf], [1], [2])
+    # the engine state is unpolluted: order validation still works
+    with pytest.raises(ValueError, match="non-decreasing"):
+        eng.push([1.0], [1], [2])

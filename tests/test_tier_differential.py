@@ -25,13 +25,15 @@ from repro.core.executor import (
     TIERS,
     WindowExecutor,
     bucket_capacity,
+    id_capacity,
+    route_tier,
     run as executor_run,
 )
 from repro.core.sgrapp import run_sgrapp, window_exact_counts
 from repro.core.windows import WindowBatch, windowize
 from repro.streams import synthetic_rating_stream
 
-DEVICE_TIERS = ("dense", "tiled", "pallas")
+DEVICE_TIERS = ("dense", "tiled", "pallas", "sparse", "auto")
 
 
 # -- adversarial snapshot construction ----------------------------------------
@@ -52,6 +54,7 @@ ADVERSARIAL = {
     "orientation_flip": rand_edges(150, 40, 400, seed=1),       # n_i > n_j
     "non_tile_multiple": rand_edges(13, 300, 350, seed=2),      # skinny
     "dense_random": rand_edges(30, 30, 500, seed=3),
+    "duplicate_heavy": rand_edges(12, 10, 600, seed=4),         # ~5x dup rate
 }
 
 
@@ -154,6 +157,109 @@ def test_bucket_caps_never_exceed_global_capacity():
         assert b.cap_j <= batch.n_j
     np.testing.assert_array_equal(ex.window_counts(batch),
                                   oracle_counts(batch))
+
+
+def test_id_capacity_linear_ladder():
+    assert id_capacity(0) == 64
+    assert id_capacity(1) == 64
+    assert id_capacity(64) == 64
+    assert id_capacity(65) == 128
+    assert id_capacity(130) == 192
+    assert id_capacity(5, align=8) == 8
+    assert id_capacity(9, align=8) == 16
+
+
+# -- chunked-vmap dispatch ----------------------------------------------------
+
+@pytest.mark.parametrize("tier", ("dense", "sparse", "pallas"))
+def test_chunk_sweep_bit_identical_to_sequential(tier):
+    """chunk=1 is the seed's fully sequential per-window ``lax.map``
+    schedule; every other chunk size (dividing, non-dividing, and larger
+    than any bucket) must reproduce its counts bit-for-bit — chunking is a
+    dispatch decision, never a semantics decision."""
+    batch = batch_of(ADVERSARIAL.values())
+    want = oracle_counts(batch)
+    seq = WindowExecutor(tier, align=8, chunk=1).window_counts(batch)
+    np.testing.assert_array_equal(seq, want)
+    for chunk in (2, 3, 5, 64):
+        got = WindowExecutor(tier, align=8, chunk=chunk).window_counts(batch)
+        np.testing.assert_array_equal(got, seq, err_msg=f"chunk={chunk}")
+
+
+def test_chunk_validates():
+    with pytest.raises(ValueError):
+        WindowExecutor("dense", chunk=0)
+
+
+# -- sparse tier + auto routing -----------------------------------------------
+
+def test_sparse_buckets_carry_wedge_capacity():
+    batch = batch_of(ADVERSARIAL.values())
+    ex = WindowExecutor("sparse", align=8)
+    for b in ex.plan(batch):
+        assert b.cap_w >= 1  # every sparse bucket sized for its wedges
+    np.testing.assert_array_equal(ex.window_counts(batch),
+                                  oracle_counts(batch))
+
+
+def test_route_tier_cost_model():
+    # few edges lost in a huge id space: wedge-sort work << Gram flops
+    assert route_tier(128, 2048, 2048, 256) == "sparse"
+    # dense little window: the matmul is cheaper than sorting the wedges
+    assert route_tier(512, 192, 192, 16384) == "dense"
+    # sort_cost knob moves the boundary
+    assert route_tier(512, 192, 192, 16384, sort_cost=1e-6) == "sparse"
+    # beyond the sparse tier's int32 key-packing bound the router must fall
+    # back to dense even though the cost model screams sparse — routing
+    # into a tier that refuses to trace would crash the auto path
+    assert route_tier(128, 50_000, 50_000, 256) == "dense"
+    assert route_tier(128, 50_000, 64, 256) == "dense"
+
+
+def test_auto_fuses_dense_routed_wedge_rungs():
+    """Dense-routed windows whose capacities differ only in wedge rung must
+    share one bucket — cap_w never reaches a dense program, so splitting on
+    it would only fragment dispatches."""
+    # same capacity rungs (align=8: cap_e 128, cap_i/j 32), wildly
+    # different wedge counts: two 29-hubs (~812 wedges) vs a flat random
+    # window (~90 wedges) — distinct wedge rungs by construction
+    hub = ([(i, 0) for i in range(29)] + [(i, 1) for i in range(29)]
+           + [(0, j) for j in range(2, 30)])
+    flat = rand_edges(29, 30, 90, seed=21)
+    batch = batch_of([hub, flat])
+    ex = WindowExecutor("auto", align=8, sort_cost=1e9)  # force all-dense
+    assert {ex.bucket_tier(b) for b in ex.plan(batch)} == {"dense"}
+    assert len(ex.plan(batch)) == 1, "dense-routed buckets fragmented"
+    np.testing.assert_array_equal(ex.window_counts(batch),
+                                  oracle_counts(batch))
+
+
+def test_auto_routes_per_bucket_and_matches_oracle():
+    """One batch holding both regimes: auto must route at least one bucket
+    to each side of the cost model and still match the oracle exactly."""
+    edge_lists = [
+        rand_edges(2000, 2000, 60, seed=11),   # sparse regime
+        rand_edges(2000, 1900, 80, seed=12),   # sparse regime
+        rand_edges(25, 25, 500, seed=13),      # dense regime
+    ]
+    batch = batch_of(edge_lists)
+    ex = WindowExecutor("auto")
+    routed = {ex.bucket_tier(b) for b in ex.plan(batch)}
+    assert routed == {"sparse", "dense"}
+    np.testing.assert_array_equal(ex.window_counts(batch),
+                                  oracle_counts(batch))
+
+
+def test_count_edges_memoizes_online_counter():
+    """Repeated online windows with the same capacity rung must reuse the
+    memoized counter (the streaming engine's flush path)."""
+    ex = WindowExecutor("dense", align=8)
+    e = np.asarray(ADVERSARIAL["dense_random"], dtype=np.int64)
+    want = count_butterflies_np(e)
+    assert ex.count_edges(e[:, 0], e[:, 1]) == want
+    key, fn = ex._online_cache
+    assert ex.count_edges(e[:, 0], e[:, 1]) == want
+    assert ex._online_cache[0] == key and ex._online_cache[1] is fn
 
 
 def test_take_subbatch_validates_capacity():

@@ -199,3 +199,26 @@ def test_lemma_4_3_interwindow_bounds():
 
 def test_mape_helper():
     assert mape(np.array([11.0]), np.array([10.0])) == pytest.approx(0.1)
+
+
+def test_windowize_rejects_out_of_range_ids():
+    """The packer's dedupe packs (i, j) into one int64 key; ids >= 2**31 (or
+    negative) used to silently collide — e.g. j and j + 2**32 deduped to ONE
+    edge and every tier undercounted.  It must refuse loudly, exactly like
+    the host oracle's guard."""
+    tau = np.zeros(4)
+    with pytest.raises(ValueError, match="vertex ids"):
+        windowize(tau, np.array([5, 5, 6, 6]),
+                  np.array([1, 1 + 2**32, 1, 1 + 2**32]), 1)
+    with pytest.raises(ValueError, match="vertex ids"):
+        windowize(tau, np.array([-3, 5, 6, 6]), np.array([1, 2, 1, 2]), 1)
+
+
+def test_windowize_rejects_non_finite_timestamps():
+    """NaN compares False to everything: it would slip past the stream-order
+    check and count as a fresh unique timestamp per record."""
+    e = np.array([1, 2, 3])
+    with pytest.raises(ValueError, match="finite"):
+        window_ids(np.array([0.0, np.nan, 1.0]), 1)
+    with pytest.raises(ValueError, match="finite"):
+        windowize(np.array([0.0, 1.0, np.inf]), e, e, 1)
