@@ -19,6 +19,15 @@ several micro-batch sizes, so batch-replay and streaming edges/sec are
 directly comparable (replayed windows and pushed windows produce
 bit-identical estimates, so the delta is pure ingestion overhead).
 
+``--multistream`` adds the multi-tenant serving sweep
+(:func:`run_multistream`): N independent streams served by one
+:class:`repro.streams.MultiStreamSGrapp` (tagged pushes, cross-stream
+co-batched executor flushes) vs the same N streams through N sequential
+dedicated single-stream engines.  Per-tenant estimates are asserted
+bit-identical between the two before timing, so the rows compare pure
+serving efficiency — the batched rows' win is dispatch amortization, not a
+different computation.
+
 ``--devices N`` adds a device-count sweep over the executor's sharded
 dispatch path (1, 2, 4, ... up to N).  On a CPU-only host pass it on the
 command line — the module forces ``--xla_force_host_platform_device_count``
@@ -57,11 +66,11 @@ from repro.core.executor import WindowExecutor
 from repro.core.fleet import fleet_run
 from repro.core.sgrapp import mape, run_sgrapp
 from repro.core.windows import window_bounds
-from repro.streams import StreamingSGrapp, bipartite_pa_stream
+from repro.streams import MultiStreamSGrapp, StreamingSGrapp, bipartite_pa_stream
 
 from .common import ground_truth_cumulative
 
-__all__ = ["run", "run_streaming"]
+__all__ = ["run", "run_streaming", "run_multistream"]
 
 
 def _timed(fn, *args) -> float:
@@ -236,6 +245,92 @@ def run_streaming(*, quick: bool = False, tier: str = "dense",
     return rows
 
 
+def run_multistream(*, quick: bool = False, tier: str = "dense",
+                    devices: int = 0, n_streams: int = 4) -> list[tuple]:
+    """Multi-tenant serving throughput: N independent streams through one
+    :class:`MultiStreamSGrapp` vs N sequential dedicated single-stream
+    engines on the identical streams.
+
+    The ingestion shape is a serving frontend's: one tagged wire stream,
+    records of all tenants interleaved round-robin, arriving in fixed-size
+    micro-batches.  The fleet ingests each tagged batch with one ``push``;
+    the dedicated engines each get their tenant's records carved out.  Both
+    run at ``flush_every=1`` — the lowest-latency setting, where every
+    closed window must be counted as soon as its batch arrives — which is
+    where co-batching is structural: the fleet counts ALL tenants' windows
+    that closed in a batch in ONE bucketed dispatch, the dedicated engines
+    pay one dispatch per tenant.  (At large ``flush_every`` both schedules
+    amortize dispatch and converge; the latency-throughput trade-off is the
+    single-stream engine's ``flush_every`` doc.)
+
+    Rows are ``multistream/batched_{tier}_n{N}_windows_per_s`` and
+    ``multistream/sequential_{tier}_n{N}_windows_per_s`` (us = total wall
+    time, derived = aggregate closed-windows/s) plus an untimed
+    ``multistream/batched_speedup_...`` row carrying the ratio.  The warmup
+    pass asserts every tenant's estimates are bit-identical between the two
+    schedules, so the comparison is apples-to-apples by construction.
+    """
+    rows = []
+    n = 8_000 if quick else 20_000
+    ntw, alpha, mb, flush_every = 120, 0.95, 256, 1
+    streams = [bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5,
+                                   seed=3 + s) for s in range(n_streams)]
+    # one tagged wire stream: all tenants' records, round-robin interleaved
+    sid = np.concatenate([np.full(len(s), k, dtype=np.int64)
+                          for k, s in enumerate(streams)])
+    tau = np.concatenate([s.tau for s in streams])
+    ei = np.concatenate([s.edge_i for s in streams])
+    ej = np.concatenate([s.edge_j for s in streams])
+    order = np.argsort(np.concatenate([np.arange(len(s)) for s in streams]),
+                       kind="stable")
+    sid, tau, ei, ej = sid[order], tau[order], ei[order], ej[order]
+
+    import jax
+
+    eng_devices = (min(devices, jax.device_count())
+                   if devices > 1 and jax.device_count() > 1 else None)
+
+    def sequential():
+        out = []
+        for s in streams:
+            eng = StreamingSGrapp(ntw, alpha, tier=tier,
+                                  flush_every=flush_every,
+                                  devices=eng_devices)
+            for a in range(0, len(s), mb):
+                eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb],
+                         s.edge_j[a:a + mb])
+            out.append(eng.finalize())
+        return out
+
+    def batched():
+        eng = MultiStreamSGrapp(n_streams, ntw, alpha, tier=tier,
+                                flush_every=flush_every, devices=eng_devices)
+        step = n_streams * mb  # same records per arriving batch as N x mb
+        for a in range(0, len(sid), step):
+            eng.push(sid[a:a + step], tau[a:a + step], ei[a:a + step],
+                     ej[a:a + step])
+        return eng.finalize()
+
+    # warm every bucket shape + pin the bit-identity contract before timing
+    ref, got = sequential(), batched()
+    for s in range(n_streams):
+        np.testing.assert_array_equal(got[s].estimates, ref[s].estimates)
+    n_windows = sum(len(r.estimates) for r in ref)
+
+    dt_b = min(_timed(batched) for _ in range(3))
+    dt_s = min(_timed(sequential) for _ in range(3))
+    rows.append((f"multistream/batched_{tier}_n{n_streams}_windows_per_s",
+                 dt_b * 1e6,
+                 f"{n_windows / dt_b:.0f} ({n_windows} windows co-batched, "
+                 f"flush_every={flush_every})"))
+    rows.append((f"multistream/sequential_{tier}_n{n_streams}_windows_per_s",
+                 dt_s * 1e6,
+                 f"{n_windows / dt_s:.0f} ({n_streams} dedicated engines)"))
+    rows.append((f"multistream/batched_speedup_{tier}_n{n_streams}", 0.0,
+                 f"{dt_s / dt_b:.2f}x"))
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -253,6 +348,13 @@ def main() -> None:
     ap.add_argument("--streaming-only", action="store_true",
                     help="skip the base throughput sweep (for per-tier "
                          "streaming legs in CI: implies --streaming)")
+    ap.add_argument("--multistream", action="store_true",
+                    help="add the multi-tenant serving sweep (N streams "
+                         "batched through one MultiStreamSGrapp vs N "
+                         "sequential dedicated engines)")
+    ap.add_argument("--multistream-only", action="store_true",
+                    help="run only the multi-tenant sweep (CI leg: implies "
+                         "--multistream, skips the other sweeps)")
     ap.add_argument("--tier", default="dense",
                     help="counting tier for the streaming sweep "
                          "(numpy | dense | tiled | pallas | sparse | auto)")
@@ -265,20 +367,28 @@ def main() -> None:
     args = ap.parse_args()
     sfx = args.artifact_suffix
     print("name,us_per_call,derived")
-    if not args.streaming_only:
+    if not (args.streaming_only or args.multistream_only):
         rows = run(quick=args.quick, devices=args.devices)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         if not args.no_json:
             write_bench_json(f"BENCH_throughput{sfx}.json", rows,
                              devices=args.devices, quick=args.quick)
-    if args.streaming or args.streaming_only:
+    if (args.streaming or args.streaming_only) and not args.multistream_only:
         srows = run_streaming(quick=args.quick, tier=args.tier,
                               devices=args.devices)
         for name, us, derived in srows:
             print(f"{name},{us:.1f},{derived}")
         if not args.no_json:
             write_bench_json(f"BENCH_streaming{sfx}.json", srows,
+                             devices=args.devices, quick=args.quick)
+    if args.multistream or args.multistream_only:
+        mrows = run_multistream(quick=args.quick, tier=args.tier,
+                                devices=args.devices)
+        for name, us, derived in mrows:
+            print(f"{name},{us:.1f},{derived}")
+        if not args.no_json:
+            write_bench_json(f"BENCH_multistream{sfx}.json", mrows,
                              devices=args.devices, quick=args.quick)
 
 

@@ -18,8 +18,19 @@ a new tier leg) are *reported* as ``new row`` — visible in the CI log so a
 fresh ``--update-baseline`` commit is an informed decision — but never fail
 the gate.
 
+The reverse direction **does** fail the gate: a baseline row that this
+fresh run was expected to produce but didn't is a ``stale row`` — a bench
+leg that silently stopped running (a renamed row, a dropped sweep, an
+early-exiting bench) would otherwise pass CI forever.  Expectation is
+scoped by provenance: ``--update-baseline`` records which ``BENCH_*.json``
+file (and which bench mode, quick vs full) contributed each row, so gating
+``BENCH_streaming.json`` never demands rows that only the throughput or
+per-tier legs produce.  Legacy baseline entries (bare numbers, no recorded
+source) gate on slowdown only and are never stale-checked.
+
 ``--update-baseline`` rewrites the baseline from the fresh JSON instead of
-gating (commit the result; see README "Benchmark artifacts and the
+gating — dropping this file's now-stale rows and recording provenance for
+the fresh ones (commit the result; see README "Benchmark artifacts and the
 regression gate").
 """
 from __future__ import annotations
@@ -31,7 +42,7 @@ import os
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "baseline.json")
 
-__all__ = ["gate", "new_rows", "update_baseline"]
+__all__ = ["gate", "new_rows", "stale_rows", "update_baseline"]
 
 
 def _load_rows(path: str) -> dict[str, float]:
@@ -47,18 +58,65 @@ def _load_rows(path: str) -> dict[str, float]:
     }
 
 
-def update_baseline(fresh_path: str, baseline_path: str = DEFAULT_BASELINE) -> str:
-    """Rewrite the committed baseline (name -> us_per_call) from a fresh
-    ``BENCH_*.json``; merges over existing entries so multiple bench files
-    can contribute rows."""
-    base: dict[str, float] = {}
-    if os.path.exists(baseline_path):
-        with open(baseline_path) as f:
-            base = json.load(f)
-    base.update(_load_rows(fresh_path))
-    with open(baseline_path, "w") as f:
-        json.dump(dict(sorted(base.items())), f, indent=1)
+def _load_baseline(path: str) -> dict[str, dict]:
+    """Normalized baseline entries ``{key: {"us": float, "source": str|None}}``.
+
+    Two on-disk value formats coexist: a bare number (legacy, provenance
+    unknown — gated on slowdown, never stale-checked) and
+    ``{"us_per_call": ..., "source": "BENCH_xxx.json"}`` (written by
+    ``--update-baseline`` since the stale-row check landed)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        base = json.load(f)
+    out = {}
+    for key, val in base.items():
+        if isinstance(val, dict):
+            out[key] = {"us": float(val["us_per_call"]),
+                        "source": val.get("source")}
+        else:
+            out[key] = {"us": float(val), "source": None}
+    return out
+
+
+def _dump_baseline(entries: dict[str, dict], path: str) -> None:
+    disk = {
+        key: ({"us_per_call": e["us"], "source": e["source"]}
+              if e["source"] is not None else e["us"])
+        for key, e in entries.items()
+    }
+    with open(path, "w") as f:
+        json.dump(dict(sorted(disk.items())), f, indent=1)
         f.write("\n")
+
+
+def _fresh_mode(fresh: dict[str, float]) -> bool | None:
+    """Whether the fresh run is a quick run (every row of one run shares the
+    mode); None when the file has no rows."""
+    for key in fresh:
+        return key.endswith("@quick")
+    return None
+
+
+def update_baseline(fresh_path: str, baseline_path: str = DEFAULT_BASELINE) -> str:
+    """Rewrite the committed baseline (name -> us_per_call + source) from a
+    fresh ``BENCH_*.json``; merges over existing entries so multiple bench
+    files can contribute rows, and drops entries this file previously
+    contributed (same source, same mode) that the fresh run no longer
+    produces — the baseline twin of the stale-row check."""
+    base = _load_baseline(baseline_path)
+    fresh = _load_rows(fresh_path)
+    source = os.path.basename(fresh_path)
+    quick = _fresh_mode(fresh)
+    base = {
+        key: e for key, e in base.items()
+        if not (e["source"] == source
+                and key.endswith("@quick") == quick
+                and key not in fresh)
+    }
+    for key, us in fresh.items():
+        base[key] = {"us": us, "source": source}
+    _dump_baseline(base, baseline_path)
     return baseline_path
 
 
@@ -68,30 +126,50 @@ def new_rows(fresh_path: str, baseline_path: str = DEFAULT_BASELINE
     new tier legs).  These never gate — they are surfaced so the operator
     knows the baseline is due an ``--update-baseline`` refresh."""
     fresh = _load_rows(fresh_path)
-    base: dict[str, float] = {}
-    if os.path.exists(baseline_path):
-        with open(baseline_path) as f:
-            base = json.load(f)
+    base = _load_baseline(baseline_path)
     return [name for name, us in sorted(fresh.items())
             if us > 0 and name not in base]
 
 
+def stale_rows(fresh_path: str, baseline_path: str = DEFAULT_BASELINE
+               ) -> list[str]:
+    """Baseline rows this fresh run was expected to produce but didn't: the
+    recorded source file matches, the bench mode (quick vs full) matches,
+    and the row is absent from the fresh run.  A silently dropped bench leg
+    shows up here instead of vanishing from CI unnoticed."""
+    fresh = _load_rows(fresh_path)
+    base = _load_baseline(baseline_path)
+    source = os.path.basename(fresh_path)
+    quick = _fresh_mode(fresh)
+    return sorted(
+        key for key, e in base.items()
+        if e["source"] == source
+        and (quick is None or key.endswith("@quick") == quick)
+        and key not in fresh)
+
+
 def gate(fresh_path: str, baseline_path: str = DEFAULT_BASELINE,
          *, max_slowdown: float = 2.0) -> list[str]:
-    """Returns the list of violation messages (empty = gate passes)."""
+    """Returns the list of violation messages (empty = gate passes):
+    per-row slowdowns beyond ``max_slowdown``, plus stale rows (baseline
+    rows this file was expected to reproduce but didn't)."""
     fresh = _load_rows(fresh_path)
-    with open(baseline_path) as f:
-        base = json.load(f)
+    base = _load_baseline(baseline_path)
     violations = []
     for name, us in sorted(fresh.items()):
-        base_us = base.get(name)
-        if base_us is None or base_us <= 0 or us <= 0:
+        entry = base.get(name)
+        if entry is None or entry["us"] <= 0 or us <= 0:
             continue  # new row or non-timing row: never gates
-        ratio = us / base_us
+        ratio = us / entry["us"]
         if ratio > max_slowdown:
             violations.append(
-                f"{name}: {us:.1f}us vs baseline {base_us:.1f}us "
+                f"{name}: {us:.1f}us vs baseline {entry['us']:.1f}us "
                 f"({ratio:.2f}x > {max_slowdown:.1f}x)")
+    for name in stale_rows(fresh_path, baseline_path):
+        violations.append(
+            f"{name}: stale row — in baseline (source "
+            f"{os.path.basename(fresh_path)}) but missing from the fresh "
+            f"run; dropped bench leg, or refresh with --update-baseline")
     return violations
 
 
@@ -117,8 +195,8 @@ def main() -> None:
         print(f"bench-gate: new row (not in baseline, not gated): {name}")
     gated -= len(fresh_only)
     if violations:
-        print(f"bench-gate: {len(violations)} row(s) regressed "
-              f"(of {gated} gated):")
+        print(f"bench-gate: {len(violations)} violation(s) "
+              f"(of {gated} gated rows):")
         for v in violations:
             print(f"  {v}")
         raise SystemExit(1)

@@ -1,0 +1,89 @@
+"""Multi-tenant serving demo: three streams, three clocks, ONE engine.
+
+Three synthetic tenants with different temporal behavior — a uniform-rate
+rating stream, a bursty self-exciting stream, and a wave-intensity
+(wiki-edit-like) stream — are served concurrently by one
+:class:`repro.streams.MultiStreamSGrapp`.  Tagged micro-batches arrive
+round-robin (as a serving frontend would deliver them), adaptive windows
+close per tenant as each tenant's own unique-timestamp quota fills, and
+every flush counts ALL tenants' pending windows in one bucketed dispatch of
+the shared window executor (set ``SGRAPP_TIER`` to numpy | dense | tiled |
+pallas | sparse | auto).
+
+The exit assertion is the multi-tenant contract: each tenant's estimate
+trajectory is bit-identical to a dedicated single-stream engine fed the
+same stream — co-batching changes the dispatch schedule, never a number.
+
+    PYTHONPATH=src python examples/multi_tenant_streams.py
+    SGRAPP_TIER=sparse PYTHONPATH=src python examples/multi_tenant_streams.py
+"""
+import os
+
+import numpy as np
+
+from repro.streams import (
+    MultiStreamSGrapp,
+    StreamingSGrapp,
+    synthetic_rating_stream,
+)
+
+NT_W = 60
+ALPHA0 = 0.95
+MICRO_BATCH = 200     # sgrs per tagged push (one serving request's worth)
+FLUSH_EVERY = 8       # fleet-wide closed windows per executor dispatch
+TIER = os.environ.get("SGRAPP_TIER", "dense")
+
+TENANTS = {
+    "uniform-ratings": dict(temporal="uniform", n_edges=4000, seed=11),
+    "bursty-sessions": dict(temporal="bursty", n_edges=2600, seed=22),
+    "wave-edits": dict(temporal="wave", n_edges=3300, seed=33),
+}
+
+
+def make_streams():
+    return [
+        synthetic_rating_stream(n_users=120, n_items=90,
+                                n_unique=cfg["n_edges"] // 4, **cfg)
+        for cfg in TENANTS.values()
+    ]
+
+
+def main() -> None:
+    streams = make_streams()
+    names = list(TENANTS)
+    fleet = MultiStreamSGrapp(len(streams), NT_W, ALPHA0, tier=TIER,
+                              flush_every=FLUSH_EVERY)
+
+    print(f"serving {len(streams)} tenants through one engine (tier={TIER}):")
+    reported = [0] * len(streams)
+    for a in range(0, max(len(s) for s in streams), MICRO_BATCH):
+        for sid, s in enumerate(streams):
+            if a < len(s):
+                fleet.push(sid, s.tau[a:a + MICRO_BATCH],
+                           s.edge_i[a:a + MICRO_BATCH],
+                           s.edge_j[a:a + MICRO_BATCH])
+        for sid in range(len(streams)):
+            est = fleet.result(sid).estimates
+            for k in range(reported[sid], len(est)):
+                print(f"  [{names[sid]:>16s}] window {k:2d}: "
+                      f"B-hat={float(est[k]):12.0f}")
+            reported[sid] = len(est)
+    results = fleet.finalize()
+
+    # the contract: one fleet == N dedicated engines, bit for bit
+    for sid, s in enumerate(streams):
+        solo = StreamingSGrapp(NT_W, ALPHA0, tier=TIER,
+                               flush_every=FLUSH_EVERY)
+        solo.push(s.tau, s.edge_i, s.edge_j)
+        want = solo.finalize()
+        assert np.array_equal(results[sid].estimates, want.estimates)
+        assert np.array_equal(results[sid].window_counts, want.window_counts)
+    print("per-tenant estimates match dedicated engines bit-for-bit:")
+    for sid, name in enumerate(names):
+        est = results[sid].estimates
+        print(f"  {name:>16s}: {len(est):2d} windows, "
+              f"final B-hat={float(est[-1]):,.0f}")
+
+
+if __name__ == "__main__":
+    main()

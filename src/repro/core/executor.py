@@ -182,7 +182,11 @@ class ExecutorResult:
     term, exactly as in tumbling mode; see the module docstring).
     ``cum_sgrs[k]`` is |E_k|, total sgrs seen when window k closed.
     ``n_shards`` is the device count the bucket batches were sharded over
-    (1 = single-device dispatch)."""
+    (1 = single-device dispatch).  ``stream_ids[k]`` is the tenant stream
+    window k belongs to when the batch carried the multi-stream provenance
+    lane (``WindowBatch.stream_ids``; None for single-stream batches) —
+    counts stay window-indexed, the lane just says whose window each one
+    is after cross-stream co-batching."""
 
     counts: np.ndarray
     cum_sgrs: np.ndarray
@@ -190,6 +194,7 @@ class ExecutorResult:
     mode: str
     span: int = 1
     n_shards: int = 1
+    stream_ids: np.ndarray | None = None
 
     @property
     def n_windows(self) -> int:
@@ -651,18 +656,29 @@ class WindowExecutor:
         """
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
-        if mode == "sliding" and span < 1:
-            raise ValueError("sliding span must be >= 1")
+        if mode == "sliding":
+            if span < 1:
+                raise ValueError("sliding span must be >= 1")
+            if batch.stream_ids is not None and len(
+                    np.unique(batch.stream_ids)) > 1:
+                # prefix-differencing across panes of *different* tenants
+                # would mix their counts — sliding windows are a per-stream
+                # concept; reject before paying the bucketed dispatch
+                raise ValueError(
+                    "sliding mode over a multi-stream batch is ambiguous; "
+                    "slide each tenant's panes separately")
         counts = self.window_counts(batch)
         cum = np.asarray(batch.cum_sgrs, dtype=np.float64)
         if mode == "tumbling":
             return ExecutorResult(counts, cum, self.tier, mode,
-                                  n_shards=self.n_shards)
+                                  n_shards=self.n_shards,
+                                  stream_ids=batch.stream_ids)
         prefix = np.concatenate([[0.0], np.cumsum(counts)])
         lo = np.maximum(np.arange(len(counts)) - span + 1, 0)
         sliding = prefix[1:] - prefix[lo]
         return ExecutorResult(sliding, cum, self.tier, mode, span,
-                              n_shards=self.n_shards)
+                              n_shards=self.n_shards,
+                              stream_ids=batch.stream_ids)
 
 
 def run(batch: WindowBatch, *, tier: str = "dense", mode: str = "tumbling",

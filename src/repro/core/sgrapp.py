@@ -43,6 +43,7 @@ __all__ = [
     "window_exact_counts",
     "estimator_init",
     "estimator_step",
+    "estimator_step_batched",
     "sgrapp_estimate",
     "sgrapp_x_estimate",
     "SGrappResult",
@@ -147,6 +148,36 @@ def estimator_step(tol: float = 0.05, step: float = 0.005):
     ``(tol, step)``: the engine compiles it once and reuses it for every
     window of every stream."""
     return jax.jit(_make_estimator_body(tol, step))
+
+
+@functools.lru_cache(maxsize=None)
+def estimator_step_batched(tol: float = 0.05, step: float = 0.005):
+    """Vmapped twin of :func:`estimator_step`: advances N *independent*
+    streams' carries in one call.
+
+    Signature ``(carry, xs, active) -> (carry, B-hat)`` where every carry
+    leaf and every xs lane has a leading ``[N]`` stream axis (exactly the
+    layout of :class:`repro.streams.state.StreamState`'s ``carry_*`` leaves)
+    and ``active`` is a bool ``[N]`` mask — inactive lanes (streams with no
+    window closing this round) pass their carry through unchanged, so a
+    ragged fleet advances without host-side gather/scatter.
+
+    Note on bit-identity: the multi-stream engine's *contract* is bitwise
+    equality with dedicated single-stream engines, so its flushes advance
+    tenants with the scalar :func:`estimator_step` (XLA may legally compile
+    a vectorized ``pow`` differently from the scalar one).  This batched
+    step is for fleet-scale consumers that want one dispatch per round and
+    accept elementwise-compiled arithmetic; ``tests/test_multistream.py``
+    cross-checks it against the scalar step.
+    """
+    body = _make_estimator_body(tol, step)
+
+    def masked(carry, xs, active):
+        new_carry, est = body(carry, xs)
+        sel = tuple(jnp.where(active, n, o) for n, o in zip(new_carry, carry))
+        return sel, est
+
+    return jax.jit(jax.vmap(masked))
 
 
 @functools.lru_cache(maxsize=None)

@@ -70,6 +70,11 @@ class WindowBatch:
     n_i / n_j       : int                          compact id-space capacity
     window_end_tau  : float64 [n_windows]          W_k^e (last tau in window)
     n_i_per_window / n_j_per_window : int64 [n_windows]
+    stream_ids      : int32 [n_windows] | None     provenance lane: which
+        tenant stream each window belongs to (multi-stream co-batching;
+        ``None`` for single-stream batches).  Bookkeeping only — bucketing
+        and counting ignore it, which is exactly what lets windows from
+        different streams share a compiled bucket.
     """
 
     edge_i: np.ndarray
@@ -83,6 +88,7 @@ class WindowBatch:
     window_end_tau: np.ndarray
     n_i_per_window: np.ndarray
     n_j_per_window: np.ndarray
+    stream_ids: np.ndarray | None = None
 
     @property
     def n_windows(self) -> int:
@@ -119,6 +125,8 @@ class WindowBatch:
             window_end_tau=self.window_end_tau[idx],
             n_i_per_window=self.n_i_per_window[idx],
             n_j_per_window=self.n_j_per_window[idx],
+            stream_ids=(None if self.stream_ids is None
+                        else self.stream_ids[idx]),
         )
 
 
@@ -135,6 +143,7 @@ def pack_windows(
     capacity: int | None = None,
     align: int = 128,
     dedupe: bool = True,
+    stream_ids: np.ndarray | None = None,
 ) -> WindowBatch:
     """Pack per-window raw edge lists into padded device-ready tensors.
 
@@ -147,16 +156,28 @@ def pack_windows(
     :class:`repro.streams.engine.StreamingSGrapp` flush path — both pack
     through here, so a window's device-side representation is identical no
     matter which ingestion mode produced it.
+
+    ``stream_ids`` (optional, int32 ``[n_windows]``) tags each window with
+    its tenant stream — the provenance lane the multi-stream engine uses to
+    scatter co-batched counts back to the right tenant.  Packing, bucketing
+    and counting never read it.
     """
     n_win = len(per_window_edges)
     n_sgrs = np.asarray(n_sgrs, dtype=np.int64)
     cum_sgrs = np.asarray(cum_sgrs, dtype=np.int64)
     window_end_tau = np.asarray(window_end_tau, dtype=np.float64)
+    if stream_ids is not None:
+        stream_ids = np.asarray(stream_ids, dtype=np.int32)
+        if stream_ids.shape != (n_win,):
+            raise ValueError(
+                f"stream_ids must be [n_windows]={n_win}, "
+                f"got shape {stream_ids.shape}")
     if n_win == 0:
         z2 = np.zeros((0, 0), dtype=np.int32)
         z1 = np.zeros(0, dtype=np.int64)
         return WindowBatch(z2, z2, z2.astype(bool), z1, z1, z1, 0, 0,
-                           np.zeros(0, dtype=np.float64), z1, z1)
+                           np.zeros(0, dtype=np.float64), z1, z1,
+                           stream_ids=stream_ids)
 
     from .butterfly import _dedupe_edges_np
 
@@ -196,7 +217,7 @@ def pack_windows(
     return WindowBatch(
         edge_i=out_i, edge_j=out_j, valid=valid, n_edges=n_edges, n_sgrs=n_sgrs,
         cum_sgrs=cum_sgrs, n_i=n_i, n_j=n_j, window_end_tau=window_end_tau,
-        n_i_per_window=ni_w, n_j_per_window=nj_w,
+        n_i_per_window=ni_w, n_j_per_window=nj_w, stream_ids=stream_ids,
     )
 
 

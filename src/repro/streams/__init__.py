@@ -6,6 +6,8 @@ from .generators import (
     assign_timestamps,
 )
 from .engine import StreamingSGrapp
+from .multi import MultiStreamSGrapp
+from .state import StreamState, stream_state_init
 
 __all__ = [
     "SgrStream",
@@ -16,4 +18,7 @@ __all__ = [
     "synthetic_rating_stream",
     "assign_timestamps",
     "StreamingSGrapp",
+    "MultiStreamSGrapp",
+    "StreamState",
+    "stream_state_init",
 ]

@@ -21,6 +21,14 @@ The pipeline per closed window::
                                                v
             estimator_step per window (same jitted body as the replay scans)
 
+All per-stream state lives in a :class:`~repro.streams.state.StreamState`
+pytree (open-window buffer, quota progress, cumulative ``|E|``, estimator
+carry incl. adapted alpha) and the windowizer is the shared pure function
+:func:`~repro.streams.state.windowizer_push` — this engine is the
+``n_streams=1`` wrapper around them, and :class:`~repro.streams.multi.
+MultiStreamSGrapp` is the N-tenant engine over the *same* state pytree and
+windowizer, which is why a one-tenant fleet is bit-identical to this class.
+
 Three properties make this more than a convenience wrapper:
 
 * **Bit-identical to replay.**  Feeding the same stream through ``push`` in
@@ -35,10 +43,10 @@ Three properties make this more than a convenience wrapper:
   :class:`WindowExecutor` whose compiled bucket counters are process-wide
   caches — a steady-state stream re-dispatches compiled code only.
 * **Checkpointable.**  :meth:`state_dict` / :meth:`restore` capture the full
-  engine state (open-window buffer, unique-timestamp quota progress,
-  cumulative ``|E|``, estimator carry incl. adapted alpha, per-window
-  history) as a flat dict of numpy leaves, ready for
-  ``repro.train.checkpoint.save_checkpoint``.  A restored engine continues
+  engine state as a flat, *versioned* dict of numpy leaves, ready for
+  ``repro.train.checkpoint.save_checkpoint``.  ``restore`` is strict: a
+  missing or unknown key (schema drift, truncated checkpoint) raises instead
+  of silently producing a half-restored engine.  A restored engine continues
   the stream with bit-identical results.
 """
 from __future__ import annotations
@@ -46,12 +54,75 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.executor import WindowExecutor
-from repro.core.sgrapp import SGrappResult, estimator_init, estimator_step
+from repro.core.sgrapp import SGrappResult, estimator_step
 from repro.core.windows import pack_windows
+from repro.streams.state import (
+    StreamState,
+    estimator_carry,
+    set_estimator_carry,
+    stream_state_init,
+    windowizer_close_tail,
+    windowizer_push,
+)
 
-__all__ = ["StreamingSGrapp"]
+__all__ = ["StreamingSGrapp", "STATE_DICT_VERSION"]
 
-_NO_TAU = float("nan")  # sentinel: no timestamp observed yet
+# state_dict schema version: restore() rejects any other value, and rejects
+# dicts whose key set drifted from the schema (missing or unknown keys).
+# v1 = the versioned single-stream schema (pre-versioned dicts are rejected
+# for the missing "version" key).  MultiStreamSGrapp reuses the same field
+# names with a stream axis (see repro.streams.multi).
+STATE_DICT_VERSION = 1
+
+_STATE_DICT_KEYS = frozenset({
+    "version", "nt_w", "buf_i", "buf_j", "buf_last_tau", "buf_len", "uniq",
+    "last_tau", "total_sgrs", "finalized", "counts", "estimates", "cum_sgrs",
+    "end_tau", "carry_cum", "carry_alpha", "carry_err", "carry_sup",
+})
+
+
+def advance_estimator(step_fn, carry, truths, new_counts, new_cums,
+                      new_end_taus, counts, estimates, cum_sgrs,
+                      end_tau) -> tuple:
+    """Advance ONE stream's estimator over its newly counted windows in
+    close order, appending to its history lists in place; returns the new
+    carry.  Shared by :meth:`StreamingSGrapp.flush` and
+    :meth:`repro.streams.multi.MultiStreamSGrapp.flush` so the per-window
+    arithmetic (truth-prefix lookup, float32 xs packing, the jitted scalar
+    step) has exactly one implementation — the N=1-fleet bit-identity
+    contract holds at a shared call site, not by parallel maintenance."""
+    for wc, ce, et in zip(new_counts, new_cums, new_end_taus):
+        k = len(counts)
+        truth, has_truth = 0.0, False
+        if truths is not None and k < len(truths):
+            truth, has_truth = float(truths[k]), True
+        xs = (np.float32(wc), np.float32(ce), np.float32(truth),
+              np.bool_(has_truth), np.int32(k))
+        carry, est = step_fn(carry, xs)
+        counts.append(float(wc))
+        estimates.append(np.float32(est))
+        cum_sgrs.append(int(ce))
+        end_tau.append(float(et))
+    return carry
+
+
+def check_state_dict_keys(state: dict, expected: frozenset,
+                          *, schema: str) -> None:
+    """Strict schema check shared by both engines' ``restore``: raise on
+    missing or unknown keys instead of silently ignoring them (a truncated
+    or future-versioned checkpoint must never half-restore)."""
+    got = set(state)
+    missing = sorted(expected - got)
+    unknown = sorted(got - expected)
+    if missing or unknown:
+        raise ValueError(
+            f"{schema} state_dict key mismatch: missing={missing} "
+            f"unknown={unknown}")
+    version = int(np.asarray(state["version"]))
+    if version != STATE_DICT_VERSION:
+        raise ValueError(
+            f"{schema} state_dict version {version} != supported "
+            f"{STATE_DICT_VERSION}")
 
 
 class StreamingSGrapp:
@@ -115,13 +186,8 @@ class StreamingSGrapp:
             tier, align=align, snap=0, devices=devices, mesh=mesh)
         self._step_fn = estimator_step(self.tol, self.step)
 
-        # -- open-window buffer (current, not-yet-closed window)
-        self._buf_i: list[np.ndarray] = []
-        self._buf_j: list[np.ndarray] = []
-        self._buf_last_tau = _NO_TAU   # last tau in the open buffer
-        self._buf_len = 0              # raw sgrs buffered
-        self._uniq = 0                 # unique timestamps in the open window
-        self._last_tau = _NO_TAU       # last tau ever seen (order validation)
+        # -- the whole per-stream state: a one-stream StreamState pytree
+        self._state: StreamState = stream_state_init(1, alpha0)
 
         # -- closed-but-uncounted windows awaiting a flush
         self._pending: list[tuple[np.ndarray, np.ndarray, int, float]] = []
@@ -131,11 +197,6 @@ class StreamingSGrapp:
         self._estimates: list[np.float32] = []
         self._cum_sgrs: list[int] = []
         self._end_tau: list[float] = []
-
-        # -- estimator carry (float32 scalars, matching the replay scan)
-        self._carry = tuple(np.asarray(c) for c in estimator_init(alpha0))
-        self._total_sgrs = 0           # cumulative |E| over closed windows
-        self._finalized = False
 
     # -- introspection -------------------------------------------------------
 
@@ -156,12 +217,12 @@ class StreamingSGrapp:
     def alpha(self) -> float:
         """Current (possibly adapted) alpha — lags pending windows until the
         next flush."""
-        return float(self._carry[1])
+        return float(self._state.carry_alpha[0])
 
     @property
     def cum_sgrs(self) -> int:
         """|E|: total sgrs in closed windows (open buffer excluded)."""
-        return self._total_sgrs
+        return int(self._state.total_sgrs[0])
 
     # -- ingestion -----------------------------------------------------------
 
@@ -171,82 +232,15 @@ class StreamingSGrapp:
         closed by this call.  Timestamps must be non-decreasing across the
         whole stream (raises ``ValueError`` otherwise — same contract as
         ``windowize``)."""
-        if self._finalized:
+        if self._state.finalized[0]:
             raise RuntimeError("push after finalize(); stream already ended")
-        tau = np.atleast_1d(np.asarray(tau, dtype=np.float64))
-        ei = np.atleast_1d(np.asarray(edge_i, dtype=np.int64))
-        ej = np.atleast_1d(np.asarray(edge_j, dtype=np.int64))
-        if not (tau.shape == ei.shape == ej.shape and tau.ndim == 1):
-            raise ValueError("tau/edge_i/edge_j must be equal-length 1-D")
-        if tau.size == 0:
-            return 0
-        if not np.isfinite(tau).all():
-            # a NaN would alias the _NO_TAU sentinel, slip past the order
-            # check (NaN < x is False) and count as a new unique timestamp
-            # per record — reject it loudly, same contract as windowize
-            raise ValueError("timestamps must be finite")
-        if np.any(np.diff(tau) < 0) or (
-                not np.isnan(self._last_tau) and tau[0] < self._last_tau):
-            raise ValueError("timestamps must be non-decreasing (stream order)")
-
-        # unique-timestamp rank of each record, continuing the open window:
-        # record r is "new" when its tau differs from its predecessor (the
-        # last buffered tau for r=0 — close boundaries always fall on a
-        # strictly increasing tau, so a chunk-global diff is exact)
-        prev = self._buf_last_tau if self._uniq else _NO_TAU
-        is_new = np.empty(tau.shape[0], dtype=np.int64)
-        is_new[0] = 1 if (np.isnan(prev) or tau[0] != prev) else 0
-        is_new[1:] = tau[1:] != tau[:-1]
-        uniq_idx = self._uniq - 1 + np.cumsum(is_new)   # 0-based within window run
-        w_off = uniq_idx // self.nt_w                   # 0 = still the open window
-        w_max = int(w_off[-1])
-
-        closed = 0
-        if w_max == 0:
-            # .copy(): asarray may alias the caller's buffer, which they are
-            # free to overwrite before this window closes (the segment paths
-            # below copy implicitly — fancy indexing never aliases)
-            self._buf_i.append(ei.copy())
-            self._buf_j.append(ej.copy())
-            self._buf_len += tau.shape[0]
-        else:
-            # split the chunk at window-offset boundaries
-            cuts = np.searchsorted(w_off, np.arange(1, w_max + 1), side="left")
-            segs = np.split(np.arange(tau.shape[0]), cuts)
-            # segment 0 completes the open window
-            s0 = segs[0]
-            self._buf_i.append(ei[s0])
-            self._buf_j.append(ej[s0])
-            self._buf_len += s0.shape[0]
-            end_tau = tau[s0[-1]] if s0.shape[0] else self._buf_last_tau
-            self._close_open_window(end_tau)
-            closed += 1
-            # middle segments are whole windows in their own right
-            for seg in segs[1:-1]:
-                self._pending.append((ei[seg], ej[seg],
-                                      int(seg.shape[0]), float(tau[seg[-1]])))
-                closed += 1
-            # the last segment becomes the new open window
-            sl = segs[-1]
-            self._buf_i = [ei[sl]]
-            self._buf_j = [ej[sl]]
-            self._buf_len = int(sl.shape[0])
-
-        self._uniq = int(uniq_idx[-1]) - w_max * self.nt_w + 1
-        self._buf_last_tau = float(tau[-1])
-        self._last_tau = float(tau[-1])
+        closed = windowizer_push(self._state, 0, tau, edge_i, edge_j,
+                                 self.nt_w)
+        for _, ei, ej, m, end_tau in closed:
+            self._pending.append((ei, ej, m, end_tau))
         if len(self._pending) >= self.flush_every:
             self.flush()
-        return closed
-
-    def _close_open_window(self, end_tau: float) -> None:
-        ei = (np.concatenate(self._buf_i) if self._buf_i
-              else np.zeros(0, np.int64))
-        ej = (np.concatenate(self._buf_j) if self._buf_j
-              else np.zeros(0, np.int64))
-        self._pending.append((ei, ej, self._buf_len, float(end_tau)))
-        self._buf_i, self._buf_j = [], []
-        self._buf_len = 0
+        return len(closed)
 
     # -- counting + estimation ----------------------------------------------
 
@@ -257,42 +251,37 @@ class StreamingSGrapp:
         with nothing pending is a no-op."""
         if not self._pending:
             return 0
-        pending, self._pending = self._pending, []
+        pending = self._pending
         per_edges = [np.stack([ei, ej], axis=1) for ei, ej, _, _ in pending]
         n_sgrs = np.array([m for _, _, m, _ in pending], dtype=np.int64)
         end_tau = np.array([t for _, _, _, t in pending], dtype=np.float64)
-        cum = self._total_sgrs + np.cumsum(n_sgrs)
+        cum = int(self._state.total_sgrs[0]) + np.cumsum(n_sgrs)
         batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
                              window_end_tau=end_tau, align=self.align)
         counts = self.executor.window_counts(batch)   # float64 [m]
+        # windows stay pending until counted: a packing/counting error (bad
+        # edge ids, a dying device) leaves the engine consistent and the
+        # next flush retries instead of silently dropping windows
+        self._pending = []
 
-        for idx in range(len(pending)):
-            k = len(self._counts)
-            truth, has_truth = 0.0, False
-            if self.truths is not None and k < len(self.truths):
-                truth, has_truth = float(self.truths[k]), True
-            xs = (np.float32(counts[idx]), np.float32(cum[idx]),
-                  np.float32(truth), np.bool_(has_truth), np.int32(k))
-            carry, est = self._step_fn(self._carry, xs)
-            self._carry = tuple(np.asarray(c) for c in carry)
-            self._counts.append(float(counts[idx]))
-            self._estimates.append(np.float32(est))
-            self._cum_sgrs.append(int(cum[idx]))
-            self._end_tau.append(float(end_tau[idx]))
-        self._total_sgrs = int(cum[-1])
+        carry = advance_estimator(
+            self._step_fn, estimator_carry(self._state, 0), self.truths,
+            counts, cum, end_tau, self._counts, self._estimates,
+            self._cum_sgrs, self._end_tau)
+        set_estimator_carry(self._state, 0, carry)
+        self._state.total_sgrs[0] = int(cum[-1])
         return len(pending)
 
     def finalize(self) -> SGrappResult:
         """End the stream: close the trailing window (kept if it filled its
         quota, else per ``drop_partial``), flush, and return the result.
         Further ``push`` calls raise."""
-        if not self._finalized:
-            if self._buf_len and (self._uniq >= self.nt_w
-                                  or not self.drop_partial):
-                self._close_open_window(self._buf_last_tau)
-            self._buf_i, self._buf_j = [], []
-            self._buf_len, self._uniq = 0, 0
-            self._finalized = True
+        if not self._state.finalized[0]:
+            tail = windowizer_close_tail(self._state, 0, self.nt_w,
+                                         drop_partial=self.drop_partial)
+            if tail is not None:
+                _, ei, ej, m, end_tau = tail
+                self._pending.append((ei, ej, m, end_tau))
         return self.result()
 
     def result(self) -> SGrappResult:
@@ -303,7 +292,7 @@ class StreamingSGrapp:
             estimates=np.array(self._estimates, dtype=np.float32),
             window_counts=np.array(self._counts, dtype=np.float64),
             cum_edges=np.array(self._cum_sgrs, dtype=np.float64),
-            alpha_final=float(self._carry[1]),
+            alpha_final=float(self._state.carry_alpha[0]),
             truths=self.truths,
         )
 
@@ -312,59 +301,67 @@ class StreamingSGrapp:
     def state_dict(self) -> dict:
         """Full engine state as a flat dict of numpy leaves (pending windows
         are flushed first, which is semantically invisible — flushing never
-        changes what any window's estimate will be).  Pass the dict as the
-        ``tree`` of ``repro.train.checkpoint.save_checkpoint``; a fresh
-        engine's ``state_dict()`` is the restore template."""
+        changes what any window's estimate will be).  The dict carries a
+        ``version`` schema field; :meth:`restore` rejects any other version
+        and any key-set drift.  Pass the dict as the ``tree`` of
+        ``repro.train.checkpoint.save_checkpoint``; a fresh engine's
+        ``state_dict()`` is the restore template."""
         self.flush()
-        ei = (np.concatenate(self._buf_i) if self._buf_i
-              else np.zeros(0, np.int64))
-        ej = (np.concatenate(self._buf_j) if self._buf_j
-              else np.zeros(0, np.int64))
+        st = self._state
+        n = int(st.buf_len[0])
         return {
+            "version": np.int64(STATE_DICT_VERSION),
             "nt_w": np.int64(self.nt_w),
-            "buf_i": ei,
-            "buf_j": ej,
-            "buf_last_tau": np.float64(self._buf_last_tau),
-            "buf_len": np.int64(self._buf_len),
-            "uniq": np.int64(self._uniq),
-            "last_tau": np.float64(self._last_tau),
-            "total_sgrs": np.int64(self._total_sgrs),
-            "finalized": np.bool_(self._finalized),
+            "buf_i": st.buf_i[0, :n].copy(),
+            "buf_j": st.buf_j[0, :n].copy(),
+            "buf_last_tau": np.float64(st.buf_last_tau[0]),
+            "buf_len": np.int64(n),
+            "uniq": np.int64(st.uniq[0]),
+            "last_tau": np.float64(st.last_tau[0]),
+            "total_sgrs": np.int64(st.total_sgrs[0]),
+            "finalized": np.bool_(st.finalized[0]),
             "counts": np.array(self._counts, dtype=np.float64),
             "estimates": np.array(self._estimates, dtype=np.float32),
             "cum_sgrs": np.array(self._cum_sgrs, dtype=np.int64),
             "end_tau": np.array(self._end_tau, dtype=np.float64),
-            "carry_cum": np.float32(self._carry[0]),
-            "carry_alpha": np.float32(self._carry[1]),
-            "carry_err": np.float32(self._carry[2]),
-            "carry_sup": np.bool_(self._carry[3]),
+            "carry_cum": np.float32(st.carry_cum[0]),
+            "carry_alpha": np.float32(st.carry_alpha[0]),
+            "carry_err": np.float32(st.carry_err[0]),
+            "carry_sup": np.bool_(st.carry_sup[0]),
         }
 
     def restore(self, state: dict) -> "StreamingSGrapp":
         """Load a :meth:`state_dict` (engine config — tier, truths, tol/step,
         flush_every — comes from the constructor; the dict carries only
-        stream state).  Returns ``self``.  A restored engine continues the
-        stream bit-identically to one that never checkpointed."""
+        stream state).  Returns ``self``.  Strict: a missing or unknown key,
+        or an unsupported ``version``, raises ``ValueError`` — nothing is
+        silently ignored.  A restored engine continues the stream
+        bit-identically to one that never checkpointed."""
+        check_state_dict_keys(state, _STATE_DICT_KEYS,
+                              schema="StreamingSGrapp")
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine nt_w={self.nt_w}")
         ei = np.asarray(state["buf_i"], dtype=np.int64)
         ej = np.asarray(state["buf_j"], dtype=np.int64)
-        self._buf_i = [ei] if ei.size else []
-        self._buf_j = [ej] if ej.size else []
-        self._buf_last_tau = float(state["buf_last_tau"])
-        self._buf_len = int(state["buf_len"])
-        self._uniq = int(state["uniq"])
-        self._last_tau = float(state["last_tau"])
-        self._total_sgrs = int(state["total_sgrs"])
-        self._finalized = bool(state["finalized"])
+        st = stream_state_init(1, self.alpha0,
+                               buf_capacity=max(256, ei.size))
+        st.buf_i[0, :ei.size] = ei
+        st.buf_j[0, :ej.size] = ej
+        st.buf_len[0] = int(state["buf_len"])
+        st.buf_last_tau[0] = float(state["buf_last_tau"])
+        st.uniq[0] = int(state["uniq"])
+        st.last_tau[0] = float(state["last_tau"])
+        st.total_sgrs[0] = int(state["total_sgrs"])
+        st.finalized[0] = bool(state["finalized"])
+        st.carry_cum[0] = np.float32(state["carry_cum"])
+        st.carry_alpha[0] = np.float32(state["carry_alpha"])
+        st.carry_err[0] = np.float32(state["carry_err"])
+        st.carry_sup[0] = np.bool_(state["carry_sup"])
+        self._state = st
         self._counts = [float(c) for c in np.asarray(state["counts"])]
         self._estimates = [np.float32(e) for e in np.asarray(state["estimates"])]
         self._cum_sgrs = [int(c) for c in np.asarray(state["cum_sgrs"])]
         self._end_tau = [float(t) for t in np.asarray(state["end_tau"])]
-        self._carry = (np.float32(state["carry_cum"]),
-                       np.float32(state["carry_alpha"]),
-                       np.float32(state["carry_err"]),
-                       np.bool_(state["carry_sup"]))
         self._pending = []
         return self

@@ -1,0 +1,417 @@
+"""Multi-tenant stream serving: N independent sgr streams through ONE engine.
+
+:class:`MultiStreamSGrapp` serves N concurrent tenants — each an independent
+bipartite edge stream with its own clock, window quota progress, estimator
+carry and (optionally) supervised ground-truth prefix — through one shared
+pipeline::
+
+    push(stream_id, tau, i, j)          tagged micro-batches, any interleaving
+          │
+          v
+    vectorized windowizer               one pass computes every record's
+    (streams.state.windowizer_push)     unique-timestamp rank for ALL streams
+          │                             at once; windows close per stream
+          v
+    per-stream pending closed windows   (fleet-wide flush_every batching)
+          │
+          v
+    pack_windows(stream_ids=...)  ──>  ONE persistent WindowExecutor
+    (stream-id provenance lane)         windows from different tenants
+          │                             co-batch into the same compiled
+          v                             bucket counters: same bucket ladder,
+    counts scatter back per tenant      same tier router, same sharded
+    via the provenance lane             dispatch
+          │
+          v
+    estimator_step per (tenant, window) — the same jitted scalar body as
+    the single-stream engine and the replay scans
+
+**Why one engine beats N engines.**  The executor's cost is per *dispatch*,
+not per window: bucketing, padding, and the chunked-vmap schedule amortize
+over the windows of a flush.  N separate :class:`~repro.streams.engine.
+StreamingSGrapp` instances each flush their own handful of windows; the
+fleet engine flushes all tenants' pending windows in one bucketed dispatch,
+so same-capacity windows from different streams share a chunk of the same
+compiled program (``BENCH_multistream.json`` pins the aggregate-throughput
+win).  Compiled bucket counters were already process-wide; co-batching makes
+the *dispatches* shared too.
+
+**Bit-identity contract.**  Per tenant, the fleet is exactly a dedicated
+single-stream engine: same windowizer (one shared function), same packer,
+same counting tiers (counts are capacity-independent integers, so
+co-batching never changes a count), same float32 scalar estimator steps in
+per-stream close order.  ``tests/test_multistream.py`` pins ``N=1 fleet ==
+StreamingSGrapp`` and ``each tenant of an N>=4 fleet == its dedicated
+engine`` bit-for-bit across every tier and the sharded dispatch path.
+
+**Checkpointing.**  :meth:`state_dict` reuses the single-stream schema with
+a stream axis: per-stream scalars become ``[N]`` lanes, the ragged
+open-window buffers and per-window histories concatenate with ``[N+1]``
+offset lanes.  :meth:`restore` is strict (missing/unknown keys or a version
+mismatch raise), and a restored fleet resumes every tenant bit-identically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.executor import WindowExecutor
+from repro.core.sgrapp import SGrappResult, estimator_step
+from repro.core.windows import pack_windows
+from repro.streams.engine import (
+    STATE_DICT_VERSION,
+    advance_estimator,
+    check_state_dict_keys,
+)
+from repro.streams.state import (
+    StreamState,
+    estimator_carry,
+    set_estimator_carry,
+    stream_state_init,
+    windowizer_close_tail,
+    windowizer_push,
+)
+
+__all__ = ["MultiStreamSGrapp"]
+
+_MULTI_STATE_DICT_KEYS = frozenset({
+    "version", "n_streams", "nt_w", "buf_i", "buf_j", "buf_offsets",
+    "buf_last_tau", "buf_len", "uniq", "last_tau", "total_sgrs", "finalized",
+    "counts", "estimates", "cum_sgrs", "end_tau", "hist_offsets",
+    "carry_cum", "carry_alpha", "carry_err", "carry_sup",
+})
+
+
+def _ragged_concat(parts: list[np.ndarray], dtype) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate per-stream ragged arrays into (flat, offsets[N+1])."""
+    offsets = np.zeros(len(parts) + 1, dtype=np.int64)
+    offsets[1:] = np.cumsum([len(p) for p in parts])
+    flat = (np.concatenate([np.asarray(p, dtype=dtype) for p in parts])
+            if offsets[-1] else np.zeros(0, dtype=dtype))
+    return flat, offsets
+
+
+class MultiStreamSGrapp:
+    """Online sGrapp / sGrapp-x over N concurrent tenant streams.
+
+    Parameters
+    ----------
+    n_streams : number of tenants.  Stream ids are ``0 .. n_streams-1``.
+    nt_w : window quota, shared by every tenant (Algorithm 3 semantics,
+        as :class:`~repro.streams.engine.StreamingSGrapp`).
+    alpha0 : initial inter-window exponent — a scalar (shared) or a
+        length-``n_streams`` sequence (per-tenant).
+    truths : ``None`` (plain sGrapp for every tenant) or a length-
+        ``n_streams`` sequence whose entry s is that tenant's cumulative
+        ground-truth prefix (or ``None`` for an unsupervised tenant) —
+        exactly the single-stream engine's ``truths`` per tenant.
+    tol, step : Algorithm 5 band and adaptation step (shared).
+    tier / executor / devices / mesh : the shared counting backend, as
+        :class:`~repro.streams.engine.StreamingSGrapp` — ONE executor
+        serves every tenant, and its compiled bucket counters co-batch
+        windows across tenants.
+    flush_every : fleet-wide pending-window budget: a flush triggers when
+        the tenants' pending closed windows *in total* reach this many
+        (flush timing never changes any estimate, only batching).
+    drop_partial, align : as the single-stream engine, shared.
+    """
+
+    def __init__(self, n_streams: int, nt_w: int, alpha0, *, truths=None,
+                 tol: float = 0.05, step: float = 0.005,
+                 tier: str = "dense", executor: WindowExecutor | None = None,
+                 devices=None, mesh=None, flush_every: int = 32,
+                 drop_partial: bool = True, align: int = 64):
+        if n_streams < 1:
+            raise ValueError("n_streams must be >= 1")
+        if nt_w <= 0:
+            raise ValueError("nt_w must be positive")
+        if flush_every < 1:
+            raise ValueError("flush_every must be >= 1")
+        if executor is not None and (devices is not None or mesh is not None):
+            raise ValueError(
+                "devices=/mesh= conflict with executor=; configure the "
+                "executor's sharding at construction instead")
+        if truths is not None and len(truths) != n_streams:
+            raise ValueError(
+                f"truths must have one entry per stream ({n_streams}), "
+                f"got {len(truths)}")
+        self.nt_w = int(nt_w)
+        self.alpha0 = alpha0
+        self.truths = (None if truths is None else
+                       [None if t is None else np.asarray(t, dtype=np.float64)
+                        for t in truths])
+        self.tol = float(tol)
+        self.step = float(step)
+        self.flush_every = int(flush_every)
+        self.drop_partial = bool(drop_partial)
+        self.align = int(align)
+        # snap=0 for the same reason as the single-stream engine: flushes
+        # see the streams piecewise, bucket programs must compile at ladder
+        # rungs and never re-trace at steady state
+        self.executor = executor if executor is not None else WindowExecutor(
+            tier, align=align, snap=0, devices=devices, mesh=mesh)
+        self._step_fn = estimator_step(self.tol, self.step)
+
+        n = int(n_streams)
+        self._state: StreamState = stream_state_init(n, alpha0)
+        # per-stream closed-but-uncounted windows, in close order; the set
+        # tracks which streams have any, so flush work scales with pending
+        # tenants, never with fleet size
+        self._pending: list[list[tuple[np.ndarray, np.ndarray, int, float]]] \
+            = [[] for _ in range(n)]
+        self._pending_streams: set[int] = set()
+        self._n_pending_total = 0
+        # per-stream per-window history (materialized at flush)
+        self._counts: list[list[float]] = [[] for _ in range(n)]
+        self._estimates: list[list[np.float32]] = [[] for _ in range(n)]
+        self._cum_sgrs: list[list[int]] = [[] for _ in range(n)]
+        self._end_tau: list[list[float]] = [[] for _ in range(n)]
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n_streams(self) -> int:
+        return self._state.n_streams
+
+    @property
+    def tier(self) -> str:
+        return self.executor.tier
+
+    @property
+    def n_pending(self) -> int:
+        """Closed-but-uncounted windows across the whole fleet."""
+        return self._n_pending_total
+
+    def n_windows(self, stream_id: int | None = None) -> int:
+        """Windows closed so far (counted or pending) — for one tenant, or
+        fleet-wide with ``stream_id=None``."""
+        if stream_id is not None:
+            s = self._check_stream(stream_id)
+            return len(self._counts[s]) + len(self._pending[s])
+        return (sum(len(c) for c in self._counts) + self._n_pending_total)
+
+    def alpha(self, stream_id: int) -> float:
+        """Tenant's current (possibly adapted) alpha — lags its pending
+        windows until the next flush."""
+        return float(self._state.carry_alpha[self._check_stream(stream_id)])
+
+    def cum_sgrs(self, stream_id: int) -> int:
+        """Tenant's |E|: total sgrs in its counted windows."""
+        return int(self._state.total_sgrs[self._check_stream(stream_id)])
+
+    def _check_stream(self, stream_id) -> int:
+        s = int(stream_id)
+        if not 0 <= s < self.n_streams:
+            raise ValueError(
+                f"stream_id {s} out of range [0, {self.n_streams})")
+        return s
+
+    # -- ingestion -----------------------------------------------------------
+
+    def push(self, stream_id, tau, edge_i, edge_j) -> int:
+        """Ingest a tagged micro-batch: ``stream_id`` is a scalar (the whole
+        batch belongs to one tenant) or a per-record array (interleaved
+        tenants in one batch — records group stably per stream, so
+        interleaved and per-stream-sorted arrival are equivalent).  Returns
+        the number of windows closed fleet-wide by this call.  Timestamps
+        must be non-decreasing *per stream* (tenant clocks are independent);
+        a violating batch raises before any state changes."""
+        closed = windowizer_push(self._state, stream_id, tau, edge_i, edge_j,
+                                 self.nt_w)
+        for s, ei, ej, m, end_tau in closed:
+            self._pending[s].append((ei, ej, m, end_tau))
+            self._pending_streams.add(s)
+        self._n_pending_total += len(closed)
+        if self._n_pending_total >= self.flush_every:
+            self.flush()
+        return len(closed)
+
+    # -- counting + estimation ----------------------------------------------
+
+    def flush(self) -> int:
+        """Count every tenant's pending closed windows through the shared
+        executor — ONE ``pack_windows`` + ONE bucketed dispatch for the
+        whole fleet, stream-id provenance lane included — then advance each
+        tenant's estimator over its windows in close order.  Returns the
+        number of windows flushed.  Idempotent when nothing is pending."""
+        if self._n_pending_total == 0:
+            return 0
+        streams = sorted(self._pending_streams)
+        per_edges: list[np.ndarray] = []
+        n_sgrs: list[int] = []
+        end_tau: list[float] = []
+        cum: list[int] = []
+        sids: list[int] = []
+        for s in streams:
+            c = int(self._state.total_sgrs[s])
+            for ei, ej, m, t in self._pending[s]:
+                per_edges.append(np.stack([ei, ej], axis=1))
+                n_sgrs.append(m)
+                end_tau.append(t)
+                c += m
+                cum.append(c)
+                sids.append(s)
+        batch = pack_windows(
+            per_edges, n_sgrs=np.asarray(n_sgrs, dtype=np.int64),
+            cum_sgrs=np.asarray(cum, dtype=np.int64),
+            window_end_tau=np.asarray(end_tau, dtype=np.float64),
+            align=self.align, stream_ids=np.asarray(sids, dtype=np.int32))
+        counts = self.executor.window_counts(batch)   # float64 [m]
+        # windows stay pending until counted: a packing/counting error (one
+        # tenant's bad edge ids, a dying device) leaves the whole fleet
+        # consistent and the next flush retries, instead of silently
+        # dropping every tenant's closed windows
+        n_per_stream = [len(self._pending[s]) for s in streams]
+        for s in streams:
+            self._pending[s] = []
+        self._pending_streams.clear()
+        self._n_pending_total = 0
+
+        # scatter counts back per tenant: windows were appended stream by
+        # stream in ascending id, so each tenant's windows are a contiguous
+        # slice, in close order (the batch's stream_ids lane records the
+        # same provenance for external consumers) — and advance each
+        # tenant's estimator with the SAME jitted scalar step as the
+        # single-stream engine, via the shared advance_estimator helper:
+        # bit-identical per-tenant arithmetic by construction
+        off = 0
+        for s, n_new in zip(streams, n_per_stream):
+            sl = slice(off, off + n_new)
+            tr = self.truths[s] if self.truths is not None else None
+            carry = advance_estimator(
+                self._step_fn, estimator_carry(self._state, s), tr,
+                counts[sl], cum[sl], end_tau[sl], self._counts[s],
+                self._estimates[s], self._cum_sgrs[s], self._end_tau[s])
+            set_estimator_carry(self._state, s, carry)
+            self._state.total_sgrs[s] = int(cum[off + n_new - 1])
+            off += n_new
+        return len(per_edges)
+
+    def finalize(self) -> list[SGrappResult]:
+        """End every stream: close trailing windows (kept iff the quota
+        filled, else per ``drop_partial``), flush the fleet, and return one
+        :class:`SGrappResult` per tenant.  Further ``push`` calls raise."""
+        for s in range(self.n_streams):
+            if not self._state.finalized[s]:
+                tail = windowizer_close_tail(self._state, s, self.nt_w,
+                                             drop_partial=self.drop_partial)
+                if tail is not None:
+                    _, ei, ej, m, end_tau = tail
+                    self._pending[s].append((ei, ej, m, end_tau))
+                    self._pending_streams.add(s)
+                    self._n_pending_total += 1
+        return self.results()
+
+    def result(self, stream_id: int) -> SGrappResult:
+        """One tenant's estimate so far (flushes the fleet first).  Field-
+        compatible with the replay drivers' :class:`SGrappResult`."""
+        s = self._check_stream(stream_id)
+        self.flush()
+        return SGrappResult(
+            estimates=np.array(self._estimates[s], dtype=np.float32),
+            window_counts=np.array(self._counts[s], dtype=np.float64),
+            cum_edges=np.array(self._cum_sgrs[s], dtype=np.float64),
+            alpha_final=float(self._state.carry_alpha[s]),
+            truths=self.truths[s] if self.truths is not None else None,
+        )
+
+    def results(self) -> list[SGrappResult]:
+        """Every tenant's result, indexed by stream id."""
+        self.flush()
+        return [self.result(s) for s in range(self.n_streams)]
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Whole-fleet state as a flat dict of numpy leaves — the single-
+        stream schema with a stream axis: per-stream scalars are ``[N]``
+        lanes, ragged buffers/histories concatenate with ``[N+1]`` offset
+        lanes.  Pending windows are flushed first (semantically invisible).
+        """
+        self.flush()
+        st = self._state
+        n = self.n_streams
+        bufs_i = [st.buf_i[s, :int(st.buf_len[s])] for s in range(n)]
+        bufs_j = [st.buf_j[s, :int(st.buf_len[s])] for s in range(n)]
+        buf_i, buf_off = _ragged_concat(bufs_i, np.int64)
+        buf_j, _ = _ragged_concat(bufs_j, np.int64)
+        counts, hist_off = _ragged_concat(self._counts, np.float64)
+        estimates, _ = _ragged_concat(self._estimates, np.float32)
+        cum_sgrs, _ = _ragged_concat(self._cum_sgrs, np.int64)
+        end_tau, _ = _ragged_concat(self._end_tau, np.float64)
+        return {
+            "version": np.int64(STATE_DICT_VERSION),
+            "n_streams": np.int64(n),
+            "nt_w": np.int64(self.nt_w),
+            "buf_i": buf_i,
+            "buf_j": buf_j,
+            "buf_offsets": buf_off,
+            "buf_last_tau": st.buf_last_tau.copy(),
+            "buf_len": st.buf_len.copy(),
+            "uniq": st.uniq.copy(),
+            "last_tau": st.last_tau.copy(),
+            "total_sgrs": st.total_sgrs.copy(),
+            "finalized": st.finalized.copy(),
+            "counts": counts,
+            "estimates": estimates,
+            "cum_sgrs": cum_sgrs,
+            "end_tau": end_tau,
+            "hist_offsets": hist_off,
+            "carry_cum": st.carry_cum.copy(),
+            "carry_alpha": st.carry_alpha.copy(),
+            "carry_err": st.carry_err.copy(),
+            "carry_sup": st.carry_sup.copy(),
+        }
+
+    def restore(self, state: dict) -> "MultiStreamSGrapp":
+        """Load a :meth:`state_dict` (fleet config comes from the
+        constructor; the dict carries only stream state).  Strict: missing
+        or unknown keys, a version mismatch, or an ``nt_w``/``n_streams``
+        mismatch raise ``ValueError``.  A restored fleet resumes every
+        tenant bit-identically."""
+        check_state_dict_keys(state, _MULTI_STATE_DICT_KEYS,
+                              schema="MultiStreamSGrapp")
+        if int(state["nt_w"]) != self.nt_w:
+            raise ValueError(
+                f"checkpoint nt_w={int(state['nt_w'])} != engine "
+                f"nt_w={self.nt_w}")
+        if int(state["n_streams"]) != self.n_streams:
+            raise ValueError(
+                f"checkpoint n_streams={int(state['n_streams'])} != engine "
+                f"n_streams={self.n_streams}")
+        n = self.n_streams
+        buf_off = np.asarray(state["buf_offsets"], dtype=np.int64)
+        buf_i = np.asarray(state["buf_i"], dtype=np.int64)
+        buf_j = np.asarray(state["buf_j"], dtype=np.int64)
+        buf_len = np.asarray(state["buf_len"], dtype=np.int64)
+        cap = max(256, int(buf_len.max()) if n else 256)
+        st = stream_state_init(n, self.alpha0, buf_capacity=cap)
+        for s in range(n):
+            a, b = int(buf_off[s]), int(buf_off[s + 1])
+            st.buf_i[s, :b - a] = buf_i[a:b]
+            st.buf_j[s, :b - a] = buf_j[a:b]
+        st.buf_len[:] = buf_len
+        st.buf_last_tau[:] = np.asarray(state["buf_last_tau"], np.float64)
+        st.uniq[:] = np.asarray(state["uniq"], np.int64)
+        st.last_tau[:] = np.asarray(state["last_tau"], np.float64)
+        st.total_sgrs[:] = np.asarray(state["total_sgrs"], np.int64)
+        st.finalized[:] = np.asarray(state["finalized"], bool)
+        st.carry_cum[:] = np.asarray(state["carry_cum"], np.float32)
+        st.carry_alpha[:] = np.asarray(state["carry_alpha"], np.float32)
+        st.carry_err[:] = np.asarray(state["carry_err"], np.float32)
+        st.carry_sup[:] = np.asarray(state["carry_sup"], bool)
+        self._state = st
+        hist_off = np.asarray(state["hist_offsets"], dtype=np.int64)
+        counts = np.asarray(state["counts"], np.float64)
+        estimates = np.asarray(state["estimates"], np.float32)
+        cum_sgrs = np.asarray(state["cum_sgrs"], np.int64)
+        end_tau = np.asarray(state["end_tau"], np.float64)
+        for s in range(n):
+            a, b = int(hist_off[s]), int(hist_off[s + 1])
+            self._counts[s] = [float(c) for c in counts[a:b]]
+            self._estimates[s] = [np.float32(e) for e in estimates[a:b]]
+            self._cum_sgrs[s] = [int(c) for c in cum_sgrs[a:b]]
+            self._end_tau[s] = [float(t) for t in end_tau[a:b]]
+        self._pending = [[] for _ in range(n)]
+        self._pending_streams = set()
+        self._n_pending_total = 0
+        return self

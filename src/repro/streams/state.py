@@ -1,0 +1,378 @@
+"""Per-stream engine state as a flat, vmappable pytree + the pure windowizer.
+
+:class:`StreamState` holds everything :class:`~repro.streams.engine.
+StreamingSGrapp` used to keep in loose Python attributes — the open-window
+edge buffer, the unique-timestamp quota progress, the cumulative ``|E|``,
+and the estimator carry (including the adapted alpha of Algorithm 5) — as a
+flat dataclass of numpy leaves with a **leading stream axis**.  One engine's
+state is the ``n_streams=1`` case; a fleet of N tenants is the same pytree
+with ``[N, ...]`` leaves.  The dataclass is registered with
+``jax.tree_util`` so a fleet state stacks, maps and vmaps like any other
+pytree (the batched estimator step of :func:`repro.core.sgrapp.
+estimator_step_batched` consumes exactly this leading axis).
+
+The windowizer itself (:func:`windowizer_push`) is a *pure-ish* function of
+the state: one vectorized pass over a tagged ``(stream_id, tau, i, j)``
+micro-batch computes every record's unique-timestamp rank and window offset
+for **all streams at once** (stable grouping + segmented cumsum — no
+per-record Python), then a per-stream epilogue that is O(windows closed)
+splits the chunk at window boundaries and updates each stream's buffer row.
+Both the single-stream engine and :class:`~repro.streams.multi.
+MultiStreamSGrapp` push through this one function, which is why an N=1
+fleet is bit-identical to a dedicated engine: there is only one windowizer.
+
+The open-window buffers are capacity-padded rows (``buf_i[s, :buf_len[s]]``
+is stream s's live buffer) grown by doubling, so the whole fleet state stays
+a fixed small set of rectangular arrays — vmappable, checkpointable as flat
+leaves, and cheap to index per stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+import numpy as np
+
+__all__ = [
+    "StreamState",
+    "stream_state_init",
+    "estimator_carry",
+    "set_estimator_carry",
+    "windowizer_push",
+    "windowizer_close_tail",
+    "NO_TAU",
+]
+
+NO_TAU = float("nan")  # sentinel: no timestamp observed yet
+
+
+@dataclass
+class StreamState:
+    """Per-stream engine state, leading axis = stream (see module doc).
+
+    buf_i / buf_j  : int64   [n_streams, buf_capacity]  open-window buffer
+    buf_len        : int64   [n_streams]   live sgrs in each buffer row
+    buf_last_tau   : float64 [n_streams]   last tau in the open buffer
+    uniq           : int64   [n_streams]   unique timestamps in the open window
+    last_tau       : float64 [n_streams]   last tau ever seen (order check)
+    total_sgrs     : int64   [n_streams]   cumulative |E| over counted windows
+    finalized      : bool    [n_streams]
+    carry_cum / carry_alpha / carry_err : float32 [n_streams]  estimator carry
+    carry_sup      : bool    [n_streams]   (Alg. 5 supervision latch)
+    """
+
+    buf_i: np.ndarray
+    buf_j: np.ndarray
+    buf_len: np.ndarray
+    buf_last_tau: np.ndarray
+    uniq: np.ndarray
+    last_tau: np.ndarray
+    total_sgrs: np.ndarray
+    finalized: np.ndarray
+    carry_cum: np.ndarray
+    carry_alpha: np.ndarray
+    carry_err: np.ndarray
+    carry_sup: np.ndarray
+
+    @property
+    def n_streams(self) -> int:
+        return self.buf_len.shape[0]
+
+    @property
+    def buf_capacity(self) -> int:
+        return self.buf_i.shape[1]
+
+
+def _register_pytree() -> None:
+    import jax
+
+    names = [f.name for f in fields(StreamState)]
+    try:
+        jax.tree_util.register_dataclass(StreamState, data_fields=names,
+                                         meta_fields=[])
+    except (AttributeError, TypeError):  # older jax: manual registration
+        jax.tree_util.register_pytree_node(
+            StreamState,
+            lambda s: ([getattr(s, n) for n in names], None),
+            lambda _, leaves: StreamState(*leaves),
+        )
+
+
+_register_pytree()
+
+
+def stream_state_init(n_streams: int, alpha0, *,
+                      buf_capacity: int = 256) -> StreamState:
+    """Fresh fleet state: empty buffers, quota at zero, estimator carry at
+    ``estimator_init(alpha0)``.  ``alpha0`` is a scalar (shared) or a length-
+    ``n_streams`` sequence (per-tenant initial exponent)."""
+    if n_streams < 1:
+        raise ValueError("n_streams must be >= 1")
+    alpha = np.broadcast_to(
+        np.asarray(alpha0, dtype=np.float32), (n_streams,)).copy()
+    return StreamState(
+        buf_i=np.zeros((n_streams, buf_capacity), dtype=np.int64),
+        buf_j=np.zeros((n_streams, buf_capacity), dtype=np.int64),
+        buf_len=np.zeros(n_streams, dtype=np.int64),
+        buf_last_tau=np.full(n_streams, NO_TAU, dtype=np.float64),
+        uniq=np.zeros(n_streams, dtype=np.int64),
+        last_tau=np.full(n_streams, NO_TAU, dtype=np.float64),
+        total_sgrs=np.zeros(n_streams, dtype=np.int64),
+        finalized=np.zeros(n_streams, dtype=bool),
+        carry_cum=np.zeros(n_streams, dtype=np.float32),
+        carry_alpha=alpha,
+        carry_err=np.zeros(n_streams, dtype=np.float32),
+        carry_sup=np.zeros(n_streams, dtype=bool),
+    )
+
+
+def estimator_carry(state: StreamState, s: int) -> tuple:
+    """Stream ``s``'s estimator carry as the ``(cumB, alpha, prev_err,
+    prev_supervised)`` scalar tuple :func:`repro.core.sgrapp.estimator_step`
+    consumes."""
+    return (state.carry_cum[s], state.carry_alpha[s],
+            state.carry_err[s], state.carry_sup[s])
+
+
+def set_estimator_carry(state: StreamState, s: int, carry) -> None:
+    cum, alpha, err, sup = (np.asarray(c) for c in carry)
+    state.carry_cum[s] = cum
+    state.carry_alpha[s] = alpha
+    state.carry_err[s] = err
+    state.carry_sup[s] = sup
+
+
+# ---------------------------------------------------------------------------
+# buffer rows
+# ---------------------------------------------------------------------------
+
+def _buf_append(state: StreamState, s: int, ei: np.ndarray,
+                ej: np.ndarray) -> None:
+    """Append a chunk to stream s's open-window buffer row, doubling the
+    shared row capacity when it overflows (amortized O(1) per sgr)."""
+    n = ei.shape[0]
+    if n == 0:
+        return
+    pos = int(state.buf_len[s])
+    need = pos + n
+    cap = state.buf_capacity
+    if need > cap:
+        while cap < need:
+            cap *= 2
+        grow = cap - state.buf_capacity
+        pad = ((0, 0), (0, grow))
+        state.buf_i = np.pad(state.buf_i, pad)
+        state.buf_j = np.pad(state.buf_j, pad)
+    state.buf_i[s, pos:need] = ei
+    state.buf_j[s, pos:need] = ej
+    state.buf_len[s] = need
+
+
+def _buf_take(state: StreamState, s: int) -> tuple[np.ndarray, np.ndarray]:
+    """Drain stream s's buffer row: copies of the live prefix, row reset."""
+    n = int(state.buf_len[s])
+    ei = state.buf_i[s, :n].copy()
+    ej = state.buf_j[s, :n].copy()
+    state.buf_len[s] = 0
+    return ei, ej
+
+
+# ---------------------------------------------------------------------------
+# the windowizer (paper Algorithm 3, vectorized over a tagged micro-batch)
+# ---------------------------------------------------------------------------
+
+def _ingest_ranked(
+    state: StreamState, s: int, tau: np.ndarray, ei: np.ndarray,
+    ej: np.ndarray, uniq_idx_last: int, w_off: np.ndarray, nt_w: int,
+    closed: list[tuple[int, np.ndarray, np.ndarray, int, float]],
+) -> None:
+    """Shared per-stream ingest epilogue: given a chunk of stream ``s``'s
+    records with their window offsets (``w_off``; 0 = still the open
+    window) already computed, split at window boundaries, emit closed
+    windows onto ``closed``, and update the stream's buffer/quota rows.
+    Both the single-stream fast path and the grouped multi-stream path end
+    here — the window-boundary subtleties (empty completing segment,
+    quota rollover) have exactly one implementation."""
+    n = tau.shape[0]
+    w_max = int(w_off[-1])
+    if w_max == 0:
+        # appends copy into the buffer row, so the caller's arrays are
+        # never aliased (middle-segment fancy indexing below never aliases
+        # either)
+        _buf_append(state, s, ei, ej)
+    else:
+        cuts = np.searchsorted(w_off, np.arange(1, w_max + 1), side="left")
+        segs = np.split(np.arange(n), cuts)
+        # segment 0 completes the open window
+        s0 = segs[0]
+        _buf_append(state, s, ei[s0], ej[s0])
+        end_tau = (float(tau[s0[-1]]) if s0.shape[0]
+                   else float(state.buf_last_tau[s]))
+        m = int(state.buf_len[s])
+        bi, bj = _buf_take(state, s)
+        closed.append((s, bi, bj, m, end_tau))
+        # middle segments are whole windows in their own right
+        for seg in segs[1:-1]:
+            closed.append((s, ei[seg], ej[seg],
+                           int(seg.shape[0]), float(tau[seg[-1]])))
+        # the last segment becomes the new open window
+        _buf_append(state, s, ei[segs[-1]], ej[segs[-1]])
+    state.uniq[s] = uniq_idx_last - w_max * nt_w + 1
+    state.buf_last_tau[s] = float(tau[-1])
+    state.last_tau[s] = float(tau[-1])
+
+
+def _push_one_stream(
+    state: StreamState, s: int, tau: np.ndarray, ei: np.ndarray,
+    ej: np.ndarray, nt_w: int,
+) -> list[tuple[int, np.ndarray, np.ndarray, int, float]]:
+    """Single-stream fast path of :func:`windowizer_push`: the whole chunk
+    belongs to stream ``s``, so no grouping pass runs — this is the
+    per-push hot loop of serving (micro-batches of one are common), kept
+    as lean as the pre-fleet engine's."""
+    if not 0 <= s < state.n_streams:
+        raise ValueError(f"stream_id out of range [0, {state.n_streams})")
+    if not np.isfinite(tau).all():
+        # a NaN would alias the NO_TAU sentinel, slip past the order
+        # check (NaN < x is False) and count as a new unique timestamp
+        # per record — reject it loudly, same contract as windowize
+        raise ValueError("timestamps must be finite")
+    last = state.last_tau[s]
+    if np.any(np.diff(tau) < 0) or (
+            not np.isnan(last) and tau[0] < last):
+        raise ValueError("timestamps must be non-decreasing (stream order)")
+    if state.finalized[s]:
+        raise RuntimeError("push after finalize(); stream already ended")
+
+    # unique-timestamp rank of each record, continuing the open window
+    uniq0 = int(state.uniq[s])
+    prev = state.buf_last_tau[s] if uniq0 else NO_TAU
+    n = tau.shape[0]
+    is_new = np.empty(n, dtype=np.int64)
+    is_new[0] = 1 if (np.isnan(prev) or tau[0] != prev) else 0
+    is_new[1:] = tau[1:] != tau[:-1]
+    uniq_idx = uniq0 - 1 + np.cumsum(is_new)   # 0-based within window run
+    w_off = uniq_idx // nt_w                   # 0 = still the open window
+
+    closed: list[tuple[int, np.ndarray, np.ndarray, int, float]] = []
+    _ingest_ranked(state, s, tau, ei, ej, int(uniq_idx[-1]), w_off, nt_w,
+                   closed)
+    return closed
+
+def windowizer_push(
+    state: StreamState,
+    stream_ids: np.ndarray,
+    tau: np.ndarray,
+    edge_i: np.ndarray,
+    edge_j: np.ndarray,
+    nt_w: int,
+) -> list[tuple[int, np.ndarray, np.ndarray, int, float]]:
+    """Ingest a tagged micro-batch, closing adaptive windows online.
+
+    Returns the closed windows as ``(stream, edge_i, edge_j, n_sgrs,
+    end_tau)`` tuples in per-stream close order (cross-stream order follows
+    ascending stream id — irrelevant to any consumer, since streams are
+    independent).  Mutates ``state`` in place.  All validation happens
+    *before* any mutation, so a rejected batch leaves the fleet untouched.
+
+    The unique-timestamp rank of every record — for every stream in the
+    batch — is computed in one vectorized pass: records stably group by
+    stream id (arrival order preserved within a stream), a chunk-global
+    ``is_new`` diff marks fresh timestamps, segment starts patch in each
+    stream's open-buffer boundary, and a segmented cumsum yields the
+    within-stream rank.  Only the window-boundary splits (O(windows
+    closed)) run per stream.
+    """
+    tau = np.atleast_1d(np.asarray(tau, dtype=np.float64))
+    ei = np.atleast_1d(np.asarray(edge_i, dtype=np.int64))
+    ej = np.atleast_1d(np.asarray(edge_j, dtype=np.int64))
+    if not (tau.shape == ei.shape == ej.shape and tau.ndim == 1):
+        raise ValueError("tau/edge_i/edge_j must be equal-length 1-D")
+    if np.ndim(stream_ids) == 0:
+        # scalar tag: the whole batch is one stream's — the dominant
+        # serving shape (and the single-stream engine's only shape), so it
+        # skips the grouping machinery entirely
+        if tau.size == 0:
+            return []
+        return _push_one_stream(state, int(stream_ids), tau, ei, ej, nt_w)
+    sid = np.atleast_1d(np.asarray(stream_ids, dtype=np.int64))
+    if sid.shape != tau.shape:
+        raise ValueError("stream_ids/tau/edge_i/edge_j must be equal-length 1-D")
+    if tau.size == 0:
+        return []
+    if sid[0] == sid[-1] and (sid == sid[0]).all():
+        return _push_one_stream(state, int(sid[0]), tau, ei, ej, nt_w)
+    if sid.min() < 0 or sid.max() >= state.n_streams:
+        raise ValueError(
+            f"stream_id out of range [0, {state.n_streams})")
+    if not np.isfinite(tau).all():
+        # a NaN would alias the NO_TAU sentinel, slip past the order
+        # check (NaN < x is False) and count as a new unique timestamp
+        # per record — reject it loudly, same contract as windowize
+        raise ValueError("timestamps must be finite")
+
+    # stable grouping: per-stream contiguous segments, arrival order kept
+    order = np.argsort(sid, kind="stable")
+    if np.array_equal(order, np.arange(order.shape[0])):
+        t, gi, gj, gs = tau, ei, ej, sid  # already grouped (common case)
+    else:
+        t, gi, gj, gs = tau[order], ei[order], ej[order], sid[order]
+    n = t.shape[0]
+    seg_start = np.concatenate(
+        ([0], np.flatnonzero(gs[1:] != gs[:-1]) + 1))
+    seg_end = np.concatenate((seg_start[1:], [n]))
+    seg_sid = gs[seg_start]
+
+    # per-stream validation (before any mutation)
+    bad = np.diff(t) < 0
+    bad[seg_start[1:] - 1] = False  # stream boundaries may go backwards
+    if bad.any():
+        raise ValueError("timestamps must be non-decreasing (stream order)")
+    first = t[seg_start]
+    prev_seen = state.last_tau[seg_sid]
+    if np.any(~np.isnan(prev_seen) & (first < prev_seen)):
+        raise ValueError("timestamps must be non-decreasing (stream order)")
+    if state.finalized[seg_sid].any():
+        raise RuntimeError("push after finalize(); stream already ended")
+
+    # unique-timestamp rank of each record, continuing each open window:
+    # record r is "new" when its tau differs from its predecessor (the
+    # stream's last buffered tau at segment starts — close boundaries
+    # always fall on a strictly increasing tau, so the diff is exact)
+    is_new = np.empty(n, dtype=np.int64)
+    is_new[1:] = t[1:] != t[:-1]
+    prev = np.where(state.uniq[seg_sid] > 0,
+                    state.buf_last_tau[seg_sid], NO_TAU)
+    is_new[seg_start] = np.isnan(prev) | (first != prev)
+    # segmented cumsum -> within-stream unique rank, then window offset
+    cum = np.cumsum(is_new)
+    base = np.zeros(n, dtype=np.int64)
+    base[seg_start] = np.r_[0, cum[seg_start[1:] - 1]]
+    base = np.maximum.accumulate(base)
+    rank = cum - base                                # 1-based within segment
+    uniq_idx = state.uniq[gs] - 1 + rank             # 0-based within window run
+    w_off = uniq_idx // nt_w                         # 0 = still the open window
+
+    closed: list[tuple[int, np.ndarray, np.ndarray, int, float]] = []
+    for a, b, s in zip(seg_start, seg_end, seg_sid):
+        _ingest_ranked(state, int(s), t[a:b], gi[a:b], gj[a:b],
+                       int(uniq_idx[b - 1]), w_off[a:b], nt_w, closed)
+    return closed
+
+
+def windowizer_close_tail(
+    state: StreamState, s: int, nt_w: int, *, drop_partial: bool,
+) -> tuple[int, np.ndarray, np.ndarray, int, float] | None:
+    """End stream ``s``: close the trailing window (kept if it filled its
+    quota, else per ``drop_partial``) and mark the stream finalized.
+    Returns the closed window tuple, or None if the tail was dropped or
+    empty."""
+    out = None
+    if int(state.buf_len[s]) and (int(state.uniq[s]) >= nt_w
+                                  or not drop_partial):
+        m = int(state.buf_len[s])
+        bi, bj = _buf_take(state, s)
+        out = (s, bi, bj, m, float(state.buf_last_tau[s]))
+    state.buf_len[s] = 0
+    state.uniq[s] = 0
+    state.finalized[s] = True
+    return out

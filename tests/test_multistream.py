@@ -1,0 +1,460 @@
+"""Differential validation of the multi-tenant streaming engine.
+
+The core contract: every tenant of a :class:`MultiStreamSGrapp` fleet is
+*bit-identical* to a dedicated :class:`StreamingSGrapp` on the same stream —
+same windowizer (one shared function), same packer, same counting tiers
+(co-batched windows count to the same integers), same float32 scalar
+estimator steps.  Pinned here for N=1 (fleet == single-stream engine), for
+N>=4 heterogeneous tenants across every tier, for the sharded dispatch path
+(CI multi-device job), and through the multi-tenant edge cases: unequal
+stream lengths, a tenant that never fills its first quota, interleaved vs
+per-stream-sorted tagged arrival, and a mid-stream whole-fleet
+checkpoint/restore.
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import TIERS, WindowExecutor
+from repro.core.sgrapp import (
+    estimator_init,
+    estimator_step,
+    estimator_step_batched,
+)
+from repro.core.windows import pack_windows
+from repro.streams import (
+    MultiStreamSGrapp,
+    StreamingSGrapp,
+    synthetic_rating_stream,
+)
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+NT_W = 40
+
+
+def make_stream(n=1200, seed=6, temporal="uniform"):
+    return synthetic_rating_stream(n_users=80, n_items=60, n_edges=n,
+                                   seed=seed, temporal=temporal,
+                                   n_unique=max(2, n // 5))
+
+
+def make_fleet_streams():
+    """Four heterogeneous tenants: different lengths, seeds and temporal
+    behavior — incl. one so short it never fills its first window quota."""
+    return [
+        make_stream(n=1200, seed=6, temporal="uniform"),
+        make_stream(n=700, seed=9, temporal="bursty"),
+        make_stream(n=1500, seed=12, temporal="wave"),
+        make_stream(n=60, seed=15),   # < NT_W unique stamps: zero windows
+    ]
+
+
+def dedicated_results(streams, *, tier="dense", mb=33, flush_every=3,
+                      truths=None, alpha0=0.95, **kw):
+    out = []
+    for sid, s in enumerate(streams):
+        eng = StreamingSGrapp(NT_W, alpha0, tier=tier,
+                              flush_every=flush_every,
+                              truths=None if truths is None else truths[sid],
+                              **kw)
+        for a in range(0, len(s), mb):
+            eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb], s.edge_j[a:a + mb])
+        out.append(eng.finalize())
+    return out
+
+
+def push_round_robin(eng, streams, mb=33):
+    for a in range(0, max(len(s) for s in streams), mb):
+        for sid, s in enumerate(streams):
+            if a < len(s):
+                eng.push(sid, s.tau[a:a + mb], s.edge_i[a:a + mb],
+                         s.edge_j[a:a + mb])
+    return eng.finalize()
+
+
+def assert_same_result(res, ref):
+    np.testing.assert_array_equal(res.window_counts, ref.window_counts)
+    np.testing.assert_array_equal(res.estimates, ref.estimates)
+    np.testing.assert_array_equal(res.cum_edges, ref.cum_edges)
+    assert np.float32(res.alpha_final) == np.float32(ref.alpha_final)
+
+
+# -- N=1: the fleet engine IS the single-stream engine -------------------------
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_n1_fleet_bit_identical_to_single_stream(tier):
+    s = make_stream()
+    ref = dedicated_results([s], tier=tier)[0]
+    for mb in (1, 7, len(s)):
+        fleet = MultiStreamSGrapp(1, NT_W, 0.95, tier=tier, flush_every=3)
+        res = push_round_robin(fleet, [s], mb=mb)
+        assert_same_result(res[0], ref)
+
+
+# -- N>=4 heterogeneous tenants vs dedicated engines, all tiers ----------------
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_each_tenant_bit_identical_to_dedicated_engine(tier):
+    streams = make_fleet_streams()
+    refs = dedicated_results(streams, tier=tier)
+    fleet = MultiStreamSGrapp(len(streams), NT_W, 0.95, tier=tier,
+                              flush_every=3)
+    res = push_round_robin(fleet, streams)
+    for sid, ref in enumerate(refs):
+        assert_same_result(res[sid], ref)
+    # the short tenant really exercised the never-fills-quota path
+    assert len(res[3].estimates) == 0
+
+
+def test_unequal_stream_lengths_and_flush_batching():
+    """Tenants finishing at very different times, with every fleet-wide
+    flush_every: batching never changes any tenant's estimates."""
+    streams = make_fleet_streams()
+    refs = dedicated_results(streams)
+    for flush_every in (1, 2, 1000):
+        fleet = MultiStreamSGrapp(len(streams), NT_W, 0.95, tier="dense",
+                                  flush_every=flush_every)
+        res = push_round_robin(fleet, streams, mb=50)
+        for sid, ref in enumerate(refs):
+            assert_same_result(res[sid], ref)
+
+
+def test_interleaved_vs_sorted_tagged_arrival():
+    """One tagged push with records record-level interleaved across tenants
+    == per-stream-sorted pushes == dedicated engines (stable grouping)."""
+    streams = make_fleet_streams()[:3]
+    refs = dedicated_results(streams)
+    # record-level round-robin interleave of the three streams
+    cursors = [0] * len(streams)
+    sid_l, tau_l, ei_l, ej_l = [], [], [], []
+    while any(c < len(s) for c, s in zip(cursors, streams)):
+        for sid, s in enumerate(streams):
+            c = cursors[sid]
+            if c < len(s):
+                sid_l.append(sid)
+                tau_l.append(s.tau[c])
+                ei_l.append(s.edge_i[c])
+                ej_l.append(s.edge_j[c])
+                cursors[sid] = c + 1
+    sids = np.array(sid_l)
+    tau, ei, ej = np.array(tau_l), np.array(ei_l), np.array(ej_l)
+
+    interleaved = MultiStreamSGrapp(3, NT_W, 0.95, flush_every=4)
+    for a in range(0, len(sids), 97):
+        interleaved.push(sids[a:a + 97], tau[a:a + 97], ei[a:a + 97],
+                         ej[a:a + 97])
+    res_i = interleaved.finalize()
+
+    srt = MultiStreamSGrapp(3, NT_W, 0.95, flush_every=4)
+    order = np.argsort(sids, kind="stable")
+    for a in range(0, len(order), 97):
+        o = order[a:a + 97]
+        srt.push(sids[o], tau[o], ei[o], ej[o])
+    res_s = srt.finalize()
+
+    for sid, ref in enumerate(refs):
+        assert_same_result(res_i[sid], ref)
+        assert_same_result(res_s[sid], ref)
+
+
+def test_scalar_stream_id_tags_whole_batch():
+    s = make_stream()
+    ref = dedicated_results([s])[0]
+    fleet = MultiStreamSGrapp(4, NT_W, 0.95, flush_every=3)
+    for a in range(0, len(s), 41):
+        fleet.push(2, s.tau[a:a + 41], s.edge_i[a:a + 41],
+                   s.edge_j[a:a + 41])
+    res = fleet.finalize()
+    assert_same_result(res[2], ref)
+    for sid in (0, 1, 3):
+        assert len(res[sid].estimates) == 0
+
+
+# -- per-tenant supervision (sGrapp-x) ----------------------------------------
+
+def test_per_tenant_truths_adapt_independently():
+    from benchmarks.common import ground_truth_cumulative
+
+    streams = [make_stream(seed=3), make_stream(seed=4, temporal="bursty")]
+    truths = [ground_truth_cumulative(s, NT_W) for s in streams]
+    truths[1] = truths[1][:2]      # tenant 1: only a 2-window supervised prefix
+    refs = dedicated_results(streams, truths=truths, alpha0=1.2)
+    fleet = MultiStreamSGrapp(2, NT_W, 1.2, truths=truths, flush_every=2)
+    res = push_round_robin(fleet, streams)
+    for sid, ref in enumerate(refs):
+        assert_same_result(res[sid], ref)
+        assert fleet.alpha(sid) == ref.alpha_final
+    # the two tenants genuinely adapted to different alphas
+    assert res[0].alpha_final != res[1].alpha_final
+
+
+# -- per-stream clock independence + validation --------------------------------
+
+def test_tenant_clocks_are_independent():
+    """A tenant far ahead in time never constrains another: per-stream
+    order checks only."""
+    fleet = MultiStreamSGrapp(2, 2, 0.95)
+    fleet.push(0, [1000.0], [1], [2])
+    fleet.push(1, [1.0], [3], [4])        # far behind stream 0: fine
+    with pytest.raises(ValueError, match="non-decreasing"):
+        fleet.push(0, [999.0], [1], [2])  # behind its OWN clock: rejected
+    # the rejected push left the fleet untouched
+    fleet.push(0, [1001.0], [1], [2])
+    fleet.push(1, [2.0], [3], [4])
+
+
+def test_push_validates_and_rejects_before_mutation():
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95)
+    with pytest.raises(ValueError, match="out of range"):
+        fleet.push(2, [1.0], [0], [0])
+    with pytest.raises(ValueError, match="out of range"):
+        fleet.push([0, 5], [1.0, 2.0], [0, 1], [0, 1])
+    with pytest.raises(ValueError, match="finite"):
+        fleet.push(0, [np.nan], [0], [0])
+    with pytest.raises(ValueError, match="equal-length"):
+        fleet.push(0, [1.0, 2.0], [0], [0, 1])
+    # a batch mixing a valid stream with an invalid one mutates nothing
+    fleet.push(0, [5.0], [1], [1])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        fleet.push([0, 1], [4.0, 1.0], [0, 1], [0, 1])
+    fleet.push(1, [1.0], [0], [0])  # stream 1 unpolluted by the rejection
+
+
+def test_constructor_validates():
+    with pytest.raises(ValueError):
+        MultiStreamSGrapp(0, NT_W, 0.95)
+    with pytest.raises(ValueError):
+        MultiStreamSGrapp(2, 0, 0.95)
+    with pytest.raises(ValueError):
+        MultiStreamSGrapp(2, NT_W, 0.95, flush_every=0)
+    with pytest.raises(ValueError):
+        MultiStreamSGrapp(2, NT_W, 0.95, truths=[None])  # wrong arity
+    with pytest.raises(ValueError):
+        MultiStreamSGrapp(2, NT_W, 0.95, executor=WindowExecutor("dense"),
+                          devices=2)
+
+
+def test_push_after_finalize_raises():
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95)
+    fleet.push(0, [1.0], [0], [0])
+    fleet.finalize()
+    with pytest.raises(RuntimeError):
+        fleet.push(0, [2.0], [1], [1])
+
+
+# -- whole-fleet checkpoint / restore -----------------------------------------
+
+def test_fleet_checkpoint_restore_mid_stream_bit_identical():
+    """Crash/restore of the whole fleet at an arbitrary point (mid-window,
+    mid-flush, tenants at different progress) is invisible — through an
+    on-disk checkpoint roundtrip."""
+    streams = make_fleet_streams()
+    refs = dedicated_results(streams)
+
+    a = MultiStreamSGrapp(len(streams), NT_W, 0.95, flush_every=2)
+    # push an uneven prefix: tenants interrupted at different offsets
+    for sid, s in enumerate(streams):
+        h = min(len(s), 211 + 97 * sid)  # not window/micro-batch aligned
+        a.push(sid, s.tau[:h], s.edge_i[:h], s.edge_j[:h])
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, a.state_dict())
+        b = MultiStreamSGrapp(len(streams), NT_W, 0.95, flush_every=7)
+        state, _ = restore_checkpoint(d, b.state_dict(), host=True)
+        b.restore(state)
+    for sid, s in enumerate(streams):
+        h = min(len(s), 211 + 97 * sid)
+        if h < len(s):
+            b.push(sid, s.tau[h:], s.edge_i[h:], s.edge_j[h:])
+    res = b.finalize()
+    for sid, ref in enumerate(refs):
+        assert_same_result(res[sid], ref)
+
+
+def test_fleet_restore_is_strict():
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95)
+    fleet.push(0, [1.0, 2.0], [0, 1], [0, 1])
+    sd = fleet.state_dict()
+
+    missing = dict(sd)
+    del missing["carry_alpha"]
+    with pytest.raises(ValueError, match="missing=\\['carry_alpha'\\]"):
+        MultiStreamSGrapp(2, NT_W, 0.95).restore(missing)
+
+    unknown = dict(sd)
+    unknown["bogus"] = np.int64(1)
+    with pytest.raises(ValueError, match="unknown=\\['bogus'\\]"):
+        MultiStreamSGrapp(2, NT_W, 0.95).restore(unknown)
+
+    wrong_version = dict(sd)
+    wrong_version["version"] = np.int64(99)
+    with pytest.raises(ValueError, match="version 99"):
+        MultiStreamSGrapp(2, NT_W, 0.95).restore(wrong_version)
+
+    with pytest.raises(ValueError, match="n_streams"):
+        MultiStreamSGrapp(3, NT_W, 0.95).restore(sd)
+    with pytest.raises(ValueError, match="nt_w"):
+        MultiStreamSGrapp(2, NT_W + 1, 0.95).restore(sd)
+
+
+def test_single_stream_restore_is_strict():
+    eng = StreamingSGrapp(NT_W, 0.95)
+    eng.push([1.0, 2.0], [0, 1], [0, 1])
+    sd = eng.state_dict()
+    assert int(sd["version"]) == 1
+
+    missing = dict(sd)
+    del missing["uniq"]
+    with pytest.raises(ValueError, match="missing=\\['uniq'\\]"):
+        StreamingSGrapp(NT_W, 0.95).restore(missing)
+
+    unknown = dict(sd)
+    unknown["extra_key"] = np.float64(0.0)
+    with pytest.raises(ValueError, match="unknown=\\['extra_key'\\]"):
+        StreamingSGrapp(NT_W, 0.95).restore(unknown)
+
+    wrong_version = dict(sd)
+    wrong_version["version"] = np.int64(0)
+    with pytest.raises(ValueError, match="version 0"):
+        StreamingSGrapp(NT_W, 0.95).restore(wrong_version)
+
+    # the happy path still restores bit-identically
+    StreamingSGrapp(NT_W, 0.95).restore(sd)
+
+
+# -- flush failure atomicity ---------------------------------------------------
+
+def test_failed_flush_keeps_windows_pending_single_stream():
+    """A flush that dies in packing/counting (here: the id-range guard on a
+    >= 2**32 edge id) must not drop the pending windows — the engine stays
+    consistent and the failure reproduces instead of vanishing."""
+    eng = StreamingSGrapp(2, 0.95, flush_every=1000)
+    eng.push([1.0, 2.0, 3.0], [1, 2**40, 5], [0, 1, 2])  # window 0 has the bad id
+    assert eng.n_pending == 1
+    with pytest.raises(ValueError, match="2\\*\\*32"):
+        eng.flush()
+    assert eng.n_pending == 1          # nothing silently dropped
+    with pytest.raises(ValueError, match="2\\*\\*32"):
+        eng.result()                   # deterministic, not a one-shot loss
+
+
+def test_failed_flush_keeps_whole_fleet_pending():
+    """One tenant's bad window must not cost other tenants their windows."""
+    fleet = MultiStreamSGrapp(2, 2, 0.95, flush_every=1000)
+    fleet.push(0, [1.0, 2.0, 3.0], [1, 2**40, 5], [0, 1, 2])  # bad tenant
+    fleet.push(1, [1.0, 2.0, 3.0], [1, 2, 3], [0, 1, 2])      # innocent tenant
+    assert fleet.n_pending == 2
+    with pytest.raises(ValueError, match="2\\*\\*32"):
+        fleet.flush()
+    assert fleet.n_pending == 2
+    assert fleet.n_windows(0) == 1 and fleet.n_windows(1) == 1
+
+
+# -- cross-stream co-batching in the executor ----------------------------------
+
+def test_cobatching_shares_buckets_and_scatters_by_provenance():
+    """Same-capacity windows from different tenants land in ONE bucket (one
+    compiled dispatch), and the stream-id provenance lane scatters counts
+    back to the right tenant."""
+    rng = np.random.default_rng(0)
+    per_edges, sids = [], []
+    for s in range(3):
+        for _ in range(4):
+            m = 20 + int(rng.integers(0, 8))  # same ladder rung for all
+            e = np.stack([rng.integers(0, 12, m), rng.integers(0, 12, m)],
+                         axis=1)
+            per_edges.append(e)
+            sids.append(s)
+    n = len(per_edges)
+    n_sgrs = np.array([len(e) for e in per_edges])
+    batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=np.cumsum(n_sgrs),
+                         window_end_tau=np.arange(n, dtype=np.float64),
+                         align=64, stream_ids=np.array(sids, dtype=np.int32))
+    ex = WindowExecutor("dense", align=64, snap=0)
+    plan = ex.plan(batch)
+    assert len(plan) == 1, "equal-rung windows must co-batch into one bucket"
+    assert len(np.unique(np.asarray(sids)[plan[0].windows])) == 3
+
+    res = ex.run(batch)
+    np.testing.assert_array_equal(res.stream_ids, batch.stream_ids)
+    # counts scattered per tenant == counting that tenant's windows alone
+    for s in range(3):
+        idx = np.flatnonzero(batch.stream_ids == s)
+        solo = pack_windows([per_edges[i] for i in idx],
+                            n_sgrs=n_sgrs[idx],
+                            cum_sgrs=np.cumsum(n_sgrs[idx]),
+                            window_end_tau=np.arange(len(idx), dtype=float),
+                            align=64)
+        np.testing.assert_array_equal(res.counts[idx],
+                                      ex.window_counts(solo))
+
+
+def test_take_propagates_stream_ids():
+    per_edges = [np.array([[0, 0], [1, 1]]), np.array([[0, 1]]),
+                 np.array([[2, 2]])]
+    batch = pack_windows(per_edges, n_sgrs=np.array([2, 1, 1]),
+                         cum_sgrs=np.array([2, 3, 4]),
+                         window_end_tau=np.zeros(3),
+                         stream_ids=np.array([0, 1, 0], dtype=np.int32))
+    sub = batch.take([2, 0])
+    np.testing.assert_array_equal(sub.stream_ids, [0, 0])
+    assert pack_windows(per_edges, n_sgrs=np.array([2, 1, 1]),
+                        cum_sgrs=np.array([2, 3, 4]),
+                        window_end_tau=np.zeros(3)).stream_ids is None
+
+
+def test_sliding_mode_rejects_multi_stream_batches():
+    per_edges = [np.array([[0, 0]]), np.array([[1, 1]])]
+    batch = pack_windows(per_edges, n_sgrs=np.array([1, 1]),
+                         cum_sgrs=np.array([1, 2]),
+                         window_end_tau=np.zeros(2),
+                         stream_ids=np.array([0, 1], dtype=np.int32))
+    with pytest.raises(ValueError, match="sliding"):
+        WindowExecutor("dense").run(batch, mode="sliding", span=2)
+
+
+# -- vmap-compatible batched estimator step ------------------------------------
+
+def test_estimator_step_batched_matches_scalar():
+    """The vmapped fleet step == N independent scalar steps (on-CI bitwise;
+    the engines still use the scalar step per the module doc), and masked
+    lanes pass their carry through untouched."""
+    rng = np.random.default_rng(1)
+    N = 16
+    step1 = estimator_step()
+    stepN = estimator_step_batched()
+    carry = tuple(np.stack(c) for c in zip(
+        *[tuple(np.asarray(x) for x in estimator_init(0.9 + 0.01 * s))
+          for s in range(N)]))
+    xs = (rng.random(N).astype(np.float32) * 1e4,
+          rng.random(N).astype(np.float32) * 1e5,
+          rng.random(N).astype(np.float32) * 1e5,
+          rng.random(N) > 0.5,
+          np.arange(N, dtype=np.int32))
+    active = rng.random(N) > 0.3
+    cN, eN = stepN(carry, xs, active)
+    for s in range(N):
+        c1 = tuple(c[s] for c in carry)
+        x1 = tuple(x[s] for x in xs)
+        c1_new, e1 = step1(c1, x1)
+        want = c1_new if active[s] else c1
+        for got, exp in zip(cN, want):
+            np.testing.assert_array_equal(np.asarray(got)[s], np.asarray(exp))
+        if active[s]:
+            np.testing.assert_array_equal(np.asarray(eN)[s], np.asarray(e1))
+
+
+# -- sharded dispatch (CI multi-device job) ------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+def test_sharded_fleet_bit_identical_to_dedicated_engines():
+    streams = make_fleet_streams()
+    refs = dedicated_results(streams)  # single-device dedicated engines
+    fleet = MultiStreamSGrapp(len(streams), NT_W, 0.95, tier="dense",
+                              devices=jax.device_count(), flush_every=3)
+    assert fleet.executor.n_shards == jax.device_count()
+    res = push_round_robin(fleet, streams, mb=29)
+    for sid, ref in enumerate(refs):
+        assert_same_result(res[sid], ref)
