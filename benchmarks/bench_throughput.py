@@ -66,11 +66,16 @@ from repro.core.executor import WindowExecutor
 from repro.core.fleet import fleet_run
 from repro.core.sgrapp import mape, run_sgrapp
 from repro.core.windows import window_bounds
-from repro.streams import MultiStreamSGrapp, StreamingSGrapp, bipartite_pa_stream
+from repro.streams import (
+    MultiStreamSGrapp,
+    StreamingSGrapp,
+    bipartite_pa_stream,
+    dynamic_sgr_stream,
+)
 
 from .common import ground_truth_cumulative
 
-__all__ = ["run", "run_streaming", "run_multistream"]
+__all__ = ["run", "run_streaming", "run_multistream", "run_dynamic"]
 
 
 def _timed(fn, *args) -> float:
@@ -331,6 +336,54 @@ def run_multistream(*, quick: bool = False, tier: str = "dense",
     return rows
 
 
+def run_dynamic(*, quick: bool = False, tier: str = "dense",
+                devices: int = 0) -> list[tuple]:
+    """Dynamic wire-format ingestion throughput: one engine fed an
+    insert-only stream (the static fast path), a 10%-delete stream, and a
+    duplicate-heavy stream under the multiset policy.
+
+    Per scenario the row is ``dynamic/engine_{tier}_{scenario}_edges_per_s``
+    (records per second through push+flush, end-tau-aligned streams from the
+    same generator).  The insert-only row anchors the comparison: the gap to
+    it prices the op lane, the per-window delete resolution, and (for the
+    duplicate-heavy row) the multiplicity-weighted counting tiers.
+    """
+    rows = []
+    n = 6_000 if quick else 20_000
+    ntw, mb = 60, 256
+    scenarios = (
+        ("insert_only", dict(delete_frac=0.0, dup_frac=0.0), "distinct"),
+        ("del10", dict(delete_frac=0.10, dup_frac=0.05), "distinct"),
+        ("dup_heavy", dict(delete_frac=0.05, dup_frac=0.5), "multiset"),
+    )
+    import jax
+
+    eng_devices = (min(devices, jax.device_count())
+                   if devices > 1 and jax.device_count() > 1 else None)
+    for name, kw, policy in scenarios:
+        tau, ei, ej, op = dynamic_sgr_stream(n, ntw, n_i=400, n_j=400,
+                                             seed=17, **kw)
+        wire_op = op if op.any() else None
+
+        def ingest():
+            eng = StreamingSGrapp(ntw, 0.95, tier=tier, flush_every=16,
+                                  devices=eng_devices, dup_policy=policy)
+            for a in range(0, tau.size, mb):
+                sl = slice(a, a + mb)
+                eng.push(tau[sl], ei[sl], ej[sl],
+                         op=None if wire_op is None else wire_op[sl])
+            return eng.finalize()
+
+        ingest()  # warm every bucket shape this stream produces
+        t0 = time.perf_counter()
+        res = ingest()
+        dt = time.perf_counter() - t0
+        rows.append((f"dynamic/engine_{tier}_{name}_edges_per_s", dt * 1e6,
+                     f"{n / dt:.0f} ({len(res.estimates)} windows, "
+                     f"policy={policy})"))
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -355,6 +408,12 @@ def main() -> None:
     ap.add_argument("--multistream-only", action="store_true",
                     help="run only the multi-tenant sweep (CI leg: implies "
                          "--multistream, skips the other sweeps)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="add the dynamic wire-format sweep (insert-only vs "
+                         "10%%-delete vs duplicate-heavy ingestion)")
+    ap.add_argument("--dynamic-only", action="store_true",
+                    help="run only the dynamic sweep (CI leg: implies "
+                         "--dynamic, skips the other sweeps)")
     ap.add_argument("--tier", default="dense",
                     help="counting tier for the streaming sweep "
                          "(numpy | dense | tiled | pallas | sparse | auto)")
@@ -367,14 +426,16 @@ def main() -> None:
     args = ap.parse_args()
     sfx = args.artifact_suffix
     print("name,us_per_call,derived")
-    if not (args.streaming_only or args.multistream_only):
+    if not (args.streaming_only or args.multistream_only
+            or args.dynamic_only):
         rows = run(quick=args.quick, devices=args.devices)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         if not args.no_json:
             write_bench_json(f"BENCH_throughput{sfx}.json", rows,
                              devices=args.devices, quick=args.quick)
-    if (args.streaming or args.streaming_only) and not args.multistream_only:
+    if ((args.streaming or args.streaming_only)
+            and not (args.multistream_only or args.dynamic_only)):
         srows = run_streaming(quick=args.quick, tier=args.tier,
                               devices=args.devices)
         for name, us, derived in srows:
@@ -382,13 +443,21 @@ def main() -> None:
         if not args.no_json:
             write_bench_json(f"BENCH_streaming{sfx}.json", srows,
                              devices=args.devices, quick=args.quick)
-    if args.multistream or args.multistream_only:
+    if (args.multistream or args.multistream_only) and not args.dynamic_only:
         mrows = run_multistream(quick=args.quick, tier=args.tier,
                                 devices=args.devices)
         for name, us, derived in mrows:
             print(f"{name},{us:.1f},{derived}")
         if not args.no_json:
             write_bench_json(f"BENCH_multistream{sfx}.json", mrows,
+                             devices=args.devices, quick=args.quick)
+    if args.dynamic or args.dynamic_only:
+        drows = run_dynamic(quick=args.quick, tier=args.tier,
+                            devices=args.devices)
+        for name, us, derived in drows:
+            print(f"{name},{us:.1f},{derived}")
+        if not args.no_json:
+            write_bench_json(f"BENCH_dynamic{sfx}.json", drows,
                              devices=args.devices, quick=args.quick)
 
 

@@ -32,6 +32,23 @@ counts, so tier choice never changes an estimate — only its speed.
 All device paths accumulate in float32 by default (exact below 2**24 per
 partial sum; in-window counts live far below that for realistic window
 parameters) and in float64/int64 when ``jax.config.x64`` is enabled.
+
+**Multiset counting.**  Every tier above counts *distinct* butterflies: a
+duplicated edge contributes once, matching the paper's duplicate-ignoring
+semantics.  The ``*_multiset`` twins count multiplicity-weighted
+butterflies instead ("Counting Butterflies over Streaming Bipartite Graphs
+with Duplicate Edges" semantics): an edge of multiplicity ``m`` behaves
+like ``m`` parallel copies, so a butterfly on edges of multiplicities
+``(a, b, c, d)`` counts ``a * b * c * d`` times.  The Gram identity
+generalizes exactly — with ``W = A A^T`` and ``S = (A∘A)(A∘A)^T`` over the
+*weighted* biadjacency ``A[u, j] = mult(u, j)``,
+
+    B_multi = sum_{u<v} (W_uv^2 - S_uv) / 2
+
+which reduces to ``sum C(W, 2)`` when every multiplicity is 1 (then
+``S = W``).  All multiset tiers take the same padded window tensors plus a
+multiplicity lane of *unique* (i, j) edges (the streaming engines resolve
+duplicates/deletions to net multiplicities at window close).
 """
 from __future__ import annotations
 
@@ -44,16 +61,23 @@ import numpy as np
 
 __all__ = [
     "count_butterflies_np",
+    "count_butterflies_multiset_np",
+    "butterfly_delta_np",
     "enumerate_butterflies_np",
     "butterfly_support_np",
     "count_butterflies_dense",
+    "count_butterflies_dense_multiset",
     "count_butterflies_from_edges",
+    "count_butterflies_from_edges_multiset",
     "count_butterflies_tiled",
+    "count_butterflies_tiled_multiset",
     "count_butterflies_sparse",
+    "count_butterflies_sparse_multiset",
     "window_wedge_counts_np",
     "butterfly_support_dense",
     "count_caterpillars_np",
     "build_biadjacency",
+    "build_biadjacency_multiset",
     "Snapshot",
 ]
 
@@ -145,6 +169,95 @@ def count_butterflies_np(edges: np.ndarray) -> int:
     _, mult = np.unique(keys, return_counts=True)
     mult = mult.astype(np.int64)
     return int((mult * (mult - 1) // 2).sum())
+
+
+def count_butterflies_multiset_np(edges: np.ndarray,
+                                  mult: np.ndarray) -> int:
+    """Multiplicity-weighted butterfly count, numpy oracle (int64 exact).
+
+    ``edges`` is an (m, 2) int array of *unique* (i, j) pairs and ``mult``
+    their positive multiplicities (duplicate rows are aggregated by summing
+    their multiplicities, so pre-resolution edge lists are also accepted).
+    A wedge (i1, i2) through hub j weighs ``mult(i1, j) * mult(i2, j)``;
+    butterflies on a wedge endpoint pair are all unordered hub pairs, so
+
+        B = sum_pairs (S^2 - S2) / 2,   S = sum_j w_j,  S2 = sum_j w_j^2
+
+    which reduces to ``sum C(mult, 2)`` of :func:`count_butterflies_np`
+    when every multiplicity is 1.  Ids must lie in ``[0, 2**32)``.
+    """
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    m = np.asarray(mult, dtype=np.int64).reshape(-1)
+    if e.shape[0] != m.shape[0]:
+        raise ValueError(
+            f"edges/mult length mismatch: {e.shape[0]} != {m.shape[0]}")
+    if m.size and int(m.min()) < 1:
+        raise ValueError("multiplicities must be >= 1")
+    if e.shape[0] == 0:
+        return 0
+    _check_id_range_np(e)
+    # aggregate duplicate (i, j) rows (net multiplicity per unique edge)
+    key = e[:, 0] << 32 | e[:, 1]
+    uk, inv = np.unique(key, return_inverse=True)
+    um = np.zeros(uk.shape[0], dtype=np.int64)
+    np.add.at(um, inv, m)
+    if uk.shape[0] < 4:
+        return 0
+    ei = uk >> 32
+    ej = uk & np.int64(0xFFFFFFFF)
+    # group i-neighbors by j (sorted by (j, i)); emit weighted wedges
+    order = np.lexsort((ei, ej))
+    i_sorted, j_sorted, m_sorted = ei[order], ej[order], um[order]
+    _, starts = np.unique(j_sorted, return_index=True)
+    counts = np.diff(np.append(starts, j_sorted.shape[0]))
+    p, t = _group_pairs_np(starts, counts)
+    if p.size == 0:
+        return 0
+    w = m_sorted[p] * m_sorted[t]
+    keys = i_sorted[p] << 32 | i_sorted[t]
+    _, winv = np.unique(keys, return_inverse=True)
+    s1 = np.zeros(int(winv.max()) + 1, dtype=np.int64)
+    s2 = np.zeros_like(s1)
+    np.add.at(s1, winv, w)
+    np.add.at(s2, winv, w * w)
+    return int(((s1 * s1 - s2) // 2).sum())
+
+
+def butterfly_delta_np(edges: np.ndarray, deleted: np.ndarray) -> int:
+    """Butterflies destroyed by deleting ``deleted`` edges from the distinct
+    graph ``edges`` — the decremental half of Abacus's insert/delete
+    symmetry.  Deletions process sequentially; each deleted edge (u, x)
+    destroys exactly the butterflies containing it in the *current* graph:
+
+        sum over v in N(x), v != u  of  (|N(u) ∩ N(v)| - 1)
+
+    (the common neighborhood always contains x itself; every other shared
+    hub completes a butterfly through (u, x)).  Returns
+    ``B(edges) - B(edges \\ deleted)`` as an exact int.  Each deleted edge
+    must be present (and not already deleted) — raises ``ValueError``
+    otherwise, mirroring the engines' default ``on_missing_delete``.
+    """
+    e = _dedupe_edges_np(np.asarray(edges))
+    d = np.asarray(deleted, dtype=np.int64).reshape(-1, 2)
+    adj_i: dict[int, set[int]] = {}
+    adj_j: dict[int, set[int]] = {}
+    for u, x in e:
+        adj_i.setdefault(int(u), set()).add(int(x))
+        adj_j.setdefault(int(x), set()).add(int(u))
+    total = 0
+    for u, x in d:
+        u, x = int(u), int(x)
+        if x not in adj_i.get(u, ()):  # never inserted or already deleted
+            raise ValueError(
+                f"cannot delete absent edge ({u}, {x}); deletions must name "
+                "a present edge")
+        nu = adj_i[u]
+        for v in adj_j[x]:
+            if v != u:
+                total += len(nu & adj_i[v]) - 1
+        nu.remove(x)
+        adj_j[x].remove(u)
+    return total
 
 
 def enumerate_butterflies_np(edges: np.ndarray) -> np.ndarray:
@@ -280,6 +393,70 @@ def count_butterflies_from_edges(
     return count_butterflies_dense(adj)
 
 
+def build_biadjacency_multiset(
+    edge_i: jax.Array,
+    edge_j: jax.Array,
+    mult: jax.Array,
+    valid: jax.Array,
+    n_i: int,
+    n_j: int,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Scatter a padded (edge, multiplicity) list into a *weighted*
+    biadjacency ``A[u, j] = mult(u, j)`` [n_i, n_j].
+
+    Edges are expected unique per window (the engines resolve duplicates to
+    net multiplicities at window close); a repeated (i, j) lane scatter-adds,
+    which keeps the sum-of-multiplicities semantics either way.  Invalid
+    (padding) lanes route to a sacrificial out-of-range row that
+    ``mode="drop"`` discards.
+    """
+    ii = jnp.where(valid, edge_i, n_i)
+    jj = jnp.where(valid, edge_j, n_j)
+    w = jnp.where(valid, mult, 0).astype(dtype)
+    adj = jnp.zeros((n_i, n_j), dtype=dtype)
+    return adj.at[ii, jj].add(w, mode="drop")
+
+
+def _pairs_multiset(w: jax.Array, s: jax.Array) -> jax.Array:
+    """Per wedge-endpoint pair: unordered hub pairs weighted by multiplicity
+    — ``(W^2 - S) / 2`` with ``W`` the weighted wedge count and ``S`` its
+    square-weighted twin.  Equals ``C(W, 2)`` when all multiplicities are 1
+    (then ``S == W``)."""
+    return (w * w - s) * 0.5
+
+
+def count_butterflies_dense_multiset(adj: jax.Array) -> jax.Array:
+    """Multiplicity-weighted count on a weighted biadjacency:
+    ``B = sum_{u<v} (W_uv^2 - S_uv) / 2`` with ``W = A A^T`` and
+    ``S = (A∘A)(A∘A)^T`` — the multiset Gram identity (module doc).  The
+    formula is symmetric in sides, so the smaller-side orientation transpose
+    of :func:`count_butterflies_dense` stays valid."""
+    a = adj.astype(_acc_dtype())
+    if a.shape[0] > a.shape[1]:
+        a = a.T
+    a2 = a * a
+    w = a @ a.T
+    s = a2 @ a2.T
+    pairs = _pairs_multiset(w, s)
+    off = pairs.sum() - jnp.sum(jnp.diagonal(pairs))
+    return off * 0.5
+
+
+def count_butterflies_from_edges_multiset(
+    edge_i: jax.Array,
+    edge_j: jax.Array,
+    mult: jax.Array,
+    valid: jax.Array,
+    n_i: int,
+    n_j: int,
+) -> jax.Array:
+    """Multiset count directly from a padded (edge, multiplicity) list."""
+    adj = build_biadjacency_multiset(edge_i, edge_j, mult, valid, n_i, n_j,
+                                     dtype=_acc_dtype())
+    return count_butterflies_dense_multiset(adj)
+
+
 # ---------------------------------------------------------------------------
 # tiled tier (never materializes the |Vi| x |Vi| wedge matrix)
 # ---------------------------------------------------------------------------
@@ -313,6 +490,46 @@ def count_butterflies_tiled(adj: jax.Array, tile: int = 512) -> jax.Array:
 
         def inner(c, v):
             return c + pair_count(bu, blocks[v], iu, row_ids[v]), None
+
+        c, _ = jax.lax.scan(inner, carry, jnp.arange(n_blocks))
+        return c, None
+
+    total, _ = jax.lax.scan(outer, jnp.zeros((), acc), jnp.arange(n_blocks))
+    return total
+
+
+def count_butterflies_tiled_multiset(adj: jax.Array,
+                                     tile: int = 512) -> jax.Array:
+    """Tiled twin of :func:`count_butterflies_dense_multiset`: the same
+    row-block-pair scan as :func:`count_butterflies_tiled`, accumulating the
+    weighted Gram ``W`` and its square-weighted twin ``S`` per tile pair and
+    fusing the ``(W^2 - S)/2`` epilogue.  Memory stays
+    O(tile * n_j + tile^2)."""
+    acc = _acc_dtype()
+    a = adj.astype(acc)
+    if a.shape[0] > a.shape[1]:
+        a = a.T
+    n_i = a.shape[0]
+    n_blocks = -(-n_i // tile)
+    pad = n_blocks * tile - n_i
+    a = jnp.pad(a, ((0, pad), (0, 0)))
+    blocks = a.reshape(n_blocks, tile, a.shape[1])
+    blocks2 = blocks * blocks
+    row_ids = jnp.arange(n_blocks * tile).reshape(n_blocks, tile)
+
+    def pair_count(bu, bu2, bv, bv2, iu, iv):
+        w = bu @ bv.T
+        s = bu2 @ bv2.T
+        pairs = _pairs_multiset(w, s)
+        mask = (iu[:, None] < iv[None, :]).astype(acc)  # strict upper: u < v
+        return jnp.sum(pairs * mask)
+
+    def outer(carry, u):
+        bu, bu2, iu = blocks[u], blocks2[u], row_ids[u]
+
+        def inner(c, v):
+            return c + pair_count(bu, bu2, blocks[v], blocks2[v], iu,
+                                  row_ids[v]), None
 
         c, _ = jax.lax.scan(inner, carry, jnp.arange(n_blocks))
         return c, None
@@ -412,6 +629,83 @@ def count_butterflies_sparse(
     wstart = jax.lax.cummax(jnp.where(head, wpos, -1))
     wrank = jnp.where(wkey < jnp.int32(n_i) * span_i, wpos - wstart, 0)
     return jnp.sum(wrank.astype(acc))
+
+
+def count_butterflies_sparse_multiset(
+    edge_i: jax.Array,
+    edge_j: jax.Array,
+    mult: jax.Array,
+    valid: jax.Array,
+    n_i: int,
+    n_j: int,
+    wedge_cap: int,
+) -> jax.Array:
+    """Multiset twin of :func:`count_butterflies_sparse`: weighted wedge
+    aggregation over a padded (edge, multiplicity) list of *unique* (i, j)
+    pairs (the engines resolve duplicates to net multiplicities before
+    packing, so no dup-invalidation resort is needed here).
+
+    The schedule mirrors the distinct tier — edge sort by packed ``(j, i)``
+    key (multiplicities ride as the sort payload), rank-cumsum wedge-slot
+    emission — but each wedge carries weight ``mult(i1, j) * mult(i2, j)``
+    and the per-run epilogue becomes ``(S^2 - S2) / 2`` with ``S`` /
+    ``S2`` the run's weight and squared-weight sums, evaluated at run tails
+    from exclusive-cumsum run bases (cummax-propagated, scatter-free —
+    both cumsums are non-decreasing since weights are >= 0).  All static
+    shapes; same int32 key-packing bound as the distinct tier.
+    """
+    if wedge_cap < 1:
+        raise ValueError("wedge_cap must be >= 1")
+    if (n_i + 2) * (n_j + 2) >= 2**31 or (n_i + 2) * (n_i + 2) >= 2**31:
+        raise ValueError(
+            "sparse tier requires (n_i + 2) * (max(n_i, n_j) + 2) < 2**31 "
+            "to pack sort keys into int32; use the dense/tiled tiers for "
+            "id spaces this large")
+    acc = _acc_dtype()
+    cap_e = edge_i.shape[0]
+    pos = jnp.arange(cap_e, dtype=jnp.int32)
+    first = pos == 0
+    ii = jnp.where(valid, edge_i, n_i).astype(jnp.int32)
+    jj = jnp.where(valid, edge_j, n_j).astype(jnp.int32)
+    mm = jnp.where(valid, mult, 0).astype(jnp.int32)
+    # sort edges by packed (j, i) — invalid lanes carry (n_j, n_i) => last —
+    # with the multiplicity lane as sort payload
+    span_i = jnp.int32(n_i + 2)
+    ekey, mm = jax.lax.sort_key_val(jj * span_i + ii, mm)
+    jj = ekey // span_i
+    ii = ekey - jj * span_i
+    live = jj < n_j
+    # in-group rank r and wedge-slot emission, exactly as the distinct tier
+    is_start = first | (jj != jnp.roll(jj, 1))
+    start = jax.lax.cummax(jnp.where(is_start, pos, -1))
+    r = jnp.where(live, pos - start, 0)
+    cum_r = jnp.cumsum(r)
+    total_w = cum_r[-1]
+    w = jnp.arange(wedge_cap, dtype=jnp.int32)
+    t = jnp.clip(jnp.searchsorted(cum_r, w, side="right"), 0, cap_e - 1)
+    t = t.astype(jnp.int32)
+    p = jnp.clip(start[t] + (w - (cum_r[t] - r[t])), 0, cap_e - 1)
+    alive = w < total_w
+    i1 = jnp.where(alive, ii[p], n_i)
+    i2 = jnp.where(alive, ii[t], n_i)
+    macc = mm.astype(acc)
+    ww = jnp.where(alive, macc[p] * macc[t], 0.0)       # wedge weight
+    # aggregate weighted wedges: sort packed (i1, i2) keys with the weight
+    # as payload (dead wedges share the sentinel key and carry weight 0, so
+    # their run contributes S = S2 = 0), then the per-run (S^2 - S2)/2
+    # epilogue at run tails — run bases are the exclusive cumsums at run
+    # heads, propagated by cummax (both cumsums are non-decreasing)
+    wkey, ww = jax.lax.sort_key_val(i1 * span_i + i2, ww)
+    wpos = jnp.arange(wedge_cap, dtype=jnp.int32)
+    head = (wpos == 0) | (wkey != jnp.roll(wkey, 1))
+    c1 = jnp.cumsum(ww)
+    c2 = jnp.cumsum(ww * ww)
+    base1 = jax.lax.cummax(jnp.where(head, c1 - ww, -1.0))
+    base2 = jax.lax.cummax(jnp.where(head, c2 - ww * ww, -1.0))
+    tail = jnp.roll(head, -1) | (wpos == wedge_cap - 1)
+    s1 = c1 - base1
+    s2 = c2 - base2
+    return jnp.sum(jnp.where(tail, (s1 * s1 - s2) * 0.5, 0.0))
 
 
 def window_wedge_counts_np(edge_i: np.ndarray, edge_j: np.ndarray,

@@ -80,17 +80,23 @@ import numpy as np
 
 from .butterfly import (
     build_biadjacency,
+    build_biadjacency_multiset,
+    butterfly_delta_np,
     count_butterflies_from_edges,
+    count_butterflies_from_edges_multiset,
+    count_butterflies_multiset_np,
     count_butterflies_np,
     count_butterflies_sparse,
+    count_butterflies_sparse_multiset,
     count_butterflies_tiled,
+    count_butterflies_tiled_multiset,
     window_wedge_counts_np,
 )
 from .windows import WindowBatch
 
 __all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket",
-           "run", "route_tier", "bucket_capacity", "id_capacity",
-           "compiled_bucket_cache_info"]
+           "run", "route_tier", "route_decrement", "bucket_capacity",
+           "id_capacity", "compiled_bucket_cache_info"]
 
 TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto")
 MODES = ("tumbling", "sliding")
@@ -124,6 +130,24 @@ def route_tier(cap_e: int, cap_i: int, cap_j: int, cap_w: int,
     sort_ops = (cap_e * max(math.log2(max(cap_e, 2)), 1.0)
                 + cap_w * max(math.log2(max(cap_w, 2)), 1.0))
     return "sparse" if sort_cost * sort_ops < dense_flops else "dense"
+
+
+def route_decrement(n_edges: int, n_deleted: int,
+                    *, delta_frac: float = 0.25) -> str:
+    """Decremental router: patch prior counts per deletion (``"delta"``) or
+    recount the surviving window wholesale (``"recount"``).
+
+    Following Abacus's insert/delete symmetry, the butterflies destroyed by
+    deleting one edge cost a local wedge-neighborhood walk — cheap while few
+    edges retract, but the per-deletion walks are sequential host work, so
+    once more than ``delta_frac`` of the window retracts the batched device
+    recount of the survivors is the better buy.  The crossover is a host-side
+    static decision (like :func:`route_tier`), so both routes stay
+    deterministic and differentially testable against each other.
+    """
+    if n_edges < 0 or n_deleted < 0:
+        raise ValueError("edge/delete counts must be non-negative")
+    return "delta" if n_deleted <= delta_frac * n_edges else "recount"
 
 
 def bucket_capacity(n: int, *, align: int = 128, growth: int = 2) -> int:
@@ -207,7 +231,8 @@ class ExecutorResult:
 # ---------------------------------------------------------------------------
 
 def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
-                     tile: int, block_i: int, block_k: int, interpret: bool):
+                     tile: int, block_i: int, block_k: int, interpret: bool,
+                     multiset: bool = False):
     """(edge_i, edge_j, valid) [c, cap_e] -> [c] counts for one CHUNK of
     windows at a static ``(cap_i, cap_j)`` id-space capacity — the batched
     per-chunk body both the single-device and the sharded dispatch map over.
@@ -217,9 +242,27 @@ def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
     ``dense`` / ``tiled`` / ``sparse`` are the vmap of their per-window
     primitive (batched scatters, matmuls and sorts).  ``pallas`` dispatches
     the window-batched kernel: the chunk's window axis rides in the Pallas
-    grid, so a chunk costs one kernel launch."""
+    grid, so a chunk costs one kernel launch.
+
+    ``multiset=True`` swaps in the multiplicity-weighted twins; the chunk
+    fn then takes ``(edge_i, edge_j, edge_mult, valid)`` — one extra lane,
+    same window axis."""
     if tier == "pallas":
-        from ..kernels.butterfly import butterfly_count_pallas_windows
+        from ..kernels.butterfly import (
+            butterfly_count_pallas_windows,
+            butterfly_count_pallas_windows_multiset,
+        )
+
+        if multiset:
+            def chunk(ei, ej, mm, v):
+                adjs = jax.vmap(
+                    lambda a, b, m, c: build_biadjacency_multiset(
+                        a, b, m, c, cap_i, cap_j)
+                )(ei, ej, mm, v)
+                return butterfly_count_pallas_windows_multiset(
+                    adjs, block_i=block_i, block_k=block_k,
+                    interpret=interpret)
+            return chunk
 
         def chunk(ei, ej, v):
             adjs = jax.vmap(
@@ -229,6 +272,24 @@ def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
             return butterfly_count_pallas_windows(
                 adjs, block_i=block_i, block_k=block_k, interpret=interpret)
         return chunk
+    if multiset:
+        if tier == "dense":
+            def one(ei, ej, mm, v):
+                return count_butterflies_from_edges_multiset(
+                    ei, ej, mm, v, cap_i, cap_j)
+        elif tier == "tiled":
+            eff_tile = min(tile, min(cap_i, cap_j))
+
+            def one(ei, ej, mm, v):
+                adj = build_biadjacency_multiset(ei, ej, mm, v, cap_i, cap_j)
+                return count_butterflies_tiled_multiset(adj, tile=eff_tile)
+        elif tier == "sparse":
+            def one(ei, ej, mm, v):
+                return count_butterflies_sparse_multiset(
+                    ei, ej, mm, v, cap_i, cap_j, wedge_cap=max(cap_w, 1))
+        else:  # pragma: no cover - guarded by WindowExecutor.__init__
+            raise ValueError(f"unknown device tier {tier!r}")
+        return jax.vmap(one)
     if tier == "dense":
         def one(ei, ej, v):
             return count_butterflies_from_edges(ei, ej, v, cap_i, cap_j)
@@ -254,12 +315,14 @@ def _chunked_dispatch(chunk_fn, chunk: int):
     dispatch stays in streaming order.  A batch smaller than ``chunk``
     dispatches as a single partial chunk; otherwise the window axis pads to
     a chunk multiple (padding lanes are all-invalid windows that count 0
-    and are sliced off) and reshapes to [n_chunks, chunk, ...]."""
-    def run(ei, ej, v):
-        n = ei.shape[0]
+    and are sliced off) and reshapes to [n_chunks, chunk, ...].  Variadic
+    over the per-window lanes — 3 for distinct, 4 with the multiplicity
+    lane — because every lane chunks identically along the window axis."""
+    def run(*arrays):
+        n = arrays[0].shape[0]
         c = max(1, min(chunk, n))
         if n <= c:
-            return chunk_fn(ei, ej, v)
+            return chunk_fn(*arrays)
         nc = -(-n // c)
         pad = nc * c - n
 
@@ -270,28 +333,31 @@ def _chunked_dispatch(chunk_fn, chunk: int):
             return a.reshape((nc, c) + a.shape[1:])
 
         out = jax.lax.map(lambda t: chunk_fn(*t),
-                          (prep(ei), prep(ej), prep(v)))
+                          tuple(prep(a) for a in arrays))
         return out.reshape(nc * c)[:n]
     return run
 
 
 @functools.lru_cache(maxsize=None)
 def _bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int, tile: int,
-                    block_i: int, block_k: int, interpret: bool, chunk: int):
+                    block_i: int, block_k: int, interpret: bool, chunk: int,
+                    multiset: bool = False):
     """Jitted (edge_i, edge_j, valid) [B, cap_e] -> [B] counts at a static
     ``(cap_i, cap_j)`` id-space capacity via the chunked-vmap schedule
     (:func:`_chunked_dispatch`): windows count ``chunk`` at a time in one
     batched dispatch, chunks run in streaming order, and peak memory stays
-    bounded at one chunk of bucket-capacity state."""
+    bounded at one chunk of bucket-capacity state.  ``multiset=True`` keys a
+    separate compiled program taking the extra multiplicity lane."""
     chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
-                                block_i, block_k, interpret)
+                                block_i, block_k, interpret, multiset)
     return jax.jit(_chunked_dispatch(chunk_fn, chunk))
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int,
                             tile: int, block_i: int, block_k: int,
-                            interpret: bool, chunk: int, mesh, axes: tuple):
+                            interpret: bool, chunk: int, mesh, axes: tuple,
+                            multiset: bool = False):
     """Sharded twin of :func:`_bucket_counter`: the window axis is split over
     the mesh's data-parallel ``axes`` via shard_map, and each device runs the
     identical chunked-vmap schedule over its shard.  Per-device peak memory
@@ -303,12 +369,13 @@ def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int,
     from ..distributed.sharding import shard_map_compat
 
     chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
-                                block_i, block_k, interpret)
+                                block_i, block_k, interpret, multiset)
     local = _chunked_dispatch(chunk_fn, chunk)
 
     batch = axes if len(axes) > 1 else axes[0]
+    n_lanes = 4 if multiset else 3
     fn = shard_map_compat(local, mesh,
-                          in_specs=(P(batch, None),) * 3,
+                          in_specs=(P(batch, None),) * n_lanes,
                           out_specs=P(batch),
                           # pallas_call has no replication rule to check
                           check_rep=(tier != "pallas"))
@@ -360,20 +427,20 @@ def _resolve_window_mesh(devices, mesh):
     return mesh, axes, n_shards
 
 
-def _pad_window_axis(ei: np.ndarray, ej: np.ndarray, v: np.ndarray,
-                     multiple: int):
+def _pad_window_axis(*arrays: np.ndarray, multiple: int):
     """Pad the leading (window) axis to a multiple of the shard count with
     all-invalid windows — every tier counts an all-padding window as 0, so
-    the pad lanes are sliced off host-side without touching the real ones."""
-    pad = (-ei.shape[0]) % multiple
+    the pad lanes are sliced off host-side without touching the real ones.
+    Variadic over the per-window lanes (3 distinct, 4 with multiplicity)."""
+    pad = (-arrays[0].shape[0]) % multiple
     if pad == 0:
-        return ei, ej, v
+        return arrays
 
     def z(a):
         return np.concatenate(
             [a, np.zeros((pad,) + a.shape[1:], dtype=a.dtype)])
 
-    return z(ei), z(ej), z(v)
+    return tuple(z(a) for a in arrays)
 
 
 class WindowExecutor:
@@ -541,9 +608,10 @@ class WindowExecutor:
         return route_tier(b.cap_e, b.cap_i, b.cap_j, b.cap_w,
                           sort_cost=self.sort_cost)
 
-    def _counter(self, b: Bucket):
+    def _counter(self, b: Bucket, *, multiset: bool = False):
         """The compiled counter for one bucket's static configuration —
-        sharded over the window mesh when one is configured."""
+        sharded over the window mesh when one is configured.  ``multiset``
+        keys the multiplicity-weighted program variant."""
         tier = self.bucket_tier(b)
         # cap_w only shapes the sparse scratch: zero it out of the cache key
         # for the biadjacency tiers so auto's dense buckets share programs
@@ -552,13 +620,18 @@ class WindowExecutor:
             return _sharded_bucket_counter(
                 tier, b.cap_i, b.cap_j, cap_w, self.tile, self.block_i,
                 self.block_k, self.interpret, self.chunk, self.mesh,
-                self.shard_axes)
+                self.shard_axes, multiset)
         return _bucket_counter(tier, b.cap_i, b.cap_j, cap_w, self.tile,
                                self.block_i, self.block_k, self.interpret,
-                               self.chunk)
+                               self.chunk, multiset)
 
     def window_counts(self, batch: WindowBatch) -> np.ndarray:
         """Exact in-window count per tumbling window, [n_windows] float64.
+
+        A batch carrying the multiplicity lane (``batch.edge_mult`` is not
+        None — ``multiset`` duplicate policy) routes every tier through its
+        multiplicity-weighted twin; a lane-less batch runs the distinct
+        programs bit-identically to before the lane existed.
 
         Device tiers run double-buffered: each bucket's dispatch is
         asynchronous, so while bucket k computes on-device the host drains
@@ -569,27 +642,96 @@ class WindowExecutor:
         out = np.zeros(batch.n_windows, dtype=np.float64)
         if batch.n_windows == 0:
             return out
+        multiset = batch.edge_mult is not None
         if self.tier == "numpy":
             for b in self.plan(batch):
                 for k in b.windows:
                     v = batch.valid[k]
-                    out[k] = count_butterflies_np(
-                        np.stack([batch.edge_i[k][v], batch.edge_j[k][v]],
-                                 axis=1))
+                    e = np.stack([batch.edge_i[k][v], batch.edge_j[k][v]],
+                                 axis=1)
+                    out[k] = (count_butterflies_multiset_np(
+                        e, batch.edge_mult[k][v]) if multiset
+                        else count_butterflies_np(e))
             return out
         pending: tuple[np.ndarray, object] | None = None
         for b in self.plan(batch):
             sub = batch.take(b.windows, capacity=b.cap_e)
-            ei, ej, v = sub.edge_i, sub.edge_j, sub.valid
+            if multiset:
+                lanes = (sub.edge_i, sub.edge_j, sub.edge_mult, sub.valid)
+            else:
+                lanes = (sub.edge_i, sub.edge_j, sub.valid)
             if self.n_shards > 1:
-                ei, ej, v = _pad_window_axis(ei, ej, v, self.n_shards)
-            counts = self._counter(b)(ei, ej, v)  # async dispatch
+                lanes = _pad_window_axis(*lanes, multiple=self.n_shards)
+            counts = self._counter(b, multiset=multiset)(*lanes)  # async
             if pending is not None:
                 idx, dev = pending
                 out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
             pending = (b.windows, counts)
         idx, dev = pending
         out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
+        return out
+
+    def decrement_window_counts(self, per_window_edges, per_window_deletes,
+                                prior_counts, *, delta_frac: float = 0.25
+                                ) -> np.ndarray:
+        """Decremental update for already-counted windows (sliding mode's
+        late-deletion path): given each window's current distinct edge set,
+        the edges retracted from it, and its prior exact count, return the
+        updated exact counts.
+
+        Per window :func:`route_decrement` picks the route — ``"delta"``
+        subtracts :func:`butterfly_delta_np`'s destroyed-butterfly walk from
+        the prior count on the host; ``"recount"`` drops the deleted edges
+        and recounts every recount-routed window's survivors in ONE bucketed
+        device dispatch through :meth:`window_counts`.  Both routes raise on
+        a deletion that targets an edge absent from its window (including
+        the same edge twice in one request) — the executor-level mirror of
+        the engines' ``on_missing_delete="raise"`` default.  Distinct-mode
+        semantics: windows are deduped edge sets, multiplicities retract
+        through the engines' open-window resolution instead.
+        """
+        from .butterfly import _check_id_range_np
+        from .windows import pack_windows
+
+        prior = np.asarray(prior_counts, dtype=np.float64)
+        n = len(per_window_edges)
+        if len(per_window_deletes) != n or prior.shape[0] != n:
+            raise ValueError(
+                "per_window_edges, per_window_deletes and prior_counts must "
+                f"align: got {n}, {len(per_window_deletes)}, "
+                f"{prior.shape[0]}")
+        out = prior.copy()
+        recount_edges: list[np.ndarray] = []
+        recount_idx: list[int] = []
+        for k in range(n):
+            e = np.asarray(per_window_edges[k], dtype=np.int64).reshape(-1, 2)
+            d = np.asarray(per_window_deletes[k],
+                           dtype=np.int64).reshape(-1, 2)
+            if d.shape[0] == 0:
+                continue
+            if route_decrement(e.shape[0], d.shape[0],
+                               delta_frac=delta_frac) == "delta":
+                out[k] = prior[k] - butterfly_delta_np(e, d)
+                continue
+            _check_id_range_np(e)
+            _check_id_range_np(d)
+            ke = e[:, 0] << 32 | e[:, 1]
+            kd = d[:, 0] << 32 | d[:, 1]
+            if (np.unique(kd).shape[0] != kd.shape[0]
+                    or not np.isin(kd, ke).all()):
+                raise ValueError(
+                    f"window {k}: cannot delete an edge absent from the "
+                    "window (never inserted, or already deleted)")
+            recount_edges.append(e[~np.isin(ke, kd)])
+            recount_idx.append(k)
+        if recount_idx:
+            m = len(recount_idx)
+            nb = pack_windows(
+                recount_edges, n_sgrs=np.zeros(m, np.int64),
+                cum_sgrs=np.zeros(m, np.int64),
+                window_end_tau=np.zeros(m, np.float64),
+                align=self.align, dedupe=True)
+            out[np.asarray(recount_idx)] = self.window_counts(nb)
         return out
 
     def count_edges(self, edge_i, edge_j) -> float:

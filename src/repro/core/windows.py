@@ -75,6 +75,10 @@ class WindowBatch:
         ``None`` for single-stream batches).  Bookkeeping only — bucketing
         and counting ignore it, which is exactly what lets windows from
         different streams share a compiled bucket.
+    edge_mult       : int32 [n_windows, capacity] | None   per-edge net
+        multiplicity lane (``multiset`` duplicate policy).  ``None`` for
+        distinct-mode batches — counting treats a missing lane as all-ones.
+        Padding slots are zero (masked out by ``valid`` anyway).
     """
 
     edge_i: np.ndarray
@@ -89,6 +93,7 @@ class WindowBatch:
     n_i_per_window: np.ndarray
     n_j_per_window: np.ndarray
     stream_ids: np.ndarray | None = None
+    edge_mult: np.ndarray | None = None
 
     @property
     def n_windows(self) -> int:
@@ -106,13 +111,17 @@ class WindowBatch:
         """
         idx = np.asarray(indices, dtype=np.int64)
         cap = self.capacity if capacity is None else capacity
+        if cap < 0:
+            raise ValueError(f"capacity must be non-negative, got {cap}")
         if cap > self.capacity:
             raise ValueError(
                 f"capacity {cap} > batch capacity {self.capacity}")
-        if idx.size and int(self.n_edges[idx].max()) > cap:
+        # the coverage check also applies to the empty selection (where the
+        # required capacity is trivially 0, so any non-negative cap passes)
+        need = int(self.n_edges[idx].max()) if idx.size else 0
+        if need > cap:
             raise ValueError(
-                f"capacity {cap} < max selected in-window edges "
-                f"{int(self.n_edges[idx].max())}")
+                f"capacity {cap} < max selected in-window edges {need}")
         return WindowBatch(
             edge_i=self.edge_i[idx, :cap],
             edge_j=self.edge_j[idx, :cap],
@@ -127,6 +136,8 @@ class WindowBatch:
             n_j_per_window=self.n_j_per_window[idx],
             stream_ids=(None if self.stream_ids is None
                         else self.stream_ids[idx]),
+            edge_mult=(None if self.edge_mult is None
+                       else self.edge_mult[idx, :cap]),
         )
 
 
@@ -144,6 +155,7 @@ def pack_windows(
     align: int = 128,
     dedupe: bool = True,
     stream_ids: np.ndarray | None = None,
+    per_window_mult: list[np.ndarray] | None = None,
 ) -> WindowBatch:
     """Pack per-window raw edge lists into padded device-ready tensors.
 
@@ -161,6 +173,13 @@ def pack_windows(
     its tenant stream — the provenance lane the multi-stream engine uses to
     scatter co-batched counts back to the right tenant.  Packing, bucketing
     and counting never read it.
+
+    ``per_window_mult`` (optional, one int array per window, aligned with
+    ``per_window_edges``) carries per-edge net multiplicities for the
+    ``multiset`` duplicate policy; it is packed into ``WindowBatch.edge_mult``
+    (int32, zero-padded).  The lane is *ignored* under ``dedupe=True`` —
+    distinct-mode packing collapses duplicates keep-first, so a multiplicity
+    lane would be meaningless there (``edge_mult`` stays ``None``).
     """
     n_win = len(per_window_edges)
     n_sgrs = np.asarray(n_sgrs, dtype=np.int64)
@@ -172,23 +191,39 @@ def pack_windows(
             raise ValueError(
                 f"stream_ids must be [n_windows]={n_win}, "
                 f"got shape {stream_ids.shape}")
+    want_mult = per_window_mult is not None and not dedupe
+    if per_window_mult is not None and len(per_window_mult) != n_win:
+        raise ValueError(
+            f"per_window_mult must have one entry per window ({n_win}), "
+            f"got {len(per_window_mult)}")
     if n_win == 0:
         z2 = np.zeros((0, 0), dtype=np.int32)
         z1 = np.zeros(0, dtype=np.int64)
         return WindowBatch(z2, z2, z2.astype(bool), z1, z1, z1, 0, 0,
                            np.zeros(0, dtype=np.float64), z1, z1,
-                           stream_ids=stream_ids)
+                           stream_ids=stream_ids,
+                           edge_mult=z2 if want_mult else None)
 
-    from .butterfly import _dedupe_edges_np
+    from .butterfly import _check_id_range_np, _dedupe_edges_np
 
     per_edges: list[np.ndarray] = []
-    for ew in per_window_edges:
+    per_mult: list[np.ndarray] = []
+    for k, ew in enumerate(per_window_edges):
         ew = np.asarray(ew, dtype=np.int64).reshape(-1, 2)
+        # loud id-range guard regardless of dedupe: raw ids >= 2**32 (or
+        # negative) would silently collide in packed int64 keys downstream
+        # (host oracle, sparse tier) and corrupt counts
+        _check_id_range_np(ew)
         if dedupe:
-            # same keep-first-arrival packed-key dedupe as the host oracle,
-            # including its loud guard: raw ids >= 2**32 (or negative) would
-            # silently collide in the packed int64 key and corrupt counts
+            # same keep-first-arrival packed-key dedupe as the host oracle
             ew = _dedupe_edges_np(ew)
+        elif want_mult:
+            mw = np.asarray(per_window_mult[k], dtype=np.int64).reshape(-1)
+            if mw.shape[0] != ew.shape[0]:
+                raise ValueError(
+                    f"per_window_mult[{k}] length {mw.shape[0]} != "
+                    f"{ew.shape[0]} edges")
+            per_mult.append(mw)
         per_edges.append(ew)
 
     n_edges = np.array([e.shape[0] for e in per_edges], dtype=np.int64)
@@ -201,6 +236,7 @@ def pack_windows(
     out_i = np.zeros((n_win, cap), dtype=np.int32)
     out_j = np.zeros((n_win, cap), dtype=np.int32)
     valid = np.zeros((n_win, cap), dtype=bool)
+    out_m = np.zeros((n_win, cap), dtype=np.int32) if want_mult else None
     ni_w = np.zeros(n_win, dtype=np.int64)
     nj_w = np.zeros(n_win, dtype=np.int64)
     for k, ew in enumerate(per_edges):
@@ -210,6 +246,8 @@ def pack_windows(
         out_i[k, :m] = inv_i
         out_j[k, :m] = inv_j
         valid[k, :m] = True
+        if out_m is not None:
+            out_m[k, :m] = per_mult[k]
         ni_w[k], nj_w[k] = ui.shape[0], uj.shape[0]
 
     n_i = _round_up(max(1, int(ni_w.max())), align)
@@ -218,6 +256,7 @@ def pack_windows(
         edge_i=out_i, edge_j=out_j, valid=valid, n_edges=n_edges, n_sgrs=n_sgrs,
         cum_sgrs=cum_sgrs, n_i=n_i, n_j=n_j, window_end_tau=window_end_tau,
         n_i_per_window=ni_w, n_j_per_window=nj_w, stream_ids=stream_ids,
+        edge_mult=out_m,
     )
 
 

@@ -2,6 +2,7 @@ from .ops import (
     butterfly_count_pallas,
     butterfly_count_pallas_batched,
     butterfly_count_pallas_windows,
+    butterfly_count_pallas_windows_multiset,
     butterfly_count_tiles,
 )
 from .ref import butterfly_count_ref
@@ -10,6 +11,7 @@ __all__ = [
     "butterfly_count_pallas",
     "butterfly_count_pallas_batched",
     "butterfly_count_pallas_windows",
+    "butterfly_count_pallas_windows_multiset",
     "butterfly_count_tiles",
     "butterfly_count_ref",
 ]

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["butterfly_pairs_kernel_call", "butterfly_pairs_windows_kernel_call"]
+__all__ = ["butterfly_pairs_kernel_call", "butterfly_pairs_windows_kernel_call",
+           "butterfly_pairs_windows_kernel_multiset_call"]
 
 
 def _triangle_pairs(nu: int):
@@ -180,6 +181,94 @@ def butterfly_pairs_windows_kernel_call(
 
     fn = pl.pallas_call(
         functools.partial(_windows_kernel, nk=nk, bi=block_i),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(upair, vpair, adjs, adjs)
+
+
+def _windows_kernel_multiset(upair_ref, vpair_ref, au_ref, av_ref, out_ref,
+                             accw_ref, accs_ref, *, nk: int, bi: int):
+    """Multiset twin of :func:`_windows_kernel`.
+
+    The biadjacency carries net multiplicities (A[u, j] = mult of edge
+    (u, j); 0 if absent) and the per-tile epilogue applies the multiset Gram
+    identity  B = sum_{u<v} (W_uv^2 - S_uv) / 2  with  W = A A^T  and
+    S = (A*A)(A*A)^T — so two VMEM accumulators ride the nk contraction:
+    acc_w for the weighted wedge Gram, acc_s for its squared-entry twin.
+    With all multiplicities in {0, 1} this reduces exactly to the distinct
+    kernel's w(w-1)/2 (then S == W), and padding stays all-zero => 0.
+    """
+    t = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        accw_ref[...] = jnp.zeros_like(accw_ref)
+        accs_ref[...] = jnp.zeros_like(accs_ref)
+
+    au = au_ref[0].astype(jnp.float32)
+    av = av_ref[0].astype(jnp.float32)
+    accw_ref[...] += jax.lax.dot_general(
+        au, av, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    accs_ref[...] += jax.lax.dot_general(
+        au * au, av * av, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        u = upair_ref[t]
+        v = vpair_ref[t]
+        w = accw_ref[...]
+        s = accs_ref[...]
+        pairs = (w * w - s) * 0.5
+        row = jax.lax.broadcasted_iota(jnp.int32, (bi, bi), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (bi, bi), 1)
+        keep = (u * bi + row) < (v * bi + col)
+        out_ref[0, 0] = jnp.sum(jnp.where(keep, pairs, 0.0))
+
+
+def butterfly_pairs_windows_kernel_multiset_call(
+    adjs: jax.Array,
+    *,
+    block_i: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Window-batched multiset kernel over a [B, n_i, n_j] stack of padded
+    *weighted* biadjacencies (entries = net edge multiplicities).  Same grid
+    schedule as :func:`butterfly_pairs_windows_kernel_call`; the only extra
+    cost is the second Gram accumulator (one more bi*bi fp32 VMEM scratch
+    and one more MXU matmul per step)."""
+    B, n_i, n_j = adjs.shape
+    if n_i % block_i or n_j % block_k:
+        raise ValueError(
+            f"adjs {adjs.shape} not padded to ({block_i},{block_k})")
+    nu = n_i // block_i
+    nk = n_j // block_k
+    upair, vpair = _triangle_pairs(nu)
+    T = int(upair.shape[0])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_i, block_k),
+                         lambda b, t, k, up, vp: (b, up[t], k)),
+            pl.BlockSpec((1, block_i, block_k),
+                         lambda b, t, k, up, vp: (b, vp[t], k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, t, k, up, vp: (b, t)),
+        scratch_shapes=[pltpu.VMEM((block_i, block_i), jnp.float32),
+                        pltpu.VMEM((block_i, block_i), jnp.float32)],
+    )
+    import functools
+
+    fn = pl.pallas_call(
+        functools.partial(_windows_kernel_multiset, nk=nk, bi=block_i),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
         interpret=interpret,

@@ -24,12 +24,14 @@ import numpy as np
 from .butterfly_kernel import (
     butterfly_pairs_kernel_call,
     butterfly_pairs_windows_kernel_call,
+    butterfly_pairs_windows_kernel_multiset_call,
 )
 
 __all__ = [
     "butterfly_count_pallas",
     "butterfly_count_pallas_batched",
     "butterfly_count_pallas_windows",
+    "butterfly_count_pallas_windows_multiset",
     "butterfly_count_tiles",
 ]
 
@@ -102,6 +104,37 @@ def butterfly_count_pallas_windows(
     if pi or pk:
         a = jnp.pad(a, ((0, 0), (0, pi), (0, pk)))
     partials = butterfly_pairs_windows_kernel_call(
+        a, block_i=block_i, block_k=block_k, interpret=interpret
+    )
+    return jnp.sum(partials, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_k", "interpret", "orient")
+)
+def butterfly_count_pallas_windows_multiset(
+    adjs: jax.Array,
+    *,
+    block_i: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+    orient: bool = True,
+) -> jax.Array:
+    """Multiset twin of :func:`butterfly_count_pallas_windows`: counts a
+    [batch, n_i, n_j] stack of *weighted* biadjacencies (entries = net edge
+    multiplicities) under the multiset Gram identity.  The identity is
+    symmetric in the two sides, so the same orient-to-smaller-side transpose
+    stays valid."""
+    a = adjs
+    if orient and a.shape[1] > a.shape[2]:
+        a = a.transpose(0, 2, 1)
+    block_i = min(block_i, max(8, -(-a.shape[1] // 8) * 8))
+    block_k = min(block_k, max(128, -(-a.shape[2] // 128) * 128))
+    pi = (-a.shape[1]) % block_i
+    pk = (-a.shape[2]) % block_k
+    if pi or pk:
+        a = jnp.pad(a, ((0, 0), (0, pi), (0, pk)))
+    partials = butterfly_pairs_windows_kernel_multiset_call(
         a, block_i=block_i, block_k=block_k, interpret=interpret
     )
     return jnp.sum(partials, axis=1)

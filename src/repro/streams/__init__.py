@@ -2,12 +2,20 @@ from .stream import SgrStream, dedupe_stream, stream_chunks
 from .generators import (
     ba_bipartite_stream,
     bipartite_pa_stream,
+    dynamic_sgr_stream,
     synthetic_rating_stream,
     assign_timestamps,
 )
 from .engine import StreamingSGrapp
 from .multi import MultiStreamSGrapp
-from .state import StreamState, stream_state_init
+from .oracle import OracleWindow, oracle_window_counts, replay_dynamic
+from .state import (
+    OP_DELETE,
+    OP_INSERT,
+    StreamState,
+    resolve_window,
+    stream_state_init,
+)
 
 __all__ = [
     "SgrStream",
@@ -15,10 +23,17 @@ __all__ = [
     "stream_chunks",
     "ba_bipartite_stream",
     "bipartite_pa_stream",
+    "dynamic_sgr_stream",
     "synthetic_rating_stream",
     "assign_timestamps",
     "StreamingSGrapp",
     "MultiStreamSGrapp",
+    "OracleWindow",
+    "oracle_window_counts",
+    "replay_dynamic",
+    "OP_INSERT",
+    "OP_DELETE",
     "StreamState",
+    "resolve_window",
     "stream_state_init",
 ]

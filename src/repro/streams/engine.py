@@ -59,26 +59,41 @@ from repro.core.windows import pack_windows
 from repro.streams.state import (
     StreamState,
     estimator_carry,
+    resolve_window,
     set_estimator_carry,
     stream_state_init,
     windowizer_close_tail,
     windowizer_push,
 )
 
-__all__ = ["StreamingSGrapp", "STATE_DICT_VERSION"]
+__all__ = ["StreamingSGrapp", "STATE_DICT_VERSION", "DUP_POLICIES",
+           "migrate_state_dict_v1"]
 
-# state_dict schema version: restore() rejects any other value, and rejects
-# dicts whose key set drifted from the schema (missing or unknown keys).
-# v1 = the versioned single-stream schema (pre-versioned dicts are rejected
-# for the missing "version" key).  MultiStreamSGrapp reuses the same field
-# names with a stream axis (see repro.streams.multi).
-STATE_DICT_VERSION = 1
+# duplicate-edge policies: "distinct" is the paper's keep-first semantics
+# (today's behavior, now an explicit knob); "multiset" counts butterflies
+# multiplicity-weighted — every (insert - delete) net copy of an edge
+# participates (PAPERS.md: "Counting Butterflies over Streaming Bipartite
+# Graphs with Duplicate Edges").
+DUP_POLICIES = ("distinct", "multiset")
 
-_STATE_DICT_KEYS = frozenset({
+# state_dict schema version: restore() rejects dicts whose key set drifted
+# from their version's schema (missing or unknown keys) and any version it
+# has no schema for.  v1 = the versioned insert-only single-stream schema
+# (pre-versioned dicts are rejected for the missing "version" key).
+# v2 = v1 + the open-window per-record op/delta lane ("buf_op") of the
+# dynamic wire format; v1 checkpoints migrate forward on restore
+# (:func:`migrate_state_dict_v1` — an insert-only buffer is all-ones).
+# MultiStreamSGrapp reuses the same field names with a stream axis (see
+# repro.streams.multi).
+STATE_DICT_VERSION = 2
+
+_STATE_DICT_KEYS_V1 = frozenset({
     "version", "nt_w", "buf_i", "buf_j", "buf_last_tau", "buf_len", "uniq",
     "last_tau", "total_sgrs", "finalized", "counts", "estimates", "cum_sgrs",
     "end_tau", "carry_cum", "carry_alpha", "carry_err", "carry_sup",
 })
+_STATE_DICT_KEYS = _STATE_DICT_KEYS_V1 | {"buf_op"}
+_STATE_DICT_SCHEMAS = {1: _STATE_DICT_KEYS_V1, 2: _STATE_DICT_KEYS}
 
 
 def advance_estimator(step_fn, carry, truths, new_counts, new_cums,
@@ -106,23 +121,75 @@ def advance_estimator(step_fn, carry, truths, new_counts, new_cums,
     return carry
 
 
-def check_state_dict_keys(state: dict, expected: frozenset,
-                          *, schema: str) -> None:
+def resolve_pending_window(ei: np.ndarray, ej: np.ndarray,
+                           ops: np.ndarray | None, dup_policy: str
+                           ) -> tuple[np.ndarray, np.ndarray | None]:
+    """Resolve one closed window's record list into the ``pack_windows``
+    inputs its duplicate policy calls for — shared by both engines' flushes
+    so the policy semantics have exactly one implementation.
+
+    ``distinct`` + all-insert (``ops is None``): the raw record list, ready
+    for ``pack_windows``' keep-first dedupe — byte-for-byte the pre-dynamic
+    flush path.  ``distinct`` + deletes: the net surviving edges (an edge is
+    present iff its net multiplicity > 0), multiplicities discarded.
+    ``multiset``: the net surviving edges *with* their multiplicities —
+    every window resolves, because even an insert-only window's duplicates
+    carry weight under this policy."""
+    if dup_policy == "distinct":
+        if ops is None:
+            return np.stack([ei, ej], axis=1), None
+        ri, rj, _ = resolve_window(ei, ej, ops)
+        return np.stack([ri, rj], axis=1), None
+    ri, rj, mult = resolve_window(ei, ej, ops)
+    return np.stack([ri, rj], axis=1), mult
+
+
+def check_state_dict_keys(state: dict, expected: dict,
+                          *, schema: str) -> int:
     """Strict schema check shared by both engines' ``restore``: raise on
     missing or unknown keys instead of silently ignoring them (a truncated
-    or future-versioned checkpoint must never half-restore)."""
+    or future-versioned checkpoint must never half-restore).
+
+    ``expected`` maps each supported ``version`` to its key set; the dict's
+    key set must exactly match its own version's schema.  Returns the
+    validated version so callers can run migrations (restore accepts every
+    supported version, always migrating forward to the newest)."""
     got = set(state)
-    missing = sorted(expected - got)
-    unknown = sorted(got - expected)
-    if missing or unknown:
+    latest = expected[max(expected)]
+    if "version" not in got:
+        # no version to dispatch on: report the drift against the newest
+        # schema (a pre-versioned dict surfaces as missing 'version')
         raise ValueError(
-            f"{schema} state_dict key mismatch: missing={missing} "
-            f"unknown={unknown}")
+            f"{schema} state_dict key mismatch: "
+            f"missing={sorted(latest - got)} "
+            f"unknown={sorted(got - latest)}")
     version = int(np.asarray(state["version"]))
-    if version != STATE_DICT_VERSION:
+    if version not in expected:
         raise ValueError(
             f"{schema} state_dict version {version} != supported "
-            f"{STATE_DICT_VERSION}")
+            f"{sorted(expected)}")
+    keys = expected[version]
+    missing = sorted(keys - got)
+    unknown = sorted(got - keys)
+    if missing or unknown:
+        raise ValueError(
+            f"{schema} state_dict key mismatch (version {version}): "
+            f"missing={missing} unknown={unknown}")
+    return version
+
+
+def migrate_state_dict_v1(state: dict) -> dict:
+    """v1 -> v2 checkpoint migration, shared by both engines: a v1 engine
+    was insert-only, so its open-window buffer's op/delta lane is all-ones
+    (+1 insert per buffered record).  Works for the single-stream schema and
+    the multi-stream one alike — both store the buffer flat (ragged with
+    offsets for the fleet), and the lane aligns with ``buf_i`` element for
+    element.  Returns a new dict; the input is not mutated."""
+    out = dict(state)
+    out["buf_op"] = np.ones(np.asarray(state["buf_i"]).shape[0],
+                            dtype=np.int8)
+    out["version"] = np.int64(2)
+    return out
 
 
 class StreamingSGrapp:
@@ -154,17 +221,35 @@ class StreamingSGrapp:
     drop_partial : whether :meth:`finalize` drops a trailing window that
         never filled its quota (matches ``windowize(drop_partial=...)``).
     align : edge-lane alignment of packed flush batches (as ``windowize``).
+    dup_policy : duplicate-edge semantics — ``"distinct"`` (default; the
+        paper's keep-first dedupe, now explicit) or ``"multiset"``
+        (multiplicity-weighted counting: a window's count weighs every net
+        surviving copy of an edge).
+    on_missing_delete : what a delete of a never-inserted / already-deleted
+        edge does — ``"raise"`` (default, loud) or ``"ignore"`` (dropped as
+        a no-op record).  Deletes resolve against the *open* window only:
+        tumbling windows renew the graph, so closed windows are immutable.
     """
 
     def __init__(self, nt_w: int, alpha0: float, *, truths=None,
                  tol: float = 0.05, step: float = 0.005,
                  tier: str = "dense", executor: WindowExecutor | None = None,
                  devices=None, mesh=None, flush_every: int = 32,
-                 drop_partial: bool = True, align: int = 64):
+                 drop_partial: bool = True, align: int = 64,
+                 dup_policy: str = "distinct",
+                 on_missing_delete: str = "raise"):
         if nt_w <= 0:
             raise ValueError("nt_w must be positive")
         if flush_every < 1:
             raise ValueError("flush_every must be >= 1")
+        if dup_policy not in DUP_POLICIES:
+            raise ValueError(
+                f"dup_policy must be one of {DUP_POLICIES}, got "
+                f"{dup_policy!r}")
+        if on_missing_delete not in ("raise", "ignore"):
+            raise ValueError(
+                "on_missing_delete must be 'raise' or 'ignore', got "
+                f"{on_missing_delete!r}")
         if executor is not None and (devices is not None or mesh is not None):
             raise ValueError(
                 "devices=/mesh= conflict with executor=; configure the "
@@ -178,6 +263,8 @@ class StreamingSGrapp:
         self.flush_every = int(flush_every)
         self.drop_partial = bool(drop_partial)
         self.align = int(align)
+        self.dup_policy = dup_policy
+        self.on_missing_delete = on_missing_delete
         # snap=0: a flush sees the stream piecewise, so bucket programs
         # compile at ladder rungs — stable shapes, no steady-state re-trace
         # (test_flush_reuses_compiled_buckets pins this); batch replay
@@ -189,8 +276,11 @@ class StreamingSGrapp:
         # -- the whole per-stream state: a one-stream StreamState pytree
         self._state: StreamState = stream_state_init(1, alpha0)
 
-        # -- closed-but-uncounted windows awaiting a flush
-        self._pending: list[tuple[np.ndarray, np.ndarray, int, float]] = []
+        # -- closed-but-uncounted windows awaiting a flush, as
+        # (edge_i, edge_j, ops, n_sgrs, end_tau) with ops=None marking an
+        # all-insert window (the static fast path)
+        self._pending: list[tuple[np.ndarray, np.ndarray,
+                                  np.ndarray | None, int, float]] = []
 
         # -- per-window history (materialized at flush)
         self._counts: list[float] = []
@@ -226,18 +316,25 @@ class StreamingSGrapp:
 
     # -- ingestion -----------------------------------------------------------
 
-    def push(self, tau, edge_i, edge_j) -> int:
+    def push(self, tau, edge_i, edge_j, op=None) -> int:
         """Ingest a micro-batch of sgrs (scalars or equal-length arrays),
         closing adaptive windows online.  Returns the number of windows
         closed by this call.  Timestamps must be non-decreasing across the
         whole stream (raises ``ValueError`` otherwise — same contract as
-        ``windowize``)."""
+        ``windowize``).
+
+        ``op`` is the dynamic wire format's per-record op lane: 0 = insert,
+        1 = delete (``None`` = all inserts, the static wire format — this
+        path is bit-identical to the pre-dynamic engine).  A delete retracts
+        one multiplicity of its edge from the open window; a delete of an
+        absent edge follows the engine's ``on_missing_delete`` knob."""
         if self._state.finalized[0]:
             raise RuntimeError("push after finalize(); stream already ended")
         closed = windowizer_push(self._state, 0, tau, edge_i, edge_j,
-                                 self.nt_w)
-        for _, ei, ej, m, end_tau in closed:
-            self._pending.append((ei, ej, m, end_tau))
+                                 self.nt_w, op=op,
+                                 on_missing_delete=self.on_missing_delete)
+        for _, ei, ej, ops, m, end_tau in closed:
+            self._pending.append((ei, ej, ops, m, end_tau))
         if len(self._pending) >= self.flush_every:
             self.flush()
         return len(closed)
@@ -252,12 +349,25 @@ class StreamingSGrapp:
         if not self._pending:
             return 0
         pending = self._pending
-        per_edges = [np.stack([ei, ej], axis=1) for ei, ej, _, _ in pending]
-        n_sgrs = np.array([m for _, _, m, _ in pending], dtype=np.int64)
-        end_tau = np.array([t for _, _, _, t in pending], dtype=np.float64)
+        per_edges: list[np.ndarray] = []
+        per_mult: list[np.ndarray | None] = []
+        for ei, ej, ops, _, _ in pending:
+            e, mu = resolve_pending_window(ei, ej, ops, self.dup_policy)
+            per_edges.append(e)
+            per_mult.append(mu)
+        n_sgrs = np.array([m for _, _, _, m, _ in pending], dtype=np.int64)
+        end_tau = np.array([t for _, _, _, _, t in pending],
+                           dtype=np.float64)
         cum = int(self._state.total_sgrs[0]) + np.cumsum(n_sgrs)
-        batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
-                             window_end_tau=end_tau, align=self.align)
+        if self.dup_policy == "multiset":
+            # resolved edges are already unique; the multiplicity lane rides
+            # into the batch and routes every tier through its weighted twin
+            batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
+                                 window_end_tau=end_tau, align=self.align,
+                                 dedupe=False, per_window_mult=per_mult)
+        else:
+            batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
+                                 window_end_tau=end_tau, align=self.align)
         counts = self.executor.window_counts(batch)   # float64 [m]
         # windows stay pending until counted: a packing/counting error (bad
         # edge ids, a dying device) leaves the engine consistent and the
@@ -280,8 +390,8 @@ class StreamingSGrapp:
             tail = windowizer_close_tail(self._state, 0, self.nt_w,
                                          drop_partial=self.drop_partial)
             if tail is not None:
-                _, ei, ej, m, end_tau = tail
-                self._pending.append((ei, ej, m, end_tau))
+                _, ei, ej, ops, m, end_tau = tail
+                self._pending.append((ei, ej, ops, m, end_tau))
         return self.result()
 
     def result(self) -> SGrappResult:
@@ -314,6 +424,7 @@ class StreamingSGrapp:
             "nt_w": np.int64(self.nt_w),
             "buf_i": st.buf_i[0, :n].copy(),
             "buf_j": st.buf_j[0, :n].copy(),
+            "buf_op": st.buf_op[0, :n].copy(),
             "buf_last_tau": np.float64(st.buf_last_tau[0]),
             "buf_len": np.int64(n),
             "uniq": np.int64(st.uniq[0]),
@@ -337,8 +448,10 @@ class StreamingSGrapp:
         or an unsupported ``version``, raises ``ValueError`` — nothing is
         silently ignored.  A restored engine continues the stream
         bit-identically to one that never checkpointed."""
-        check_state_dict_keys(state, _STATE_DICT_KEYS,
-                              schema="StreamingSGrapp")
+        version = check_state_dict_keys(state, _STATE_DICT_SCHEMAS,
+                                        schema="StreamingSGrapp")
+        if version == 1:
+            state = migrate_state_dict_v1(state)
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine nt_w={self.nt_w}")
@@ -348,6 +461,7 @@ class StreamingSGrapp:
                                buf_capacity=max(256, ei.size))
         st.buf_i[0, :ei.size] = ei
         st.buf_j[0, :ej.size] = ej
+        st.buf_op[0, :ei.size] = np.asarray(state["buf_op"], dtype=np.int8)
         st.buf_len[0] = int(state["buf_len"])
         st.buf_last_tau[0] = float(state["buf_last_tau"])
         st.uniq[0] = int(state["uniq"])

@@ -20,7 +20,8 @@ import numpy as np
 from .stream import SgrStream
 
 __all__ = ["ba_unipartite_edges", "ba_bipartite_stream", "assign_timestamps",
-           "synthetic_rating_stream", "bipartite_pa_stream"]
+           "synthetic_rating_stream", "bipartite_pa_stream",
+           "dynamic_sgr_stream"]
 
 
 def ba_unipartite_edges(n: int, m: int, *, m0: int | None = None, seed: int = 0) -> np.ndarray:
@@ -159,6 +160,68 @@ def bipartite_pa_stream(
         qs = np.quantile(tau, np.linspace(0, 1, n_unique))
         tau = qs[np.clip(np.searchsorted(qs, tau), 0, n_unique - 1)]
     return SgrStream(tau, eu, ei)
+
+
+def dynamic_sgr_stream(
+    n_records: int,
+    nt_w: int,
+    *,
+    delete_frac: float = 0.1,
+    dup_frac: float = 0.1,
+    n_i: int = 64,
+    n_j: int = 64,
+    new_tau_p: float = 0.3,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Dynamic wire-format stream ``(tau, edge_i, edge_j, op)`` whose deletes
+    are always valid under ``on_missing_delete="raise"``.
+
+    The generator tracks the net multiplicity of every edge in the *open*
+    window by simulating the Algorithm-3 close rule for the given ``nt_w``
+    (a window closes at the ``nt_w + 1``-th unique timestamp, clearing the
+    ledger — tumbling windows renew the graph), so a delete record is only
+    ever emitted against an edge with net multiplicity > 0 in its own
+    window.  ``delete_frac`` is the target fraction of delete records,
+    ``dup_frac`` the fraction of inserts that duplicate a live edge;
+    ``delete_frac=0, dup_frac=0`` degenerates to a plain insert stream.
+    Timestamps advance by 1 with probability ``new_tau_p`` per record, so
+    windows hold ~``nt_w / new_tau_p`` records each.
+    """
+    if not 0.0 <= delete_frac < 1.0:
+        raise ValueError("delete_frac must be in [0, 1)")
+    if not 0.0 <= dup_frac <= 1.0:
+        raise ValueError("dup_frac must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    taus = np.zeros(n_records, dtype=np.float64)
+    ei = np.zeros(n_records, dtype=np.int64)
+    ej = np.zeros(n_records, dtype=np.int64)
+    ops = np.zeros(n_records, dtype=np.int64)
+    live: dict[tuple[int, int], int] = {}
+    t, uniq, prev_tau = 0.0, 0, None
+    for k in range(n_records):
+        if prev_tau is not None and rng.random() < new_tau_p:
+            t += 1.0
+        if prev_tau is None or t != prev_tau:
+            if uniq == nt_w:   # window closes; its ledger is unreachable now
+                live.clear()
+                uniq = 0
+            uniq += 1
+        prev_tau = t
+        deletable = [e for e, m in live.items() if m > 0]
+        if deletable and rng.random() < delete_frac:
+            e = deletable[rng.integers(len(deletable))]
+            live[e] -= 1
+            op = 1
+        else:
+            if live and rng.random() < dup_frac:
+                keys = list(live)
+                e = keys[rng.integers(len(keys))]
+            else:
+                e = (int(rng.integers(0, n_i)), int(rng.integers(0, n_j)))
+            live[e] = live.get(e, 0) + 1
+            op = 0
+        taus[k], ei[k], ej[k], ops[k] = t, e[0], e[1], op
+    return taus, ei, ej, ops
 
 
 def synthetic_rating_stream(

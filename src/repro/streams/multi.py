@@ -58,9 +58,12 @@ from repro.core.executor import WindowExecutor
 from repro.core.sgrapp import SGrappResult, estimator_step
 from repro.core.windows import pack_windows
 from repro.streams.engine import (
+    DUP_POLICIES,
     STATE_DICT_VERSION,
     advance_estimator,
     check_state_dict_keys,
+    migrate_state_dict_v1,
+    resolve_pending_window,
 )
 from repro.streams.state import (
     StreamState,
@@ -73,12 +76,18 @@ from repro.streams.state import (
 
 __all__ = ["MultiStreamSGrapp"]
 
-_MULTI_STATE_DICT_KEYS = frozenset({
+# v1 = insert-only fleet schema; v2 adds the flat "buf_op" lane (aligned
+# element-for-element with "buf_i" via the same "buf_offsets"), migrated
+# forward from v1 on restore exactly like the single-stream engine.
+_MULTI_STATE_DICT_KEYS_V1 = frozenset({
     "version", "n_streams", "nt_w", "buf_i", "buf_j", "buf_offsets",
     "buf_last_tau", "buf_len", "uniq", "last_tau", "total_sgrs", "finalized",
     "counts", "estimates", "cum_sgrs", "end_tau", "hist_offsets",
     "carry_cum", "carry_alpha", "carry_err", "carry_sup",
 })
+_MULTI_STATE_DICT_KEYS = _MULTI_STATE_DICT_KEYS_V1 | {"buf_op"}
+_MULTI_STATE_DICT_SCHEMAS = {1: _MULTI_STATE_DICT_KEYS_V1,
+                             2: _MULTI_STATE_DICT_KEYS}
 
 
 def _ragged_concat(parts: list[np.ndarray], dtype) -> tuple[np.ndarray, np.ndarray]:
@@ -113,19 +122,32 @@ class MultiStreamSGrapp:
         the tenants' pending closed windows *in total* reach this many
         (flush timing never changes any estimate, only batching).
     drop_partial, align : as the single-stream engine, shared.
+    dup_policy, on_missing_delete : duplicate-edge / missing-delete
+        semantics, shared by every tenant — exactly the single-stream
+        engine's knobs (the N=1 bit-identity contract covers them).
     """
 
     def __init__(self, n_streams: int, nt_w: int, alpha0, *, truths=None,
                  tol: float = 0.05, step: float = 0.005,
                  tier: str = "dense", executor: WindowExecutor | None = None,
                  devices=None, mesh=None, flush_every: int = 32,
-                 drop_partial: bool = True, align: int = 64):
+                 drop_partial: bool = True, align: int = 64,
+                 dup_policy: str = "distinct",
+                 on_missing_delete: str = "raise"):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if nt_w <= 0:
             raise ValueError("nt_w must be positive")
         if flush_every < 1:
             raise ValueError("flush_every must be >= 1")
+        if dup_policy not in DUP_POLICIES:
+            raise ValueError(
+                f"dup_policy must be one of {DUP_POLICIES}, got "
+                f"{dup_policy!r}")
+        if on_missing_delete not in ("raise", "ignore"):
+            raise ValueError(
+                "on_missing_delete must be 'raise' or 'ignore', got "
+                f"{on_missing_delete!r}")
         if executor is not None and (devices is not None or mesh is not None):
             raise ValueError(
                 "devices=/mesh= conflict with executor=; configure the "
@@ -144,6 +166,8 @@ class MultiStreamSGrapp:
         self.flush_every = int(flush_every)
         self.drop_partial = bool(drop_partial)
         self.align = int(align)
+        self.dup_policy = dup_policy
+        self.on_missing_delete = on_missing_delete
         # snap=0 for the same reason as the single-stream engine: flushes
         # see the streams piecewise, bucket programs must compile at ladder
         # rungs and never re-trace at steady state
@@ -156,7 +180,8 @@ class MultiStreamSGrapp:
         # per-stream closed-but-uncounted windows, in close order; the set
         # tracks which streams have any, so flush work scales with pending
         # tenants, never with fleet size
-        self._pending: list[list[tuple[np.ndarray, np.ndarray, int, float]]] \
+        self._pending: list[list[tuple[np.ndarray, np.ndarray,
+                                       np.ndarray | None, int, float]]] \
             = [[] for _ in range(n)]
         self._pending_streams: set[int] = set()
         self._n_pending_total = 0
@@ -207,18 +232,24 @@ class MultiStreamSGrapp:
 
     # -- ingestion -----------------------------------------------------------
 
-    def push(self, stream_id, tau, edge_i, edge_j) -> int:
+    def push(self, stream_id, tau, edge_i, edge_j, op=None) -> int:
         """Ingest a tagged micro-batch: ``stream_id`` is a scalar (the whole
         batch belongs to one tenant) or a per-record array (interleaved
         tenants in one batch — records group stably per stream, so
         interleaved and per-stream-sorted arrival are equivalent).  Returns
         the number of windows closed fleet-wide by this call.  Timestamps
         must be non-decreasing *per stream* (tenant clocks are independent);
-        a violating batch raises before any state changes."""
+        a violating batch raises before any state changes.
+
+        ``op`` is the dynamic wire format's per-record op lane (0 = insert,
+        1 = delete; ``None`` = all inserts) — deletes resolve against the
+        record's own stream's open window, per the fleet's
+        ``on_missing_delete`` knob."""
         closed = windowizer_push(self._state, stream_id, tau, edge_i, edge_j,
-                                 self.nt_w)
-        for s, ei, ej, m, end_tau in closed:
-            self._pending[s].append((ei, ej, m, end_tau))
+                                 self.nt_w, op=op,
+                                 on_missing_delete=self.on_missing_delete)
+        for s, ei, ej, ops, m, end_tau in closed:
+            self._pending[s].append((ei, ej, ops, m, end_tau))
             self._pending_streams.add(s)
         self._n_pending_total += len(closed)
         if self._n_pending_total >= self.flush_every:
@@ -237,24 +268,35 @@ class MultiStreamSGrapp:
             return 0
         streams = sorted(self._pending_streams)
         per_edges: list[np.ndarray] = []
+        per_mult: list[np.ndarray | None] = []
         n_sgrs: list[int] = []
         end_tau: list[float] = []
         cum: list[int] = []
         sids: list[int] = []
         for s in streams:
             c = int(self._state.total_sgrs[s])
-            for ei, ej, m, t in self._pending[s]:
-                per_edges.append(np.stack([ei, ej], axis=1))
+            for ei, ej, ops, m, t in self._pending[s]:
+                e, mu = resolve_pending_window(ei, ej, ops, self.dup_policy)
+                per_edges.append(e)
+                per_mult.append(mu)
                 n_sgrs.append(m)
                 end_tau.append(t)
                 c += m
                 cum.append(c)
                 sids.append(s)
-        batch = pack_windows(
-            per_edges, n_sgrs=np.asarray(n_sgrs, dtype=np.int64),
-            cum_sgrs=np.asarray(cum, dtype=np.int64),
-            window_end_tau=np.asarray(end_tau, dtype=np.float64),
-            align=self.align, stream_ids=np.asarray(sids, dtype=np.int32))
+        if self.dup_policy == "multiset":
+            batch = pack_windows(
+                per_edges, n_sgrs=np.asarray(n_sgrs, dtype=np.int64),
+                cum_sgrs=np.asarray(cum, dtype=np.int64),
+                window_end_tau=np.asarray(end_tau, dtype=np.float64),
+                align=self.align, stream_ids=np.asarray(sids, dtype=np.int32),
+                dedupe=False, per_window_mult=per_mult)
+        else:
+            batch = pack_windows(
+                per_edges, n_sgrs=np.asarray(n_sgrs, dtype=np.int64),
+                cum_sgrs=np.asarray(cum, dtype=np.int64),
+                window_end_tau=np.asarray(end_tau, dtype=np.float64),
+                align=self.align, stream_ids=np.asarray(sids, dtype=np.int32))
         counts = self.executor.window_counts(batch)   # float64 [m]
         # windows stay pending until counted: a packing/counting error (one
         # tenant's bad edge ids, a dying device) leaves the whole fleet
@@ -295,8 +337,8 @@ class MultiStreamSGrapp:
                 tail = windowizer_close_tail(self._state, s, self.nt_w,
                                              drop_partial=self.drop_partial)
                 if tail is not None:
-                    _, ei, ej, m, end_tau = tail
-                    self._pending[s].append((ei, ej, m, end_tau))
+                    _, ei, ej, ops, m, end_tau = tail
+                    self._pending[s].append((ei, ej, ops, m, end_tau))
                     self._pending_streams.add(s)
                     self._n_pending_total += 1
         return self.results()
@@ -332,8 +374,10 @@ class MultiStreamSGrapp:
         n = self.n_streams
         bufs_i = [st.buf_i[s, :int(st.buf_len[s])] for s in range(n)]
         bufs_j = [st.buf_j[s, :int(st.buf_len[s])] for s in range(n)]
+        bufs_op = [st.buf_op[s, :int(st.buf_len[s])] for s in range(n)]
         buf_i, buf_off = _ragged_concat(bufs_i, np.int64)
         buf_j, _ = _ragged_concat(bufs_j, np.int64)
+        buf_op, _ = _ragged_concat(bufs_op, np.int8)
         counts, hist_off = _ragged_concat(self._counts, np.float64)
         estimates, _ = _ragged_concat(self._estimates, np.float32)
         cum_sgrs, _ = _ragged_concat(self._cum_sgrs, np.int64)
@@ -344,6 +388,7 @@ class MultiStreamSGrapp:
             "nt_w": np.int64(self.nt_w),
             "buf_i": buf_i,
             "buf_j": buf_j,
+            "buf_op": buf_op,
             "buf_offsets": buf_off,
             "buf_last_tau": st.buf_last_tau.copy(),
             "buf_len": st.buf_len.copy(),
@@ -368,8 +413,10 @@ class MultiStreamSGrapp:
         or unknown keys, a version mismatch, or an ``nt_w``/``n_streams``
         mismatch raise ``ValueError``.  A restored fleet resumes every
         tenant bit-identically."""
-        check_state_dict_keys(state, _MULTI_STATE_DICT_KEYS,
-                              schema="MultiStreamSGrapp")
+        version = check_state_dict_keys(state, _MULTI_STATE_DICT_SCHEMAS,
+                                        schema="MultiStreamSGrapp")
+        if version == 1:
+            state = migrate_state_dict_v1(state)
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine "
@@ -382,6 +429,7 @@ class MultiStreamSGrapp:
         buf_off = np.asarray(state["buf_offsets"], dtype=np.int64)
         buf_i = np.asarray(state["buf_i"], dtype=np.int64)
         buf_j = np.asarray(state["buf_j"], dtype=np.int64)
+        buf_op = np.asarray(state["buf_op"], dtype=np.int8)
         buf_len = np.asarray(state["buf_len"], dtype=np.int64)
         cap = max(256, int(buf_len.max()) if n else 256)
         st = stream_state_init(n, self.alpha0, buf_capacity=cap)
@@ -389,6 +437,7 @@ class MultiStreamSGrapp:
             a, b = int(buf_off[s]), int(buf_off[s + 1])
             st.buf_i[s, :b - a] = buf_i[a:b]
             st.buf_j[s, :b - a] = buf_j[a:b]
+            st.buf_op[s, :b - a] = buf_op[a:b]
         st.buf_len[:] = buf_len
         st.buf_last_tau[:] = np.asarray(state["buf_last_tau"], np.float64)
         st.uniq[:] = np.asarray(state["uniq"], np.int64)

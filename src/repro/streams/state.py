@@ -39,10 +39,22 @@ __all__ = [
     "set_estimator_carry",
     "windowizer_push",
     "windowizer_close_tail",
+    "resolve_window",
+    "OP_INSERT",
+    "OP_DELETE",
     "NO_TAU",
 ]
 
 NO_TAU = float("nan")  # sentinel: no timestamp observed yet
+
+# dynamic wire format: per-record op codes.  A record is (op, stream_id,
+# tau, i, j); op=None on push means all-insert (the static wire format,
+# unchanged).  Internally every record carries a *delta* lane instead:
+# +1 insert, -1 applied delete, 0 no-op (a delete dropped under
+# on_missing_delete="ignore" — kept as a record so the unique-timestamp
+# quota and |E_k| bookkeeping see exactly the pushed stream).
+OP_INSERT = 0
+OP_DELETE = 1
 
 
 @dataclass
@@ -50,6 +62,8 @@ class StreamState:
     """Per-stream engine state, leading axis = stream (see module doc).
 
     buf_i / buf_j  : int64   [n_streams, buf_capacity]  open-window buffer
+    buf_op         : int8    [n_streams, buf_capacity]  per-record delta:
+                     +1 insert, -1 applied delete, 0 ignored no-op record
     buf_len        : int64   [n_streams]   live sgrs in each buffer row
     buf_last_tau   : float64 [n_streams]   last tau in the open buffer
     uniq           : int64   [n_streams]   unique timestamps in the open window
@@ -62,6 +76,7 @@ class StreamState:
 
     buf_i: np.ndarray
     buf_j: np.ndarray
+    buf_op: np.ndarray
     buf_len: np.ndarray
     buf_last_tau: np.ndarray
     uniq: np.ndarray
@@ -112,6 +127,7 @@ def stream_state_init(n_streams: int, alpha0, *,
     return StreamState(
         buf_i=np.zeros((n_streams, buf_capacity), dtype=np.int64),
         buf_j=np.zeros((n_streams, buf_capacity), dtype=np.int64),
+        buf_op=np.ones((n_streams, buf_capacity), dtype=np.int8),
         buf_len=np.zeros(n_streams, dtype=np.int64),
         buf_last_tau=np.full(n_streams, NO_TAU, dtype=np.float64),
         uniq=np.zeros(n_streams, dtype=np.int64),
@@ -146,9 +162,11 @@ def set_estimator_carry(state: StreamState, s: int, carry) -> None:
 # ---------------------------------------------------------------------------
 
 def _buf_append(state: StreamState, s: int, ei: np.ndarray,
-                ej: np.ndarray) -> None:
+                ej: np.ndarray, dl: np.ndarray | None = None) -> None:
     """Append a chunk to stream s's open-window buffer row, doubling the
-    shared row capacity when it overflows (amortized O(1) per sgr)."""
+    shared row capacity when it overflows (amortized O(1) per sgr).
+    ``dl`` is the per-record delta lane (+1/-1/0); ``None`` means all
+    inserts (+1), the static-stream fast path."""
     n = ei.shape[0]
     if n == 0:
         return
@@ -162,18 +180,133 @@ def _buf_append(state: StreamState, s: int, ei: np.ndarray,
         pad = ((0, 0), (0, grow))
         state.buf_i = np.pad(state.buf_i, pad)
         state.buf_j = np.pad(state.buf_j, pad)
+        # pad value 0 is fine: slots beyond buf_len are dead until written
+        state.buf_op = np.pad(state.buf_op, pad)
     state.buf_i[s, pos:need] = ei
     state.buf_j[s, pos:need] = ej
+    state.buf_op[s, pos:need] = 1 if dl is None else dl
     state.buf_len[s] = need
 
 
-def _buf_take(state: StreamState, s: int) -> tuple[np.ndarray, np.ndarray]:
+def _buf_take(state: StreamState, s: int
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Drain stream s's buffer row: copies of the live prefix, row reset."""
     n = int(state.buf_len[s])
     ei = state.buf_i[s, :n].copy()
     ej = state.buf_j[s, :n].copy()
+    op = state.buf_op[s, :n].copy()
     state.buf_len[s] = 0
-    return ei, ej
+    return ei, ej, op
+
+
+def _norm_ops(dl: np.ndarray) -> np.ndarray | None:
+    """Collapse an all-insert delta lane to ``None`` — the marker the whole
+    downstream pipeline (flush packing, duplicate-policy resolution) keys its
+    static-stream fast path on, keeping insert-only windows bit-identical to
+    the pre-dynamic wire format."""
+    return None if bool((dl == 1).all()) else dl
+
+
+def resolve_window(edge_i: np.ndarray, edge_j: np.ndarray,
+                   op: np.ndarray | None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Resolve a closed window's record list against its deletions: returns
+    ``(edge_i, edge_j, mult)`` — the unique surviving edges with net
+    multiplicity > 0, in packed-key order.  ``op`` is the per-record delta
+    lane (+1/-1/0; ``None`` = all inserts).  Deletions resolve *here*, at
+    window close, because tumbling windows renew the graph (Alg. 4 line 19):
+    a delete can only ever target an insert of the same window, so a fully
+    retracted window resolves to zero edges and packs as ``n_edges=0``
+    without breaking bucket routing."""
+    from ..core.butterfly import _check_id_range_np
+
+    ei = np.asarray(edge_i, dtype=np.int64)
+    ej = np.asarray(edge_j, dtype=np.int64)
+    _check_id_range_np(np.stack([ei, ej], axis=1) if ei.size
+                       else np.zeros((0, 2), np.int64))
+    key = ei << 32 | ej
+    uk, inv = np.unique(key, return_inverse=True)
+    net = np.zeros(uk.shape[0], dtype=np.int64)
+    np.add.at(net, inv,
+              np.ones(ei.shape[0], np.int64) if op is None
+              else np.asarray(op, dtype=np.int64))
+    keep = net > 0
+    uk = uk[keep]
+    return uk >> 32, uk & 0xFFFFFFFF, net[keep]
+
+
+def _apply_missing_delete_policy(
+    state: StreamState, s: int, ei: np.ndarray, ej: np.ndarray,
+    w_off: np.ndarray, dl: np.ndarray, on_missing_delete: str,
+) -> np.ndarray:
+    """Validate a chunk's deletes against their windows *before any state
+    mutation*: a delete targets the net content of its own window (open
+    buffer + earlier chunk records for offset 0; earlier chunk records only
+    for later offsets — tumbling windows renew the graph).
+
+    ``"raise"``: any delete whose edge has net multiplicity 0 at its arrival
+    raises ``ValueError`` (never-inserted, already-deleted, or fully
+    retracted edge) and the whole push is rejected untouched.
+    ``"ignore"``: such deletes are zeroed to no-op records (delta 0) — the
+    clamped-at-zero walk.  Returns the (possibly rewritten) delta lane.
+
+    Vectorized: records group by (window offset, i, j) via a stable lexsort;
+    within each group the running sum S of deltas is the edge's net
+    multiplicity after each record.  ``raise`` triggers iff any S < 0.  For
+    ``ignore``, by Skorokhod reflection the clamped walk ignores exactly the
+    deletes where S drops below the running floor ``min(0, min_{l<k} S_l)``
+    of the *unclamped* walk — so one pass computes every ignored position
+    without replaying the clamp sequentially.  Buffer records precede chunk
+    records in their group and were cleaned by earlier pushes, so their
+    prefix sums are non-negative by induction and only chunk positions can
+    flag."""
+    nb = int(state.buf_len[s])
+    nc = ei.shape[0]
+    ii = np.concatenate([state.buf_i[s, :nb], ei])
+    jj = np.concatenate([state.buf_j[s, :nb], ej])
+    ww = np.concatenate([np.zeros(nb, np.int64),
+                         np.asarray(w_off, dtype=np.int64)])
+    dd = np.concatenate([state.buf_op[s, :nb].astype(np.int64),
+                         dl.astype(np.int64)])
+    src = np.concatenate([np.full(nb, -1, np.int64), np.arange(nc)])
+    order = np.lexsort((jj, ii, ww))  # stable: arrival order within a group
+    ii, jj, ww, dd, src = ii[order], jj[order], ww[order], dd[order], src[order]
+    n = nb + nc
+    head = np.empty(n, dtype=bool)
+    head[0] = True
+    head[1:] = (ww[1:] != ww[:-1]) | (ii[1:] != ii[:-1]) | (jj[1:] != jj[:-1])
+    starts = np.flatnonzero(head)
+    sizes = np.diff(np.r_[starts, n])
+    cum = np.cumsum(dd)
+    base = np.repeat(np.r_[0, cum[starts[1:] - 1]], sizes)
+    S = cum - base  # segmented running net multiplicity
+    if on_missing_delete == "raise":
+        neg = S < 0
+        if neg.any():
+            p = int(np.argmax(neg))
+            raise ValueError(
+                f"stream {s}: delete of edge ({int(ii[p])}, {int(jj[p])}) "
+                "targets an edge absent from its window (never inserted, "
+                "already deleted, or fully retracted); pass "
+                "on_missing_delete='ignore' to drop such deletes")
+        return dl
+    # ignore: running floor of the unclamped walk, segmented via the
+    # group-offset trick (BIG separates groups; min-accumulate crosses
+    # group boundaries monotonically because offsets only decrease)
+    gid = np.cumsum(head) - 1
+    BIG = np.int64(n + 2)
+    A = np.minimum(S, 0) - gid * BIG
+    M = np.minimum.accumulate(A) + gid * BIG  # min(0, min_{l<=k} S_l) per group
+    prev = np.empty(n, dtype=np.int64)
+    prev[0] = 0
+    prev[1:] = M[:-1]
+    prev[head] = 0  # first record of a group has an empty past
+    ignored = (dd == -1) & (S < prev)
+    if not ignored.any():
+        return dl
+    out = dl.copy()
+    out[src[ignored]] = 0
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +316,9 @@ def _buf_take(state: StreamState, s: int) -> tuple[np.ndarray, np.ndarray]:
 def _ingest_ranked(
     state: StreamState, s: int, tau: np.ndarray, ei: np.ndarray,
     ej: np.ndarray, uniq_idx_last: int, w_off: np.ndarray, nt_w: int,
-    closed: list[tuple[int, np.ndarray, np.ndarray, int, float]],
+    closed: list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None,
+                       int, float]],
+    dl: np.ndarray | None = None,
 ) -> None:
     """Shared per-stream ingest epilogue: given a chunk of stream ``s``'s
     records with their window offsets (``w_off``; 0 = still the open
@@ -191,31 +326,39 @@ def _ingest_ranked(
     windows onto ``closed``, and update the stream's buffer/quota rows.
     Both the single-stream fast path and the grouped multi-stream path end
     here — the window-boundary subtleties (empty completing segment,
-    quota rollover) have exactly one implementation."""
+    quota rollover) have exactly one implementation.
+
+    ``dl`` is the validated per-record delta lane (``None`` = all inserts).
+    Closed windows are emitted as ``(stream, edge_i, edge_j, ops, n_sgrs,
+    end_tau)`` with ``ops=None`` for all-insert windows (the static fast
+    path) and ``n_sgrs`` the window's *net* count (inserts minus applied
+    deletes — identical to the record count for insert-only streams)."""
     n = tau.shape[0]
     w_max = int(w_off[-1])
     if w_max == 0:
         # appends copy into the buffer row, so the caller's arrays are
         # never aliased (middle-segment fancy indexing below never aliases
         # either)
-        _buf_append(state, s, ei, ej)
+        _buf_append(state, s, ei, ej, dl)
     else:
         cuts = np.searchsorted(w_off, np.arange(1, w_max + 1), side="left")
         segs = np.split(np.arange(n), cuts)
         # segment 0 completes the open window
         s0 = segs[0]
-        _buf_append(state, s, ei[s0], ej[s0])
+        _buf_append(state, s, ei[s0], ej[s0],
+                    None if dl is None else dl[s0])
         end_tau = (float(tau[s0[-1]]) if s0.shape[0]
                    else float(state.buf_last_tau[s]))
-        m = int(state.buf_len[s])
-        bi, bj = _buf_take(state, s)
-        closed.append((s, bi, bj, m, end_tau))
+        bi, bj, bop = _buf_take(state, s)
+        closed.append((s, bi, bj, _norm_ops(bop), int(bop.sum()), end_tau))
         # middle segments are whole windows in their own right
         for seg in segs[1:-1]:
-            closed.append((s, ei[seg], ej[seg],
-                           int(seg.shape[0]), float(tau[seg[-1]])))
+            ops = None if dl is None else _norm_ops(dl[seg])
+            m = int(seg.shape[0]) if ops is None else int(ops.sum())
+            closed.append((s, ei[seg], ej[seg], ops, m, float(tau[seg[-1]])))
         # the last segment becomes the new open window
-        _buf_append(state, s, ei[segs[-1]], ej[segs[-1]])
+        _buf_append(state, s, ei[segs[-1]], ej[segs[-1]],
+                    None if dl is None else dl[segs[-1]])
     state.uniq[s] = uniq_idx_last - w_max * nt_w + 1
     state.buf_last_tau[s] = float(tau[-1])
     state.last_tau[s] = float(tau[-1])
@@ -223,8 +366,9 @@ def _ingest_ranked(
 
 def _push_one_stream(
     state: StreamState, s: int, tau: np.ndarray, ei: np.ndarray,
-    ej: np.ndarray, nt_w: int,
-) -> list[tuple[int, np.ndarray, np.ndarray, int, float]]:
+    ej: np.ndarray, nt_w: int, dl: np.ndarray | None = None,
+    on_missing_delete: str = "raise",
+) -> list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None, int, float]]:
     """Single-stream fast path of :func:`windowizer_push`: the whole chunk
     belongs to stream ``s``, so no grouping pass runs — this is the
     per-push hot loop of serving (micro-batches of one are common), kept
@@ -253,9 +397,15 @@ def _push_one_stream(
     uniq_idx = uniq0 - 1 + np.cumsum(is_new)   # 0-based within window run
     w_off = uniq_idx // nt_w                   # 0 = still the open window
 
-    closed: list[tuple[int, np.ndarray, np.ndarray, int, float]] = []
+    if dl is not None and (dl == -1).any():
+        # still pre-mutation: a raise here leaves the stream untouched
+        dl = _apply_missing_delete_policy(state, s, ei, ej, w_off, dl,
+                                          on_missing_delete)
+
+    closed: list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None,
+                       int, float]] = []
     _ingest_ranked(state, s, tau, ei, ej, int(uniq_idx[-1]), w_off, nt_w,
-                   closed)
+                   closed, dl=dl)
     return closed
 
 def windowizer_push(
@@ -265,14 +415,28 @@ def windowizer_push(
     edge_i: np.ndarray,
     edge_j: np.ndarray,
     nt_w: int,
-) -> list[tuple[int, np.ndarray, np.ndarray, int, float]]:
+    *,
+    op: np.ndarray | None = None,
+    on_missing_delete: str = "raise",
+) -> list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None, int, float]]:
     """Ingest a tagged micro-batch, closing adaptive windows online.
 
-    Returns the closed windows as ``(stream, edge_i, edge_j, n_sgrs,
+    Returns the closed windows as ``(stream, edge_i, edge_j, ops, n_sgrs,
     end_tau)`` tuples in per-stream close order (cross-stream order follows
     ascending stream id — irrelevant to any consumer, since streams are
-    independent).  Mutates ``state`` in place.  All validation happens
-    *before* any mutation, so a rejected batch leaves the fleet untouched.
+    independent).  ``ops`` is the window's per-record delta lane, ``None``
+    for all-insert windows; ``n_sgrs`` is the window's net count (= record
+    count for insert-only).  Mutates ``state`` in place.  All validation
+    happens *before* any mutation, so a rejected batch leaves the fleet
+    untouched.
+
+    ``op`` is the dynamic wire format's per-record op lane: 0 =
+    :data:`OP_INSERT`, 1 = :data:`OP_DELETE` (``None`` = all inserts, the
+    static wire format).  A delete retracts one multiplicity of its edge
+    from its *own* window — tumbling windows renew the graph, so deletes
+    never reach back into closed windows.  A delete whose edge has net
+    multiplicity 0 follows ``on_missing_delete``: ``"raise"`` (default,
+    loud) or ``"ignore"`` (dropped as a no-op record).
 
     The unique-timestamp rank of every record — for every stream in the
     batch — is computed in one vectorized pass: records stably group by
@@ -282,25 +446,42 @@ def windowizer_push(
     within-stream rank.  Only the window-boundary splits (O(windows
     closed)) run per stream.
     """
+    if on_missing_delete not in ("raise", "ignore"):
+        raise ValueError(
+            "on_missing_delete must be 'raise' or 'ignore', got "
+            f"{on_missing_delete!r}")
     tau = np.atleast_1d(np.asarray(tau, dtype=np.float64))
     ei = np.atleast_1d(np.asarray(edge_i, dtype=np.int64))
     ej = np.atleast_1d(np.asarray(edge_j, dtype=np.int64))
     if not (tau.shape == ei.shape == ej.shape and tau.ndim == 1):
         raise ValueError("tau/edge_i/edge_j must be equal-length 1-D")
+    dl = None
+    if op is not None:
+        opa = np.atleast_1d(np.asarray(op, dtype=np.int64))
+        if opa.shape != tau.shape:
+            raise ValueError("op must match tau/edge_i/edge_j in length")
+        if opa.size and (opa.min() < OP_INSERT or opa.max() > OP_DELETE):
+            raise ValueError(
+                f"op must be {OP_INSERT} (insert) or {OP_DELETE} (delete)")
+        if opa.any():
+            dl = (1 - 2 * opa).astype(np.int8)  # wire op -> delta lane
+        # else: all-insert wire batch, dl stays None (static fast path)
     if np.ndim(stream_ids) == 0:
         # scalar tag: the whole batch is one stream's — the dominant
         # serving shape (and the single-stream engine's only shape), so it
         # skips the grouping machinery entirely
         if tau.size == 0:
             return []
-        return _push_one_stream(state, int(stream_ids), tau, ei, ej, nt_w)
+        return _push_one_stream(state, int(stream_ids), tau, ei, ej, nt_w,
+                                dl, on_missing_delete)
     sid = np.atleast_1d(np.asarray(stream_ids, dtype=np.int64))
     if sid.shape != tau.shape:
         raise ValueError("stream_ids/tau/edge_i/edge_j must be equal-length 1-D")
     if tau.size == 0:
         return []
     if sid[0] == sid[-1] and (sid == sid[0]).all():
-        return _push_one_stream(state, int(sid[0]), tau, ei, ej, nt_w)
+        return _push_one_stream(state, int(sid[0]), tau, ei, ej, nt_w,
+                                dl, on_missing_delete)
     if sid.min() < 0 or sid.max() >= state.n_streams:
         raise ValueError(
             f"stream_id out of range [0, {state.n_streams})")
@@ -314,8 +495,10 @@ def windowizer_push(
     order = np.argsort(sid, kind="stable")
     if np.array_equal(order, np.arange(order.shape[0])):
         t, gi, gj, gs = tau, ei, ej, sid  # already grouped (common case)
+        gdl = dl
     else:
         t, gi, gj, gs = tau[order], ei[order], ej[order], sid[order]
+        gdl = None if dl is None else dl[order]
     n = t.shape[0]
     seg_start = np.concatenate(
         ([0], np.flatnonzero(gs[1:] != gs[:-1]) + 1))
@@ -352,26 +535,38 @@ def windowizer_push(
     uniq_idx = state.uniq[gs] - 1 + rank             # 0-based within window run
     w_off = uniq_idx // nt_w                         # 0 = still the open window
 
-    closed: list[tuple[int, np.ndarray, np.ndarray, int, float]] = []
+    # per-stream missing-delete policy, still pre-mutation: an offending
+    # segment raises before ANY stream's state changes
+    seg_dl: list[np.ndarray | None] = []
     for a, b, s in zip(seg_start, seg_end, seg_sid):
+        d = None if gdl is None else gdl[a:b]
+        if d is not None and (d == -1).any():
+            d = _apply_missing_delete_policy(
+                state, int(s), gi[a:b], gj[a:b], w_off[a:b], d,
+                on_missing_delete)
+        seg_dl.append(d)
+
+    closed: list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None,
+                       int, float]] = []
+    for a, b, s, d in zip(seg_start, seg_end, seg_sid, seg_dl):
         _ingest_ranked(state, int(s), t[a:b], gi[a:b], gj[a:b],
-                       int(uniq_idx[b - 1]), w_off[a:b], nt_w, closed)
+                       int(uniq_idx[b - 1]), w_off[a:b], nt_w, closed, dl=d)
     return closed
 
 
 def windowizer_close_tail(
     state: StreamState, s: int, nt_w: int, *, drop_partial: bool,
-) -> tuple[int, np.ndarray, np.ndarray, int, float] | None:
+) -> tuple[int, np.ndarray, np.ndarray, np.ndarray | None, int, float] | None:
     """End stream ``s``: close the trailing window (kept if it filled its
     quota, else per ``drop_partial``) and mark the stream finalized.
-    Returns the closed window tuple, or None if the tail was dropped or
-    empty."""
+    Returns the closed window tuple (same 6-tuple shape as
+    :func:`windowizer_push`), or None if the tail was dropped or empty."""
     out = None
     if int(state.buf_len[s]) and (int(state.uniq[s]) >= nt_w
                                   or not drop_partial):
-        m = int(state.buf_len[s])
-        bi, bj = _buf_take(state, s)
-        out = (s, bi, bj, m, float(state.buf_last_tau[s]))
+        bi, bj, bop = _buf_take(state, s)
+        out = (s, bi, bj, _norm_ops(bop), int(bop.sum()),
+               float(state.buf_last_tau[s]))
     state.buf_len[s] = 0
     state.uniq[s] = 0
     state.finalized[s] = True

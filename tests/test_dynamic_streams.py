@@ -1,0 +1,454 @@
+"""Differential harness for the fully dynamic wire format.
+
+The contract under test: replaying a dynamic ``(op, stream_id, tau, i, j)``
+stream — deletions, duplicate edges, any interleaving — through the engines
+produces windows *identical* to :func:`repro.streams.oracle.replay_dynamic`,
+a deliberately naive sequential host oracle that shares no code with the
+vectorized windowizer.  The agreement is demanded for every counting tier,
+both engines (single-stream and fleet), both duplicate policies, and (on the
+CI multi-device job) the sharded dispatch path.
+
+Also pinned here: the multiset counting tiers against brute force, the
+unconditional ``pack_windows`` id-range guard, the missing-delete policy
+knob, the recount-vs-delta decrement router, insert-only bit-identity to the
+pre-dynamic engine, and v1 -> v2 checkpoint migration.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.butterfly import (
+    butterfly_delta_np,
+    count_butterflies_dense_multiset,
+    count_butterflies_multiset_np,
+    count_butterflies_np,
+    count_butterflies_sparse_multiset,
+    count_butterflies_tiled_multiset,
+)
+from repro.core.executor import TIERS, WindowExecutor, route_decrement
+from repro.core.windows import pack_windows
+from repro.kernels.butterfly import butterfly_count_pallas_windows_multiset
+from repro.streams import (
+    MultiStreamSGrapp,
+    StreamingSGrapp,
+    dynamic_sgr_stream,
+    oracle_window_counts,
+    replay_dynamic,
+    resolve_window,
+)
+from repro.streams.engine import migrate_state_dict_v1
+
+NT_W = 5
+
+
+def brute_multiset(edges, mult):
+    """O(m^2) multiset butterfly count straight from the definition: every
+    unordered pair of wedges (u, v through j) with u != v, weighted by the
+    product of its four edge multiplicities (combinatorially: choosing one
+    copy of each edge)."""
+    m = {}
+    for (i, j), w in zip(map(tuple, edges), mult):
+        m[(i, j)] = m.get((i, j), 0) + int(w)
+    us = sorted({i for i, _ in m})
+    js = sorted({j for _, j in m})
+    total = 0
+    for a, u in enumerate(us):
+        for v in us[a + 1:]:
+            for b, x in enumerate(js):
+                for y in js[b + 1:]:
+                    total += (m.get((u, x), 0) * m.get((u, y), 0)
+                              * m.get((v, x), 0) * m.get((v, y), 0))
+    return float(total)
+
+
+def rand_weighted(seed, n_i=7, n_j=7, m=18, wmax=3):
+    rng = np.random.default_rng(seed)
+    e = np.unique(
+        rng.integers(0, [n_i, n_j], size=(m, 2)).astype(np.int64), axis=0)
+    w = rng.integers(1, wmax + 1, size=e.shape[0]).astype(np.int64)
+    return e, w
+
+
+def weighted_adj(e, w, n_i, n_j):
+    a = np.zeros((n_i, n_j), dtype=np.float32)
+    a[e[:, 0], e[:, 1]] = w
+    return a
+
+
+# -- multiset counting tiers vs brute force -----------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_multiset_tiers_agree_with_brute_force(seed):
+    e, w = rand_weighted(seed)
+    want = brute_multiset(e, w)
+    assert count_butterflies_multiset_np(e, w) == want
+    adj = weighted_adj(e, w, 7, 7)
+    assert float(count_butterflies_dense_multiset(adj)) == want
+    assert float(count_butterflies_tiled_multiset(adj, tile=4)) == want
+    got = float(count_butterflies_sparse_multiset(
+        np.asarray(e[:, 0], np.int32), np.asarray(e[:, 1], np.int32),
+        np.asarray(w, np.int32), np.ones(e.shape[0], bool), 7, 7, 512))
+    assert got == want
+    pk = float(butterfly_count_pallas_windows_multiset(
+        adj[None], block_i=8, block_k=8, interpret=True)[0])
+    assert pk == want
+
+
+def test_multiset_reduces_to_distinct_at_mult_one():
+    e, _ = rand_weighted(11)
+    w1 = np.ones(e.shape[0], dtype=np.int64)
+    assert count_butterflies_multiset_np(e, w1) == count_butterflies_np(e)
+
+
+# -- resolve_window -----------------------------------------------------------
+
+def test_resolve_window_nets_duplicates_and_deletes():
+    ei = np.array([1, 1, 2, 1, 2], dtype=np.int64)
+    ej = np.array([5, 5, 6, 5, 6], dtype=np.int64)
+    op = np.array([1, 1, 1, -1, -1], dtype=np.int64)  # delta lane
+    ri, rj, mult = resolve_window(ei, ej, op)
+    np.testing.assert_array_equal(ri, [1])
+    np.testing.assert_array_equal(rj, [5])
+    np.testing.assert_array_equal(mult, [1])
+
+
+def test_resolve_window_fully_retracted_is_empty():
+    ei = np.array([3, 3], dtype=np.int64)
+    ej = np.array([4, 4], dtype=np.int64)
+    op = np.array([1, -1], dtype=np.int64)
+    ri, rj, mult = resolve_window(ei, ej, op)
+    assert ri.size == rj.size == mult.size == 0
+
+
+def test_resolve_window_checks_id_range():
+    with pytest.raises(ValueError, match="vertex ids"):
+        resolve_window(np.array([1 << 32]), np.array([0]), None)
+
+
+# -- pack_windows guard + multiplicity lane (satellites 1 and 3) --------------
+
+def _meta(per):
+    n = np.array([e.shape[0] for e in per], dtype=np.int64)
+    return dict(n_sgrs=n, cum_sgrs=np.cumsum(n),
+                window_end_tau=np.arange(1.0, len(per) + 1.0))
+
+
+def test_pack_windows_id_range_guard_without_dedupe():
+    """Regression: the >= 2**32 id guard must run even when dedupe=False —
+    resolved multiset windows skip the dedupe path that used to host it."""
+    bad = [np.array([[1 << 32, 0]], dtype=np.int64)]
+    mult = [np.ones(1, dtype=np.int64)]
+    with pytest.raises(ValueError, match="vertex ids"):
+        pack_windows(bad, dedupe=False, per_window_mult=mult, **_meta(bad))
+    with pytest.raises(ValueError, match="vertex ids"):
+        pack_windows(bad, dedupe=False, **_meta(bad))
+
+
+def test_pack_windows_multiplicity_lane_roundtrip():
+    per = [np.array([[0, 1], [2, 3]], dtype=np.int64),
+           np.array([[4, 5]], dtype=np.int64)]
+    mult = [np.array([2, 1], dtype=np.int64), np.array([3], dtype=np.int64)]
+    b = pack_windows(per, dedupe=False, per_window_mult=mult, align=4,
+                     **_meta(per))
+    assert b.edge_mult is not None and b.edge_mult.shape == b.edge_i.shape
+    np.testing.assert_array_equal(b.edge_mult[0, :2], [2, 1])
+    np.testing.assert_array_equal(b.edge_mult[1, :1], [3])
+    # dedupe=True ignores the lane entirely (distinct-mode packing)
+    b2 = pack_windows(per, dedupe=True, align=4, **_meta(per))
+    assert b2.edge_mult is None
+
+
+def test_take_empty_selection_and_capacity_guard():
+    per = [np.array([[0, 1], [2, 3]], dtype=np.int64)]
+    b = pack_windows(per, align=4, **_meta(per))
+    empty = b.take(np.zeros(0, dtype=np.int64), 0)
+    assert empty.n_windows == 0
+    with pytest.raises(ValueError, match="capacity 1 < max selected"):
+        b.take(np.array([0]), 1)
+    with pytest.raises(ValueError, match="non-negative"):
+        b.take(np.array([0]), -1)
+
+
+# -- engine vs host oracle differential ---------------------------------------
+
+def mkdyn(seed, n=400, nt_w=NT_W, **kw):
+    kw.setdefault("delete_frac", 0.15)
+    kw.setdefault("dup_frac", 0.25)
+    kw.setdefault("n_i", 24)
+    kw.setdefault("n_j", 24)
+    return dynamic_sgr_stream(n, nt_w, seed=seed, **kw)
+
+
+def push_dyn(eng, t, i, j, o, mb=23):
+    for a in range(0, t.size, mb):
+        sl = slice(a, a + mb)
+        eng.push(t[sl], i[sl], j[sl], op=None if o is None else o[sl])
+    return eng.finalize()
+
+
+def assert_matches_oracle(eng_result, end_taus, oracle, policy):
+    oc = oracle_window_counts(oracle, policy)
+    np.testing.assert_array_equal(eng_result.window_counts, oc)
+    np.testing.assert_array_equal(
+        eng_result.cum_edges, np.cumsum([w.n_sgrs for w in oracle]))
+    np.testing.assert_array_equal(
+        end_taus, np.array([w.end_tau for w in oracle]))
+
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize("policy", ["distinct", "multiset"])
+def test_engine_matches_oracle_all_tiers(tier, policy):
+    t, i, j, o = mkdyn(3)
+    oracle = replay_dynamic(t, i, j, o, nt_w=NT_W)
+    eng = StreamingSGrapp(NT_W, 0.95, tier=tier, flush_every=16,
+                          dup_policy=policy)
+    res = push_dyn(eng, t, i, j, o)
+    assert_matches_oracle(res, np.array(eng._end_tau), oracle, policy)
+
+
+@pytest.mark.parametrize("policy", ["distinct", "multiset"])
+def test_fleet_matches_oracle_interleaved(policy):
+    streams = [mkdyn(20 + s, n=250) for s in range(3)]
+    oracles = [replay_dynamic(t, i, j, o, nt_w=NT_W)
+               for t, i, j, o in streams]
+    fleet = MultiStreamSGrapp(3, NT_W, 0.95, tier="numpy", flush_every=8,
+                              dup_policy=policy)
+    pos = [0] * 3
+    order = np.random.default_rng(0).integers(0, 3, size=200)
+    for s in order:
+        s = int(s)
+        if pos[s] >= streams[s][0].size:
+            continue
+        t, i, j, o = streams[s]
+        sl = slice(pos[s], pos[s] + 13)
+        fleet.push(s, t[sl], i[sl], j[sl], op=o[sl])
+        pos[s] += 13
+    for s in range(3):  # drain tails
+        t, i, j, o = streams[s]
+        sl = slice(pos[s], None)
+        if t[sl].size:
+            fleet.push(s, t[sl], i[sl], j[sl], op=o[sl])
+    results = fleet.finalize()
+    for s in range(3):
+        assert_matches_oracle(results[s], np.array(fleet._end_tau[s]),
+                              oracles[s], policy)
+
+
+def test_all_edges_retracted_window_counts_zero():
+    t = np.array([0., 0., 1., 1., 2., 3., 4.])
+    i = np.array([1, 2, 1, 2, 5, 6, 7])
+    j = np.array([1, 2, 1, 2, 5, 6, 7])
+    o = np.array([0, 0, 1, 1, 0, 0, 0])
+    oracle = replay_dynamic(t, i, j, o, nt_w=2)
+    assert oracle[0].edges.shape[0] == 0 and oracle[0].n_sgrs == 0
+    for policy in ("distinct", "multiset"):
+        eng = StreamingSGrapp(2, 0.95, tier="dense", flush_every=1,
+                              dup_policy=policy)
+        res = push_dyn(eng, t, i, j, o, mb=3)
+        assert_matches_oracle(res, np.array(eng._end_tau), oracle, policy)
+
+
+# -- missing-delete policy (satellite 2) --------------------------------------
+
+def test_missing_delete_raises_by_default():
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy")
+    with pytest.raises(ValueError, match="absent from its window"):
+        eng.push([0.0, 0.0], [1, 2], [1, 2], op=[0, 1])
+    # the rejected push left the stream untouched: the valid insert was
+    # not applied either (all-or-nothing validation before mutation)
+    assert eng.cum_sgrs == 0 and int(eng._state.buf_len[0]) == 0
+
+
+def test_missing_delete_double_delete_raises():
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy")
+    with pytest.raises(ValueError, match="absent from its window"):
+        eng.push([0.0, 0.0, 0.0], [1, 1, 1], [2, 2, 2], op=[0, 1, 1])
+
+
+def test_missing_delete_ignore_matches_oracle():
+    t, i, j, o = mkdyn(8, n=300, n_i=8, n_j=8)
+    flip = np.random.default_rng(1).random(o.size) < 0.08
+    o = np.where(flip, 1, o)  # corrupt: some deletes now target absent edges
+    with pytest.raises(ValueError):
+        replay_dynamic(t, i, j, o, nt_w=NT_W)
+    oracle = replay_dynamic(t, i, j, o, nt_w=NT_W, on_missing_delete="ignore")
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=4,
+                          on_missing_delete="ignore")
+    res = push_dyn(eng, t, i, j, o, mb=11)
+    assert_matches_oracle(res, np.array(eng._end_tau), oracle, "distinct")
+
+
+def test_engine_validates_dynamic_knobs():
+    with pytest.raises(ValueError, match="dup_policy"):
+        StreamingSGrapp(NT_W, 0.95, dup_policy="bogus")
+    with pytest.raises(ValueError, match="on_missing_delete"):
+        StreamingSGrapp(NT_W, 0.95, on_missing_delete="bogus")
+    with pytest.raises(ValueError, match="dup_policy"):
+        MultiStreamSGrapp(2, NT_W, 0.95, dup_policy="bogus")
+    eng = StreamingSGrapp(NT_W, 0.95)
+    with pytest.raises(ValueError, match="op must be"):
+        eng.push([0.0], [1], [1], op=[7])
+
+
+# -- insert-only bit-identity to the pre-dynamic engine -----------------------
+
+def test_insert_only_dynamic_wire_is_bit_identical():
+    """op=None, op=all-zeros, and a delete-free dynamic generator stream all
+    take the static fast path: identical estimates, and the packed batches
+    carry no multiplicity lane under the default policy."""
+    t, i, j, o = mkdyn(5, delete_frac=0.0, dup_frac=0.3)
+    assert not o.any()
+    e1 = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=4)
+    e2 = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=4)
+    r1 = push_dyn(e1, t, i, j, None)
+    r2 = push_dyn(e2, t, i, j, o)
+    np.testing.assert_array_equal(r1.estimates, r2.estimates)
+    np.testing.assert_array_equal(r1.window_counts, r2.window_counts)
+    # and both agree with the oracle's distinct replay
+    oracle = replay_dynamic(t, i, j, None, nt_w=NT_W)
+    assert_matches_oracle(r1, np.array(e1._end_tau), oracle, "distinct")
+
+
+# -- recount-vs-delta decrement router (executor layer) -----------------------
+
+def test_route_decrement_thresholds():
+    assert route_decrement(100, 10) == "delta"
+    assert route_decrement(100, 25) == "delta"
+    assert route_decrement(100, 26) == "recount"
+    assert route_decrement(100, 10, delta_frac=0.05) == "recount"
+    with pytest.raises(ValueError):
+        route_decrement(-1, 0)
+    with pytest.raises(ValueError):
+        route_decrement(10, -1)
+
+
+@pytest.mark.parametrize("delta_frac", [0.0, 0.25, 1.0])
+def test_decrement_window_counts_both_routes_agree(delta_frac):
+    """delta_frac=0 forces recount, 1.0 forces delta; both must equal a
+    from-scratch count of the surviving edges."""
+    rng = np.random.default_rng(2)
+    ex = WindowExecutor("numpy")
+    per_edges, per_del, prior, want = [], [], [], []
+    for k in range(4):
+        e = np.unique(rng.integers(0, 10, size=(40, 2)).astype(np.int64),
+                      axis=0)
+        d = e[rng.choice(e.shape[0], size=max(1, e.shape[0] // 8),
+                         replace=False)]
+        keep_mask = ~np.isin(e[:, 0] << 32 | e[:, 1],
+                             d[:, 0] << 32 | d[:, 1])
+        per_edges.append(e)
+        per_del.append(d)
+        prior.append(count_butterflies_np(e))
+        want.append(count_butterflies_np(e[keep_mask]))
+    got = ex.decrement_window_counts(per_edges, per_del,
+                                     np.array(prior, dtype=np.float64),
+                                     delta_frac=delta_frac)
+    np.testing.assert_array_equal(got, np.array(want, dtype=np.float64))
+
+
+def test_decrement_rejects_absent_and_duplicate_deletes():
+    ex = WindowExecutor("numpy")
+    e = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], dtype=np.int64)
+    prior = np.array([1.0])
+    with pytest.raises(ValueError, match="cannot delete absent edge"):
+        ex.decrement_window_counts([e], [np.array([[9, 9]])], prior,
+                                   delta_frac=1.0)  # delta route
+    with pytest.raises(ValueError):
+        ex.decrement_window_counts([e], [np.array([[9, 9]])], prior,
+                                   delta_frac=0.0)  # recount route
+    with pytest.raises(ValueError):
+        ex.decrement_window_counts([e], [np.array([[0, 0], [0, 0]])], prior,
+                                   delta_frac=0.0)
+
+
+def test_butterfly_delta_matches_recount():
+    rng = np.random.default_rng(5)
+    e = np.unique(rng.integers(0, 8, size=(30, 2)).astype(np.int64), axis=0)
+    d = e[:3]
+    keep = ~np.isin(e[:, 0] << 32 | e[:, 1], d[:, 0] << 32 | d[:, 1])
+    assert (count_butterflies_np(e) - butterfly_delta_np(e, d)
+            == count_butterflies_np(e[keep]))
+
+
+# -- v1 -> v2 checkpoint migration --------------------------------------------
+
+def roundtrip_v1(eng_cls, make, sd):
+    v1 = {k: v for k, v in sd.items() if k != "buf_op"}
+    v1["version"] = np.int64(1)
+    return make().restore(v1)
+
+
+def test_v1_checkpoint_migrates_single_stream():
+    t, i, j, o = mkdyn(6, delete_frac=0.0, dup_frac=0.0)
+    cut = t.size // 2
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=100)
+    eng.push(t[:cut], i[:cut], j[:cut])
+    sd = eng.state_dict()
+    assert int(sd["version"]) == 2 and "buf_op" in sd
+    make = lambda: StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=100)
+    eng_v2 = make().restore(sd)
+    eng_v1 = roundtrip_v1(StreamingSGrapp, make, sd)
+    n_buf = int(sd["buf_len"])
+    np.testing.assert_array_equal(eng_v1._state.buf_op[0, :n_buf],
+                                  np.ones(n_buf, np.int8))
+    for e in (eng, eng_v2, eng_v1):
+        e.push(t[cut:], i[cut:], j[cut:])
+    r0, r2, r1 = eng.finalize(), eng_v2.finalize(), eng_v1.finalize()
+    np.testing.assert_array_equal(r0.estimates, r2.estimates)
+    np.testing.assert_array_equal(r0.estimates, r1.estimates)
+
+
+def test_v1_checkpoint_migrates_fleet():
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95, tier="numpy", flush_every=100)
+    for s in range(2):
+        fleet.push(s, [0.0, 1.0, 2.0], [0, 1, 2], [0, 1, 2])
+    sd = fleet.state_dict()
+    assert int(sd["version"]) == 2 and "buf_op" in sd
+    make = lambda: MultiStreamSGrapp(2, NT_W, 0.95, tier="numpy",
+                                     flush_every=100)
+    fleet_v1 = roundtrip_v1(MultiStreamSGrapp, make, sd)
+    np.testing.assert_array_equal(fleet_v1._state.buf_op[0, :3],
+                                  np.ones(3, np.int8))
+    for s in range(2):
+        fleet_v1.push(s, np.arange(3, 12, dtype=float), np.arange(9),
+                      np.arange(9))
+        fleet.push(s, np.arange(3, 12, dtype=float), np.arange(9),
+                   np.arange(9))
+    ra, rb = fleet.finalize(), fleet_v1.finalize()
+    for s in range(2):
+        np.testing.assert_array_equal(ra[s].estimates, rb[s].estimates)
+
+
+def test_migration_preserves_strictness():
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy")
+    eng.push([0.0], [1], [1])
+    sd = eng.state_dict()
+    # a v1 dict that *has* buf_op is key-drifted, not migratable
+    v1_extra = dict(sd)
+    v1_extra["version"] = np.int64(1)
+    with pytest.raises(ValueError, match="unknown=\\['buf_op'\\]"):
+        StreamingSGrapp(NT_W, 0.95).restore(v1_extra)
+    # a v2 dict missing buf_op is truncated, not silently defaulted
+    v2_cut = {k: v for k, v in sd.items() if k != "buf_op"}
+    with pytest.raises(ValueError, match="missing=\\['buf_op'\\]"):
+        StreamingSGrapp(NT_W, 0.95).restore(v2_cut)
+    # migrate_state_dict_v1 never mutates its input
+    v1 = {k: v for k, v in sd.items() if k != "buf_op"}
+    v1["version"] = np.int64(1)
+    out = migrate_state_dict_v1(v1)
+    assert int(v1["version"]) == 1 and int(out["version"]) == 2
+
+
+# -- sharded dispatch (CI multi-device job) -----------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+@pytest.mark.parametrize("policy", ["distinct", "multiset"])
+def test_sharded_dynamic_matches_oracle(policy):
+    t, i, j, o = mkdyn(12, n=300)
+    oracle = replay_dynamic(t, i, j, o, nt_w=NT_W)
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=8,
+                          devices=jax.device_count(), dup_policy=policy)
+    assert eng.executor.n_shards == jax.device_count()
+    res = push_dyn(eng, t, i, j, o)
+    assert_matches_oracle(res, np.array(eng._end_tau), oracle, policy)
