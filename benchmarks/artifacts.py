@@ -20,7 +20,7 @@ import subprocess
 
 __all__ = ["git_sha", "rows_to_records", "write_bench_json"]
 
-_TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto")
+_TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto", "sampled")
 
 
 def git_sha() -> str:

@@ -63,7 +63,7 @@ import time
 import numpy as np
 
 from repro.core.executor import WindowExecutor
-from repro.core.fleet import fleet_run
+from repro.core.fleet import fleet_run, fleet_run_chunked, reservoir_run
 from repro.core.sgrapp import mape, run_sgrapp
 from repro.core.windows import window_bounds
 from repro.streams import (
@@ -75,7 +75,8 @@ from repro.streams import (
 
 from .common import ground_truth_cumulative
 
-__all__ = ["run", "run_streaming", "run_multistream", "run_dynamic"]
+__all__ = ["run", "run_streaming", "run_multistream", "run_dynamic",
+           "run_fleet"]
 
 
 def _timed(fn, *args) -> float:
@@ -384,6 +385,119 @@ def run_dynamic(*, quick: bool = False, tier: str = "dense",
     return rows
 
 
+def run_fleet(*, quick: bool = False) -> list[tuple]:
+    """FLEET sampling sweep: the per-edge Python reservoirs vs the jitted
+    vectorized reservoir (:func:`repro.core.fleet.reservoir_run`) vs the
+    ``sampled`` executor tier ingesting through the streaming engine.
+
+    Throughput rows (same edges, same capacity M, same gamma):
+
+    - ``fleet/python_v3_M{M}_edges_per_s`` — :func:`fleet_run`, the paper
+      baseline's sequential per-edge loop,
+    - ``fleet/chunked_v3_M{M}_edges_per_s`` — :func:`fleet_run_chunked`,
+      the numpy micro-batched variant of the same loop,
+    - ``fleet/reservoir_M{M}_edges_per_s`` — the jitted content-keyed
+      reservoir scan (best-of-3 after compile),
+    - ``fleet/engine_sampled_mb256_edges_per_s`` — end-to-end online
+      ingestion through :class:`StreamingSGrapp` on the ``sampled`` tier.
+
+    Derived rows: ``fleet/speedup_reservoir_vs_python`` and
+    ``fleet/speedup_sampled_engine_vs_python`` (edges/s ratios — the
+    tentpole's >= 10x target is the reservoir row), plus accuracy rows
+    ``mape/fleet_reservoir_M{M}`` (jitted reservoir's final-estimate
+    relative error vs the exact count) and ``mape/sampled_tier_M{M}``
+    (sampled-tier window counts' mean relative error vs the dense tier on
+    the identical stream) whose derived field is the bare float the
+    regression gate reads.
+    """
+    rows = []
+    # larger than the other quick sweeps: the jitted reservoir's edge rate
+    # climbs with stream length (fixed dispatch overhead amortizes) while
+    # the python loop's rate is flat, so the speedup row needs enough edges
+    # to measure the asymptotic ratio rather than dispatch constants
+    n = 16_000 if quick else 40_000
+    s = bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5, seed=3)
+    ntw = 120
+    M = 1024 if quick else 4096
+    gamma = 0.7
+
+    # -- paper-baseline reservoirs: sequential python, then numpy-chunked ----
+    t0 = time.perf_counter()
+    est_py, _ = fleet_run(s.edge_i, s.edge_j, variant=3, capacity=M,
+                          gamma=gamma, seed=0)
+    dt_py = time.perf_counter() - t0
+    rows.append((f"fleet/python_v3_M{M}_edges_per_s", dt_py * 1e6,
+                 f"{len(s) / dt_py:.0f}"))
+    t0 = time.perf_counter()
+    fleet_run_chunked(s.edge_i, s.edge_j, variant=3, capacity=M,
+                      gamma=gamma, seed=0)
+    dt_ch = time.perf_counter() - t0
+    rows.append((f"fleet/chunked_v3_M{M}_edges_per_s", dt_ch * 1e6,
+                 f"{len(s) / dt_ch:.0f}"))
+
+    # -- jitted vectorized reservoir (tentpole) ------------------------------
+    est_res, _ = reservoir_run(s.edge_i, s.edge_j, capacity=M, gamma=gamma,
+                               seed=0)  # compile + record the estimate
+    def _res_once():
+        reservoir_run(s.edge_i, s.edge_j, capacity=M, gamma=gamma, seed=0)
+
+    dt_res = min(_timed(_res_once) for _ in range(3))
+    rows.append((f"fleet/reservoir_M{M}_edges_per_s", dt_res * 1e6,
+                 f"{len(s) / dt_res:.0f}"))
+    rows.append(("fleet/speedup_reservoir_vs_python", 0.0,
+                 f"{dt_py / dt_res:.1f}"))
+
+    # -- sampled-tier online ingestion (windows, estimator, the works) ------
+    # per-window capacity sits below the typical window edge count so the
+    # timed path exercises real subsampling, not the degenerate shortcut
+    mb = 256
+    M_tier = 256
+    n_processed = int(window_bounds(s.tau, ntw)[-1, 1])
+
+    def ingest(tier):
+        ex = (WindowExecutor("sampled", snap=0, capacity=M_tier, gamma=gamma,
+                             seed=0) if tier == "sampled"
+              else WindowExecutor(tier, snap=0))
+        eng = StreamingSGrapp(ntw, 0.95, tier=tier, executor=ex,
+                              flush_every=16)
+        for a in range(0, len(s), mb):
+            eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb], s.edge_j[a:a + mb])
+        return eng.finalize()
+
+    ingest("sampled")  # warm every bucket shape this stream produces
+    t0 = time.perf_counter()
+    res_samp = ingest("sampled")
+    dt_eng = time.perf_counter() - t0
+    rows.append((f"fleet/engine_sampled_mb{mb}_edges_per_s", dt_eng * 1e6,
+                 f"{n_processed / dt_eng:.0f} "
+                 f"({len(res_samp.estimates)} windows, M={M_tier})"))
+    rows.append(("fleet/speedup_sampled_engine_vs_python", 0.0,
+                 f"{(n_processed / dt_eng) / (len(s) / dt_py):.1f}"))
+
+    # -- accuracy: bare-float derived values for the mape regression gate ---
+    # mean absolute relative error over a fixed seed set — single-seed
+    # reservoir estimates are high-variance by design (p**-4 scaling), the
+    # seed-averaged error is the stable pinnable number
+    from repro.core.butterfly import count_butterflies_np
+
+    exact = count_butterflies_np(np.stack([s.edge_i, s.edge_j], axis=1))
+    errs = [abs(est_res - exact) / max(exact, 1)]
+    for sd in range(1, 8):
+        e, _ = reservoir_run(s.edge_i, s.edge_j, capacity=M, gamma=gamma,
+                             seed=sd)
+        errs.append(abs(e - exact) / max(exact, 1))
+    rows.append((f"mape/fleet_reservoir_M{M}", 0.0,
+                 f"{float(np.mean(errs)):.4f}"))
+    res_dense = ingest("dense")
+    wc_e = res_dense.window_counts
+    wc_s = res_samp.window_counts
+    mask = wc_e > 0
+    err_tier = (float(np.mean(np.abs(wc_s[mask] - wc_e[mask]) / wc_e[mask]))
+                if mask.any() else 0.0)
+    rows.append((f"mape/sampled_tier_M{M_tier}", 0.0, f"{err_tier:.4f}"))
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -414,6 +528,12 @@ def main() -> None:
     ap.add_argument("--dynamic-only", action="store_true",
                     help="run only the dynamic sweep (CI leg: implies "
                          "--dynamic, skips the other sweeps)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="add the FLEET sampling sweep (python reservoirs "
+                         "vs the jitted reservoir vs the sampled tier)")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="run only the FLEET sampling sweep (CI leg: "
+                         "implies --fleet, skips the other sweeps)")
     ap.add_argument("--tier", default="dense",
                     help="counting tier for the streaming sweep "
                          "(numpy | dense | tiled | pallas | sparse | auto)")
@@ -427,7 +547,7 @@ def main() -> None:
     sfx = args.artifact_suffix
     print("name,us_per_call,derived")
     if not (args.streaming_only or args.multistream_only
-            or args.dynamic_only):
+            or args.dynamic_only or args.fleet_only):
         rows = run(quick=args.quick, devices=args.devices)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
@@ -435,7 +555,8 @@ def main() -> None:
             write_bench_json(f"BENCH_throughput{sfx}.json", rows,
                              devices=args.devices, quick=args.quick)
     if ((args.streaming or args.streaming_only)
-            and not (args.multistream_only or args.dynamic_only)):
+            and not (args.multistream_only or args.dynamic_only
+                     or args.fleet_only)):
         srows = run_streaming(quick=args.quick, tier=args.tier,
                               devices=args.devices)
         for name, us, derived in srows:
@@ -443,7 +564,8 @@ def main() -> None:
         if not args.no_json:
             write_bench_json(f"BENCH_streaming{sfx}.json", srows,
                              devices=args.devices, quick=args.quick)
-    if (args.multistream or args.multistream_only) and not args.dynamic_only:
+    if ((args.multistream or args.multistream_only)
+            and not (args.dynamic_only or args.fleet_only)):
         mrows = run_multistream(quick=args.quick, tier=args.tier,
                                 devices=args.devices)
         for name, us, derived in mrows:
@@ -451,13 +573,20 @@ def main() -> None:
         if not args.no_json:
             write_bench_json(f"BENCH_multistream{sfx}.json", mrows,
                              devices=args.devices, quick=args.quick)
-    if args.dynamic or args.dynamic_only:
+    if (args.dynamic or args.dynamic_only) and not args.fleet_only:
         drows = run_dynamic(quick=args.quick, tier=args.tier,
                             devices=args.devices)
         for name, us, derived in drows:
             print(f"{name},{us:.1f},{derived}")
         if not args.no_json:
             write_bench_json(f"BENCH_dynamic{sfx}.json", drows,
+                             devices=args.devices, quick=args.quick)
+    if args.fleet or args.fleet_only:
+        frows = run_fleet(quick=args.quick)
+        for name, us, derived in frows:
+            print(f"{name},{us:.1f},{derived}")
+        if not args.no_json:
+            write_bench_json(f"BENCH_fleet{sfx}.json", frows,
                              devices=args.devices, quick=args.quick)
 
 

@@ -9,9 +9,17 @@ Compares each row's ``us_per_call`` against ``benchmarks/baseline.json`` by
 row name and exits non-zero if any row is more than ``--max-slowdown`` times
 slower (default 2x — wide enough for CI-runner noise, tight enough to catch
 a lost compile cache or an accidentally serialized dispatch).  Rows missing
-from the baseline (new benches) and rows with non-positive timings (pure
-accuracy rows like ``mape/...``) are skipped, so adding a bench never breaks
-the gate; refreshing the committed numbers is one command away.
+from the baseline (new benches) and rows with non-positive timings are
+skipped for the slowdown check, so adding a bench never breaks the gate;
+refreshing the committed numbers is one command away.
+
+Accuracy rows — names under ``mape/...``, timing 0, the measured error in
+the ``derived`` field — gate on *regression* instead of slowdown: when the
+baseline entry recorded a ``mape`` value, a fresh error beyond
+``--max-mape-ratio`` times the baseline (plus a small absolute slack for
+sampling noise) fails the gate.  Baseline entries without a recorded mape
+(legacy rows, or derived values that aren't a bare float) never gate on
+accuracy.
 
 Rows present in the fresh run but missing from the baseline (a new bench or
 a new tier leg) are *reported* as ``new row`` — visible in the CI log so a
@@ -58,6 +66,26 @@ def _load_rows(path: str) -> dict[str, float]:
     }
 
 
+def _load_mapes(path: str) -> dict[str, float]:
+    """Accuracy rows of a fresh BENCH_*.json: ``mape/...`` names whose
+    ``derived`` field is a bare float (the measured error), keyed like
+    :func:`_load_rows`.  Rows whose derived carries annotations beyond the
+    number are skipped — only purpose-built accuracy rows gate."""
+    with open(path) as f:
+        records = json.load(f)
+    out = {}
+    for r in records:
+        if not str(r["name"]).startswith("mape/"):
+            continue
+        try:
+            val = float(str(r.get("derived", "")).strip())
+        except ValueError:
+            continue
+        key = r["name"] + ("@quick" if r.get("meta", {}).get("quick") else "")
+        out[key] = val
+    return out
+
+
 def _load_baseline(path: str) -> dict[str, dict]:
     """Normalized baseline entries ``{key: {"us": float, "source": str|None}}``.
 
@@ -73,18 +101,24 @@ def _load_baseline(path: str) -> dict[str, dict]:
     for key, val in base.items():
         if isinstance(val, dict):
             out[key] = {"us": float(val["us_per_call"]),
-                        "source": val.get("source")}
+                        "source": val.get("source"),
+                        "mape": (float(val["mape"])
+                                 if "mape" in val else None)}
         else:
-            out[key] = {"us": float(val), "source": None}
+            out[key] = {"us": float(val), "source": None, "mape": None}
     return out
 
 
 def _dump_baseline(entries: dict[str, dict], path: str) -> None:
-    disk = {
-        key: ({"us_per_call": e["us"], "source": e["source"]}
-              if e["source"] is not None else e["us"])
-        for key, e in entries.items()
-    }
+    def _disk_entry(e):
+        if e["source"] is None and e.get("mape") is None:
+            return e["us"]
+        d = {"us_per_call": e["us"], "source": e["source"]}
+        if e.get("mape") is not None:
+            d["mape"] = e["mape"]
+        return d
+
+    disk = {key: _disk_entry(e) for key, e in entries.items()}
     with open(path, "w") as f:
         json.dump(dict(sorted(disk.items())), f, indent=1)
         f.write("\n")
@@ -106,6 +140,7 @@ def update_baseline(fresh_path: str, baseline_path: str = DEFAULT_BASELINE) -> s
     produces — the baseline twin of the stale-row check."""
     base = _load_baseline(baseline_path)
     fresh = _load_rows(fresh_path)
+    mapes = _load_mapes(fresh_path)
     source = os.path.basename(fresh_path)
     quick = _fresh_mode(fresh)
     base = {
@@ -115,7 +150,7 @@ def update_baseline(fresh_path: str, baseline_path: str = DEFAULT_BASELINE) -> s
                 and key not in fresh)
     }
     for key, us in fresh.items():
-        base[key] = {"us": us, "source": source}
+        base[key] = {"us": us, "source": source, "mape": mapes.get(key)}
     _dump_baseline(base, baseline_path)
     return baseline_path
 
@@ -149,22 +184,36 @@ def stale_rows(fresh_path: str, baseline_path: str = DEFAULT_BASELINE
 
 
 def gate(fresh_path: str, baseline_path: str = DEFAULT_BASELINE,
-         *, max_slowdown: float = 2.0) -> list[str]:
+         *, max_slowdown: float = 2.0, max_mape_ratio: float = 1.5,
+         mape_slack: float = 0.02) -> list[str]:
     """Returns the list of violation messages (empty = gate passes):
-    per-row slowdowns beyond ``max_slowdown``, plus stale rows (baseline
-    rows this file was expected to reproduce but didn't)."""
+    per-row slowdowns beyond ``max_slowdown``, accuracy regressions beyond
+    ``max_mape_ratio`` x baseline + ``mape_slack`` on ``mape/...`` rows the
+    baseline recorded an error for, plus stale rows (baseline rows this
+    file was expected to reproduce but didn't)."""
     fresh = _load_rows(fresh_path)
+    mapes = _load_mapes(fresh_path)
     base = _load_baseline(baseline_path)
     violations = []
     for name, us in sorted(fresh.items()):
         entry = base.get(name)
         if entry is None or entry["us"] <= 0 or us <= 0:
-            continue  # new row or non-timing row: never gates
+            continue  # new row or non-timing row: never gates on slowdown
         ratio = us / entry["us"]
         if ratio > max_slowdown:
             violations.append(
                 f"{name}: {us:.1f}us vs baseline {entry['us']:.1f}us "
                 f"({ratio:.2f}x > {max_slowdown:.1f}x)")
+    for name, err in sorted(mapes.items()):
+        entry = base.get(name)
+        if entry is None or entry.get("mape") is None:
+            continue  # baseline never recorded an error: no accuracy gate
+        bound = entry["mape"] * max_mape_ratio + mape_slack
+        if err > bound:
+            violations.append(
+                f"{name}: mape {err:.4f} vs baseline {entry['mape']:.4f} "
+                f"(> {max_mape_ratio:.1f}x + {mape_slack:.2f} slack "
+                f"= {bound:.4f})")
     for name in stale_rows(fresh_path, baseline_path):
         violations.append(
             f"{name}: stale row — in baseline (source "
@@ -178,6 +227,12 @@ def main() -> None:
     ap.add_argument("fresh", help="fresh BENCH_*.json to gate")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--max-slowdown", type=float, default=2.0)
+    ap.add_argument("--max-mape-ratio", type=float, default=1.5,
+                    help="accuracy rows fail when fresh mape exceeds this "
+                         "multiple of the baseline mape (plus --mape-slack)")
+    ap.add_argument("--mape-slack", type=float, default=0.02,
+                    help="absolute mape slack added to the ratio bound so "
+                         "near-zero baselines don't flap on sampling noise")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the fresh run instead "
                          "of gating")
@@ -187,7 +242,9 @@ def main() -> None:
         print(f"baseline updated: {path}")
         return
     violations = gate(args.fresh, args.baseline,
-                      max_slowdown=args.max_slowdown)
+                      max_slowdown=args.max_slowdown,
+                      max_mape_ratio=args.max_mape_ratio,
+                      mape_slack=args.mape_slack)
     fresh = _load_rows(args.fresh)
     gated = sum(1 for us in fresh.values() if us > 0)
     fresh_only = new_rows(args.fresh, args.baseline)

@@ -69,6 +69,7 @@ __all__ = [
     "count_butterflies_dense_multiset",
     "count_butterflies_from_edges",
     "count_butterflies_from_edges_multiset",
+    "count_butterflies_sampled_from_edges",
     "count_butterflies_tiled",
     "count_butterflies_tiled_multiset",
     "count_butterflies_sparse",
@@ -391,6 +392,39 @@ def count_butterflies_from_edges(
     """Count butterflies directly from a padded edge list (window snapshot)."""
     adj = build_biadjacency(edge_i, edge_j, valid, n_i, n_j, dtype=_acc_dtype())
     return count_butterflies_dense(adj)
+
+
+def count_butterflies_sampled_from_edges(
+    edge_i: jax.Array,
+    edge_j: jax.Array,
+    valid: jax.Array,
+    uid_hi: jax.Array,
+    uid_lo: jax.Array,
+    n_i: int,
+    n_j: int,
+    *,
+    capacity: int,
+    gamma: float,
+    seed: int,
+) -> jax.Array:
+    """FLEET subsample-and-scale count of one padded window: keep each valid
+    edge with the gamma-ladder probability p chosen so at most ``capacity``
+    edges survive, count the survivors exactly with the dense counter, and
+    rescale by ``p**-4`` (each of a butterfly's four edges survives
+    independently with probability p).  When the window statically fits the
+    reservoir (``cap_e <= capacity``) the sampling provably degenerates to
+    ``p = 1`` — the count is returned bit-identical to the exact dense tier,
+    with no threefry work at all.  ``uid_hi``/``uid_lo`` are the uint32
+    halves of the window's sampling uid (see ``fleet.sample_keep_mask``)."""
+    if edge_i.shape[0] <= capacity:
+        return count_butterflies_from_edges(edge_i, edge_j, valid, n_i, n_j)
+    from .fleet import sample_keep_mask
+
+    keep, p = sample_keep_mask(edge_i, edge_j, valid, uid_hi, uid_lo,
+                               capacity=capacity, gamma=gamma, seed=seed)
+    count = count_butterflies_from_edges(edge_i, edge_j, keep, n_i, n_j)
+    inv = jnp.where(p > 0, 1.0 / p, 0.0).astype(count.dtype)
+    return count * inv**4
 
 
 def build_biadjacency_multiset(

@@ -37,11 +37,23 @@ even when the window itself touches 100 vertices.  The executor instead:
    auto      per-bucket cost-model router: ``sparse`` when the wedge-sort
              work beats the dense Gram flops (see :func:`route_tier`),
              ``dense`` otherwise
+   sampled   FLEET subsample-and-scale (`count_butterflies_sampled_from_
+             edges`): content-keyed threefry coins pick at most
+             ``capacity`` edges per window at the gamma-ladder probability
+             p, the survivors run the dense counter, and the count scales
+             by p**-4.  Bounded memory at any window size; estimates are
+             stochastic but seed-deterministic, and provably exact
+             (bit-identical to ``dense``) whenever the window fits the
+             reservoir.  A ``(memory_budget, target_mape)`` pair routes
+             small-enough or too-lossy buckets back to exact ``dense``
+             counting (see :meth:`WindowExecutor.bucket_tier`).
    ========  ==========================================================
 
-Every tier returns identical integer-valued counts (differential suite:
-``tests/test_tier_differential.py``), so the production tier is a config
-knob, not a semantics decision.
+Every exact tier returns identical integer-valued counts (differential
+suite: ``tests/test_tier_differential.py``), so the production tier is a
+config knob, not a semantics decision; the ``sampled`` tier joins the same
+contract in its capacity-degenerate regime and is otherwise an estimator
+with a gated statistical error bound (``tests/test_sampled_acceptance.py``).
 
 **Window modes.**  ``tumbling`` is the paper's Algorithm 3: disjoint panes
 of ``nt_w`` unique timestamps.  ``sliding`` derives *overlapping* windows
@@ -86,19 +98,21 @@ from .butterfly import (
     count_butterflies_from_edges_multiset,
     count_butterflies_multiset_np,
     count_butterflies_np,
+    count_butterflies_sampled_from_edges,
     count_butterflies_sparse,
     count_butterflies_sparse_multiset,
     count_butterflies_tiled,
     count_butterflies_tiled_multiset,
     window_wedge_counts_np,
 )
+from .fleet import check_sampling_knobs
 from .windows import WindowBatch
 
 __all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket",
            "run", "route_tier", "route_decrement", "bucket_capacity",
-           "id_capacity", "compiled_bucket_cache_info"]
+           "id_capacity", "expected_mape", "compiled_bucket_cache_info"]
 
-TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto")
+TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto", "sampled")
 MODES = ("tumbling", "sliding")
 
 # tiers that need a per-bucket wedge capacity (host-side wedge counting)
@@ -130,6 +144,24 @@ def route_tier(cap_e: int, cap_i: int, cap_j: int, cap_w: int,
     sort_ops = (cap_e * max(math.log2(max(cap_e, 2)), 1.0)
                 + cap_w * max(math.log2(max(cap_w, 2)), 1.0))
     return "sparse" if sort_cost * sort_ops < dense_flops else "dense"
+
+
+def expected_mape(cap_e: int, capacity: int, gamma: float,
+                  *, k_err: float = 8.0) -> float:
+    """Pinned surrogate for the sampled tier's expected relative error at a
+    bucket rung: each butterfly survives the subsample with probability
+    ``p**4`` (p = the gamma-ladder rung the reservoir would settle at for a
+    ``cap_e``-edge window), so the estimator's variance scales like
+    ``(p**-4 - 1)`` spread over roughly ``capacity`` surviving edges.  The
+    constant ``k_err`` is calibrated empirically against the acceptance
+    suite's sgr streams (``tests/test_sampled_acceptance.py``) — it is a
+    budget-router heuristic, not a guarantee.  Returns 0.0 whenever the
+    window provably fits the reservoir (sampling degenerates to exact)."""
+    if cap_e <= capacity:
+        return 0.0
+    k = max(0, math.ceil(math.log(capacity / cap_e) / math.log(gamma)))
+    p = float(gamma) ** k
+    return k_err * math.sqrt(max(p ** -4 - 1.0, 0.0) / max(capacity, 1))
 
 
 def route_decrement(n_edges: int, n_deleted: int,
@@ -232,7 +264,8 @@ class ExecutorResult:
 
 def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
                      tile: int, block_i: int, block_k: int, interpret: bool,
-                     multiset: bool = False):
+                     multiset: bool = False,
+                     sampled: tuple | None = None):
     """(edge_i, edge_j, valid) [c, cap_e] -> [c] counts for one CHUNK of
     windows at a static ``(cap_i, cap_j)`` id-space capacity — the batched
     per-chunk body both the single-device and the sharded dispatch map over.
@@ -246,7 +279,22 @@ def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
 
     ``multiset=True`` swaps in the multiplicity-weighted twins; the chunk
     fn then takes ``(edge_i, edge_j, edge_mult, valid)`` — one extra lane,
-    same window axis."""
+    same window axis.
+
+    ``tier="sampled"`` takes ``(edge_i, edge_j, uid, valid)`` where ``uid``
+    is a per-window ``[2] uint32`` sampling-uid lane (hi/lo halves of the
+    64-bit window uid — split host-side because x64 is off and an int64
+    lane would silently truncate entering jit); ``sampled`` carries the
+    static ``(capacity, gamma, seed)`` knobs."""
+    if tier == "sampled":
+        capacity, gamma, seed = sampled
+
+        def one(ei, ej, uid, v):
+            return count_butterflies_sampled_from_edges(
+                ei, ej, v, uid[0], uid[1], cap_i, cap_j,
+                capacity=capacity, gamma=gamma, seed=seed)
+
+        return jax.vmap(one)
     if tier == "pallas":
         from ..kernels.butterfly import (
             butterfly_count_pallas_windows,
@@ -341,15 +389,18 @@ def _chunked_dispatch(chunk_fn, chunk: int):
 @functools.lru_cache(maxsize=None)
 def _bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int, tile: int,
                     block_i: int, block_k: int, interpret: bool, chunk: int,
-                    multiset: bool = False):
+                    multiset: bool = False, sampled: tuple | None = None):
     """Jitted (edge_i, edge_j, valid) [B, cap_e] -> [B] counts at a static
     ``(cap_i, cap_j)`` id-space capacity via the chunked-vmap schedule
     (:func:`_chunked_dispatch`): windows count ``chunk`` at a time in one
     batched dispatch, chunks run in streaming order, and peak memory stays
     bounded at one chunk of bucket-capacity state.  ``multiset=True`` keys a
-    separate compiled program taking the extra multiplicity lane."""
+    separate compiled program taking the extra multiplicity lane;
+    ``sampled=(capacity, gamma, seed)`` keys the subsample-and-scale program
+    taking the per-window uid lane instead."""
     chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
-                                block_i, block_k, interpret, multiset)
+                                block_i, block_k, interpret, multiset,
+                                sampled)
     return jax.jit(_chunked_dispatch(chunk_fn, chunk))
 
 
@@ -357,7 +408,8 @@ def _bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int, tile: int,
 def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int,
                             tile: int, block_i: int, block_k: int,
                             interpret: bool, chunk: int, mesh, axes: tuple,
-                            multiset: bool = False):
+                            multiset: bool = False,
+                            sampled: tuple | None = None):
     """Sharded twin of :func:`_bucket_counter`: the window axis is split over
     the mesh's data-parallel ``axes`` via shard_map, and each device runs the
     identical chunked-vmap schedule over its shard.  Per-device peak memory
@@ -369,11 +421,12 @@ def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int,
     from ..distributed.sharding import shard_map_compat
 
     chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
-                                block_i, block_k, interpret, multiset)
+                                block_i, block_k, interpret, multiset,
+                                sampled)
     local = _chunked_dispatch(chunk_fn, chunk)
 
     batch = axes if len(axes) > 1 else axes[0]
-    n_lanes = 4 if multiset else 3
+    n_lanes = 4 if (multiset or sampled is not None) else 3
     fn = shard_map_compat(local, mesh,
                           in_specs=(P(batch, None),) * n_lanes,
                           out_specs=P(batch),
@@ -473,6 +526,18 @@ class WindowExecutor:
     interpret : Pallas interpreter mode; default auto (True off-TPU).
     sort_cost : ``auto`` router knob — modelled cost of one sort element in
         dense-Gram flops (see :func:`route_tier`).
+    capacity, gamma, seed : ``sampled`` tier knobs — FLEET reservoir
+        capacity (max edges counted per window), gamma schedule factor in
+        (0, 1), and the threefry seed behind the content-keyed coins.
+        Windows that fit ``capacity`` count exactly (bit-identical to
+        ``dense``); larger windows subsample-and-scale.
+    memory_budget, target_mape : the ``sampled`` tier's budget router
+        (:meth:`bucket_tier`): buckets whose edge rung fits
+        ``memory_budget`` run exact ``dense`` (sampling buys nothing that
+        fits the budget anyway), and buckets whose modelled error
+        (:func:`expected_mape`) would exceed ``target_mape`` also fall back
+        to ``dense`` (accuracy outranks the budget).  Both default to None
+        (= every bucket above ``capacity`` samples).
     devices : int (first N of ``jax.devices()``) or device sequence —
         shard each bucket's window axis over a 1-D data mesh of those
         devices.  Counts stay bit-identical to the single-device path.
@@ -486,6 +551,9 @@ class WindowExecutor:
                  growth: int = 2, chunk: int = 32, snap: int = 16,
                  tile: int = 512, block_i: int = 256, block_k: int = 512,
                  interpret: bool | None = None, sort_cost: float = 96.0,
+                 capacity: int = 8192, gamma: float = 0.7, seed: int = 0,
+                 memory_budget: int | None = None,
+                 target_mape: float | None = None,
                  devices=None, mesh=None):
         if tier not in TIERS:
             raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
@@ -495,6 +563,30 @@ class WindowExecutor:
             raise ValueError("chunk must be >= 1")
         if snap < 0:
             raise ValueError("snap must be >= 0 (0 disables cap snapping)")
+        # sampling knobs validate unconditionally (cheap, and a bad value
+        # should fail at construction, not when someone later flips the
+        # tier) but only steer the "sampled" tier
+        check_sampling_knobs(capacity, gamma, seed)
+        if memory_budget is not None and (
+                isinstance(memory_budget, bool)
+                or not isinstance(memory_budget, (int, np.integer))
+                or int(memory_budget) <= 0):
+            raise ValueError(
+                f"memory_budget must be a positive int or None, "
+                f"got {memory_budget!r}")
+        if target_mape is not None and not (float(target_mape) > 0.0):
+            raise ValueError(
+                f"target_mape must be positive or None, got {target_mape!r}")
+        self.capacity = int(capacity)
+        self.gamma = float(gamma)
+        self.seed = int(seed)
+        self.memory_budget = (None if memory_budget is None
+                              else int(memory_budget))
+        self.target_mape = (None if target_mape is None
+                            else float(target_mape))
+        # monotone per-executor uid for count_edges' online sampled windows:
+        # each online window draws from its own coin stream
+        self._online_seq = 0
         self.tier = tier
         self.align = align
         self.growth = growth
@@ -598,15 +690,32 @@ class WindowExecutor:
 
     # -- counting -----------------------------------------------------------
 
+    def _sampled_route(self, cap_e: int) -> str:
+        """The ``sampled`` tier's per-rung budget router.  Exact ``dense``
+        counting wins when the rung fits the memory budget (sampling a
+        window that fits anyway only adds variance) or when the modelled
+        error at this rung (:func:`expected_mape`) would blow the accuracy
+        target; everything else samples.  Static per rung, so single-device
+        and sharded dispatch route identically."""
+        if self.memory_budget is not None and cap_e <= self.memory_budget:
+            return "dense"
+        if self.target_mape is not None and expected_mape(
+                cap_e, self.capacity, self.gamma) > self.target_mape:
+            return "dense"
+        return "sampled"
+
     def bucket_tier(self, b: Bucket) -> str:
-        """The device tier a bucket actually runs: the configured tier, or
-        the cost model's pick (:func:`route_tier`) under ``auto``.  Routing
+        """The device tier a bucket actually runs: the configured tier, the
+        cost model's pick (:func:`route_tier`) under ``auto``, or the budget
+        router's pick (:meth:`_sampled_route`) under ``sampled``.  Routing
         is host-side and depends only on the bucket's static capacities, so
         single-device and sharded dispatch route identically."""
-        if self.tier != "auto":
-            return self.tier
-        return route_tier(b.cap_e, b.cap_i, b.cap_j, b.cap_w,
-                          sort_cost=self.sort_cost)
+        if self.tier == "auto":
+            return route_tier(b.cap_e, b.cap_i, b.cap_j, b.cap_w,
+                              sort_cost=self.sort_cost)
+        if self.tier == "sampled":
+            return self._sampled_route(b.cap_e)
+        return self.tier
 
     def _counter(self, b: Bucket, *, multiset: bool = False):
         """The compiled counter for one bucket's static configuration —
@@ -616,14 +725,39 @@ class WindowExecutor:
         # cap_w only shapes the sparse scratch: zero it out of the cache key
         # for the biadjacency tiers so auto's dense buckets share programs
         cap_w = b.cap_w if tier == "sparse" else 0
+        sampled = ((self.capacity, self.gamma, self.seed)
+                   if tier == "sampled" else None)
         if self.n_shards > 1:
             return _sharded_bucket_counter(
                 tier, b.cap_i, b.cap_j, cap_w, self.tile, self.block_i,
                 self.block_k, self.interpret, self.chunk, self.mesh,
-                self.shard_axes, multiset)
+                self.shard_axes, multiset, sampled)
         return _bucket_counter(tier, b.cap_i, b.cap_j, cap_w, self.tile,
                                self.block_i, self.block_k, self.interpret,
-                               self.chunk, multiset)
+                               self.chunk, multiset, sampled)
+
+    @staticmethod
+    def _batch_uids(batch: WindowBatch) -> np.ndarray:
+        """Per-window sampling uids as ``[n_windows, 2] uint32`` (hi, lo)
+        device lanes.  Prefers the batch's own ``sample_uid`` lane (the
+        streaming engines stamp ``(res_seed << 32) + cum_sgrs``); a lane-less
+        batch (plain replay) derives the same shape from the provenance it
+        does have — stream id in the high half (0 single-stream) and the
+        cumulative sgr count in the low half — which is exactly what a
+        seed-0 engine would have stamped, so streaming == replay holds for
+        the sampled tier too.  Split into uint32 halves host-side: x64 is
+        off, so an int64 lane would silently truncate entering jit."""
+        uid = batch.sample_uid
+        if uid is None:
+            sid = (batch.stream_ids.astype(np.int64)
+                   if batch.stream_ids is not None
+                   else np.zeros(batch.n_windows, np.int64))
+            uid = (sid << np.int64(32)) + (
+                np.asarray(batch.cum_sgrs, np.int64) & np.int64(0xFFFFFFFF))
+        uid = np.asarray(uid, np.int64)
+        return np.stack([(uid >> np.int64(32)) & np.int64(0xFFFFFFFF),
+                         uid & np.int64(0xFFFFFFFF)],
+                        axis=1).astype(np.uint32)
 
     def window_counts(self, batch: WindowBatch) -> np.ndarray:
         """Exact in-window count per tumbling window, [n_windows] float64.
@@ -643,6 +777,13 @@ class WindowExecutor:
         if batch.n_windows == 0:
             return out
         multiset = batch.edge_mult is not None
+        if multiset and self.tier == "sampled":
+            raise NotImplementedError(
+                "sampled tier does not support dup_policy='multiset': the "
+                "subsample-and-scale identity assumes distinct edges (a "
+                "multiplicity-weighted butterfly is not a p**4 event); use "
+                "an exact tier for multiset streams")
+        uids = self._batch_uids(batch) if self.tier == "sampled" else None
         if self.tier == "numpy":
             for b in self.plan(batch):
                 for k in b.windows:
@@ -658,6 +799,8 @@ class WindowExecutor:
             sub = batch.take(b.windows, capacity=b.cap_e)
             if multiset:
                 lanes = (sub.edge_i, sub.edge_j, sub.edge_mult, sub.valid)
+            elif uids is not None and self.bucket_tier(b) == "sampled":
+                lanes = (sub.edge_i, sub.edge_j, uids[b.windows], sub.valid)
             else:
                 lanes = (sub.edge_i, sub.edge_j, sub.valid)
             if self.n_shards > 1:
@@ -693,6 +836,12 @@ class WindowExecutor:
         from .butterfly import _check_id_range_np
         from .windows import pack_windows
 
+        if self.tier == "sampled":
+            raise NotImplementedError(
+                "sampled tier cannot decrement prior counts: a subsampled "
+                "estimate has no per-edge ledger to patch and recounting "
+                "survivors would redraw the coins; use an exact tier for "
+                "streams with deletions")
         prior = np.asarray(prior_counts, dtype=np.float64)
         n = len(per_window_edges)
         if len(per_window_deletes) != n or prior.shape[0] != n:
@@ -773,18 +922,42 @@ class WindowExecutor:
             if tier == "auto":
                 tier = route_tier(cap_e, cap_i, cap_j, cap_w,
                                   sort_cost=self.sort_cost)
-            fn = _bucket_counter(tier, cap_i, cap_j,
-                                 cap_w if tier == "sparse" else 0, self.tile,
-                                 self.block_i, self.block_k, self.interpret,
-                                 self.chunk)
+            elif tier == "sampled":
+                tier = self._sampled_route(cap_e)
+            sampled = ((self.capacity, self.gamma, self.seed)
+                       if tier == "sampled" else None)
+            counter = _bucket_counter(tier, cap_i, cap_j,
+                                      cap_w if tier == "sparse" else 0,
+                                      self.tile, self.block_i, self.block_k,
+                                      self.interpret, self.chunk, False,
+                                      sampled)
+            # uniform (pi, pj, pv, uid) call shape so the memoized entry
+            # stays lane-agnostic: the wrapper knows whether the compiled
+            # program wants the online window's sampling-uid lane
+            if sampled is not None:
+                def fn(pi, pj, pv, uid, _c=counter):
+                    return _c(pi, pj, uid, pv)
+            else:
+                def fn(pi, pj, pv, uid, _c=counter):
+                    return _c(pi, pj, pv)
             self._online_cache = (key, fn)
+        uid_row = None
+        if self.tier == "sampled":
+            # every online window is its own sampling draw: a monotone
+            # per-executor sequence number plays the role the engines'
+            # (res_seed << 32) + cum_sgrs uid plays for flushed windows
+            uid = np.int64(self._online_seq)
+            self._online_seq += 1
+            uid_row = np.array(
+                [[(uid >> np.int64(32)) & np.int64(0xFFFFFFFF),
+                  uid & np.int64(0xFFFFFFFF)]], dtype=np.uint32)
         pi = np.zeros((1, cap_e), np.int32)
         pj = np.zeros((1, cap_e), np.int32)
         pv = np.zeros((1, cap_e), bool)
         pi[0, : len(ei)] = inv_i
         pj[0, : len(ej)] = inv_j
         pv[0, : len(ei)] = True
-        return float(np.asarray(fn(pi, pj, pv))[0])
+        return float(np.asarray(fn(pi, pj, pv, uid_row))[0])
 
     # -- the single entry point ---------------------------------------------
 

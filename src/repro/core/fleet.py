@@ -18,14 +18,57 @@ enumeration) — faithful to the Java reference the paper benchmarks against,
 so they are implemented in numpy/python and measured host-side, exactly like
 the paper measured its baselines.  A vectorised chunked variant used by the
 throughput benches batches the Bernoulli admissions.
+
+**The jitted reservoir** (:class:`ReservoirState`, :func:`reservoir_run`)
+is the vectorized promotion of the same FLEET-3 gamma schedule into pure
+JAX ops — the sampling layer behind the executor's ``sampled`` tier.  It
+replaces the sequential admission coin with a *content-keyed* uniform per
+edge: ``u(e) = U(fold_in(fold_in(key, i), j))`` via threefry, so an edge's
+coin depends only on the edge and the seed, never on arrival order.  The
+admission probability is locked to the gamma ladder ``p = gamma**k`` and a
+whole chunk subsamples in one shot: the cutoff ``t`` is the (M+1)-th
+smallest live ``u`` and ``k`` advances to the smallest rung with
+``gamma**k <= t`` (never moving backwards), which keeps at most M edges
+strictly below ``p`` — a *hard* occupancy bound, not an expected one.
+Because ``u`` is content-keyed, ingesting a stream in any chunking
+(including one chunk per edge) yields the identical reservoir and the
+identical ``k`` — the property the sampled executor tier's determinism
+tests pin.  Estimates scale by ``p**-4`` exactly as FLEET-1's recount.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import random as jrandom
 
-__all__ = ["FleetState", "fleet_run", "fleet_run_chunked"]
+__all__ = ["FleetState", "fleet_run", "fleet_run_chunked",
+           "ReservoirState", "reservoir_init", "reservoir_ingest",
+           "reservoir_run", "edge_uniforms", "subsample_cutoff",
+           "gamma_ladder", "sample_keep_mask", "check_sampling_knobs"]
+
+
+def check_sampling_knobs(capacity, gamma, seed) -> None:
+    """Shared validation for every sampling entry point (FLEET baselines,
+    the jitted reservoir, and the executor's ``sampled`` tier): reject bad
+    knobs loudly *before any state exists or mutates*.  ``capacity`` must be
+    a positive int (bools are ints in Python — rejected), ``gamma`` must lie
+    strictly inside (0, 1) (0 would drop everything at the first round, 1
+    would never shrink the reservoir), and ``seed`` must be an int (a float
+    seed would silently truncate into a different stream of coins)."""
+    if isinstance(capacity, bool) or not isinstance(
+            capacity, (int, np.integer)):
+        raise ValueError(f"capacity must be an int, got {capacity!r}")
+    if int(capacity) <= 0:
+        raise ValueError(f"capacity must be positive, got {int(capacity)}")
+    if not (0.0 < float(gamma) < 1.0):
+        raise ValueError(
+            f"gamma must lie strictly in (0, 1), got {float(gamma)}")
+    if isinstance(seed, bool) or not isinstance(seed, (int, np.integer)):
+        raise ValueError(f"seed must be an int, got {seed!r}")
 
 
 @dataclass
@@ -42,6 +85,9 @@ class FleetState:
     rng: np.random.Generator = None  # type: ignore[assignment]
 
     def __post_init__(self):
+        if self.variant not in (1, 2, 3):
+            raise ValueError(f"variant must be 1, 2 or 3, got {self.variant!r}")
+        check_sampling_knobs(self.capacity, self.gamma, self.seed)
         self.rng = np.random.default_rng(self.seed)
 
     # -- reservoir graph ops ------------------------------------------------
@@ -175,3 +221,298 @@ def fleet_run_chunked(
                     if st.variant == 1:
                         st.estimate = st._exact_count() / st.p**4
     return st.estimate if variant != 1 else st._exact_count() / st.p**4
+
+
+# ---------------------------------------------------------------------------
+# Jitted reservoir: content-keyed FLEET subsampling in pure JAX ops
+# ---------------------------------------------------------------------------
+#
+# The sequential FLEET loop above flips an admission coin per edge and halves
+# the reservoir with fresh coins when it overflows.  The jitted promotion
+# derandomizes arrival order out of the picture: each edge owns ONE uniform
+# u(e) = U(threefry(key, i, j)) for its whole lifetime, the admission
+# probability is pinned to the gamma ladder p = gamma**k, and an edge is live
+# exactly when u(e) < p.  Subsampling = advancing k far enough that at most
+# ``capacity`` edges stay strictly below p; the new rung is read off the
+# (capacity+1)-th smallest live u in one sort.  Because u is a pure function
+# of edge content and seed, the surviving set after any prefix is independent
+# of how that prefix was chunked — the determinism the property suite pins.
+
+# ladder rung used when even p=0 is needed (pathological t=0); gamma**_K_MAX
+# underflows f32 to exactly 0, so the keep-mask goes empty and the inverse
+# scale is defined to 0 — estimates stay finite
+_K_MAX = 1_000_000
+
+
+def edge_uniforms(key: jax.Array, edge_i: jax.Array,
+                  edge_j: jax.Array) -> jax.Array:
+    """Per-edge content-keyed uniforms in [0, 1): fold the edge endpoints
+    into ``key`` and draw one f32 uniform per lane.  Duplicate edges share
+    their uniform by construction (same fold chain), so a duplicate can
+    never displace a distinct edge's coin."""
+    def one(i, j):
+        k = jrandom.fold_in(jrandom.fold_in(key, i), j)
+        return jrandom.uniform(k, (), jnp.float32)
+
+    return jax.vmap(one)(edge_i, edge_j)
+
+
+def subsample_cutoff(u: jax.Array, valid: jax.Array,
+                     capacity: int) -> jax.Array:
+    """The (capacity+1)-th smallest valid uniform, or +inf when at most
+    ``capacity`` lanes are valid.  Any p <= cutoff keeps at most ``capacity``
+    lanes strictly below p — the hard occupancy bound."""
+    if u.shape[0] <= capacity:          # statically cannot overflow
+        return jnp.float32(jnp.inf)
+    masked = jnp.where(valid, u, jnp.float32(jnp.inf))
+    return jnp.sort(masked)[capacity]
+
+
+def gamma_ladder(t: jax.Array, gamma: float) -> tuple[jax.Array, jax.Array]:
+    """Smallest integer rung k >= 0 with ``gamma**k <= t`` (as *computed* in
+    f32 — the comparison runs on the same powers the keep-mask will use, so
+    float rounding cannot break the occupancy bound).  Returns ``(k, p)``
+    with ``p = gamma**k``; ``t >= 1`` (incl. +inf) gives ``(0, 1.0)`` exactly
+    and a pathological ``t = 0`` collapses to ``p = 0``."""
+    g = jnp.float32(gamma)
+    raw = jnp.log(t) / jnp.log(g)                 # +inf -> -inf, 0 -> +inf
+    k0 = jnp.ceil(raw)
+    # probe a +-1 neighborhood of the analytic rung: pow/log rounding can
+    # land the analytic answer one rung off in either direction
+    ks = jnp.clip(k0 + jnp.arange(-1.0, 3.0, dtype=jnp.float32),
+                  0.0, float(_K_MAX))
+    pvals = jnp.power(g, ks)                      # non-increasing in k
+    ok = pvals <= t
+    idx = jnp.argmax(ok)                          # first ok = largest p
+    any_ok = ok.any()
+    k = jnp.where(any_ok, ks[idx], float(_K_MAX)).astype(jnp.int32)
+    p = jnp.where(any_ok, pvals[idx], jnp.float32(0.0))
+    return k, p
+
+
+def sample_keep_mask(edge_i: jax.Array, edge_j: jax.Array, valid: jax.Array,
+                     uid_hi: jax.Array, uid_lo: jax.Array, *, capacity: int,
+                     gamma: float, seed: int) -> tuple[jax.Array, jax.Array]:
+    """One-shot subsample-and-scale mask for a padded window: ``(keep, p)``
+    with at most ``capacity`` lanes kept and every valid lane kept
+    independently with probability exactly ``p = gamma**k``.  ``uid_hi`` /
+    ``uid_lo`` are the two uint32 halves of the window's sampling uid — they
+    decorrelate coins across windows (and across streams) while keeping each
+    window's draw reproducible."""
+    key = jrandom.fold_in(jrandom.fold_in(jrandom.PRNGKey(seed),
+                                          uid_hi), uid_lo)
+    u = edge_uniforms(key, edge_i, edge_j)
+    t = subsample_cutoff(u, valid, capacity)
+    _, p = gamma_ladder(t, gamma)
+    keep = valid & (u < p)
+    return keep, p
+
+
+@dataclass
+class ReservoirState:
+    """Static-capacity FLEET reservoir as a pytree of fixed-shape leaves.
+
+    Lanes hold (edge_i, edge_j, u) with a validity mask; ``k`` is the gamma
+    rung, so the admission probability is always ``gamma**k`` recomputed from
+    the integer rung (never a drifting running product).  Invariant: the
+    valid lanes are exactly the *distinct* ingested edges with
+    ``u < gamma**k`` (one lane per edge), and there are at most ``capacity``
+    of them."""
+    edge_i: jax.Array   # int32 [capacity]
+    edge_j: jax.Array   # int32 [capacity]
+    u: jax.Array        # float32 [capacity]; +inf on invalid lanes
+    valid: jax.Array    # bool [capacity]
+    k: jax.Array        # int32 scalar gamma rung
+
+    @property
+    def capacity(self) -> int:
+        return int(self.edge_i.shape[0])
+
+
+jax.tree_util.register_pytree_node(
+    ReservoirState,
+    lambda s: ((s.edge_i, s.edge_j, s.u, s.valid, s.k), None),
+    lambda _, leaves: ReservoirState(*leaves),
+)
+
+
+def reservoir_init(capacity: int) -> ReservoirState:
+    check_sampling_knobs(capacity, 0.5, 0)
+    return ReservoirState(
+        edge_i=jnp.zeros(capacity, jnp.int32),
+        edge_j=jnp.zeros(capacity, jnp.int32),
+        u=jnp.full(capacity, jnp.inf, jnp.float32),
+        valid=jnp.zeros(capacity, bool),
+        k=jnp.int32(0),
+    )
+
+
+def reservoir_ingest(res: ReservoirState, edge_i: jax.Array,
+                     edge_j: jax.Array, valid: jax.Array, u: jax.Array, *,
+                     gamma: float, dedupe: bool = True) -> ReservoirState:
+    """Ingest one padded chunk: admission-filter at the current rung, merge
+    with the resident lanes, advance the rung just far enough that at most
+    ``capacity`` lanes survive, and compact survivors to the front.
+
+    The rung is clamped to never decrease (``max(k, ladder(t))``): after a
+    deep subsample the merged live count can drop back under capacity, and
+    un-advancing the rung would re-admit edges whose coins were already
+    spent — breaking both unbiasedness and chunking-invariance.
+
+    Merged lanes are deduplicated by ``(i, j)`` before the cutoff: duplicate
+    arrivals of an edge share its content-keyed ``u`` (they survive or die
+    together anyway), so extra lanes of a resident edge carry zero
+    information but would eat capacity — on duplicate-heavy streams the
+    lane-wise order statistic then drives ``p`` far below what the distinct
+    edge count needs, exploding estimator variance.  With dedupe the
+    occupancy bound and the cutoff are distinct-edge-wise, matching the
+    paper's reservoirs (FLEET ignores re-insertions of a sampled edge).
+
+    ``dedupe=False`` (static) skips the in-merge lexsort for callers that
+    guarantee globally-distinct lanes — a duplicate's coin equals the
+    original's, so it can never be admitted once the original was refused or
+    evicted, and re-feeding it is always a no-op; :func:`reservoir_run`
+    exploits this by deduplicating the whole stream host-side once."""
+    capacity = res.capacity
+    g = jnp.float32(gamma)
+    p_cur = jnp.power(g, res.k.astype(jnp.float32))
+    v = valid & (u < p_cur)
+
+    mi = jnp.concatenate([res.edge_i, edge_i.astype(jnp.int32)])
+    mj = jnp.concatenate([res.edge_j, edge_j.astype(jnp.int32)])
+    mu = jnp.concatenate([res.u, jnp.where(v, u, jnp.float32(jnp.inf))])
+    mv = jnp.concatenate([res.valid, v])
+
+    if dedupe:
+        # dedupe by endpoints: group valid lanes by (i, j) via lexsort, keep
+        # one lane per distinct edge (duplicates share u, so which lane
+        # survives is immaterial); residents are already distinct, so this
+        # only folds new arrivals into residents and into each other
+        order_d = jnp.lexsort((mj, mi, ~mv))
+        si, sj, sv = mi[order_d], mj[order_d], mv[order_d]
+        dup_sorted = jnp.concatenate([
+            jnp.zeros(1, bool),
+            (si[1:] == si[:-1]) & (sj[1:] == sj[:-1]) & sv[1:] & sv[:-1]])
+        dup = jnp.zeros_like(mv).at[order_d].set(dup_sorted)
+        mv = mv & ~dup
+        mu = jnp.where(mv, mu, jnp.float32(jnp.inf))
+
+    # one argsort serves both the cutoff and the compaction: sorted
+    # ascending by u the (capacity+1)-th lane IS the order-statistic cutoff,
+    # and the first `capacity` lanes are the only possible survivors —
+    # invalid lanes carry u = +inf and sink to the tail, so a lane is valid
+    # iff its u is finite (u < 1 by construction, and p_new <= 1)
+    order = jnp.argsort(mu)
+    s_mu = mu[order]
+    t = (s_mu[capacity] if s_mu.shape[0] > capacity
+         else jnp.float32(jnp.inf))
+    k_new, _ = gamma_ladder(t, gamma)
+    k_new = jnp.maximum(res.k, k_new)
+    p_new = jnp.power(g, k_new.astype(jnp.float32))
+    top = order[:capacity]
+    u_top = s_mu[:capacity]
+    keep = u_top < p_new
+    return ReservoirState(
+        edge_i=mi[top],
+        edge_j=mj[top],
+        u=jnp.where(keep, u_top, jnp.float32(jnp.inf)),
+        valid=keep,
+        k=k_new,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "dedupe"))
+def _reservoir_scan(edge_i: jax.Array, edge_j: jax.Array, valid: jax.Array,
+                    init: ReservoirState, key: jax.Array, *,
+                    gamma: float, dedupe: bool = True) -> ReservoirState:
+    # key is a traced argument so sweeping seeds reuses one compilation
+    def step(res, xs):
+        ci, cj, cv = xs
+        u = edge_uniforms(key, ci, cj)
+        return reservoir_ingest(res, ci, cj, cv, u, gamma=gamma,
+                                dedupe=dedupe), None
+
+    out, _ = jax.lax.scan(step, init, (edge_i, edge_j, valid))
+    return out
+
+
+_RES_INIT_CACHE: dict[int, ReservoirState] = {}
+
+
+def reservoir_run(
+    edge_i: np.ndarray,
+    edge_j: np.ndarray,
+    *,
+    capacity: int,
+    gamma: float = 0.7,
+    seed: int = 0,
+    chunk: int = 8192,
+) -> tuple[float, ReservoirState]:
+    """FLEET butterfly estimate of a whole stream through the jitted
+    reservoir: one ``lax.scan`` over ``chunk``-sized slabs, then an exact
+    count of the surviving edges scaled by ``p**-4`` (all four butterfly
+    edges survive independently with probability p).  Returns
+    ``(estimate, final_state)``.  The estimate is chunk-size-invariant —
+    ``chunk`` is a pure batching/memory knob."""
+    check_sampling_knobs(capacity, gamma, seed)
+    if isinstance(chunk, bool) or not isinstance(chunk, (int, np.integer)) \
+            or int(chunk) <= 0:
+        raise ValueError(f"chunk must be a positive int, got {chunk!r}")
+    edge_i = np.asarray(edge_i).ravel()
+    edge_j = np.asarray(edge_j).ravel()
+    if edge_i.shape != edge_j.shape:
+        raise ValueError("edge_i and edge_j must have the same length")
+    res = _RES_INIT_CACHE.get(capacity)
+    if res is None:
+        # the empty state is immutable (every update is functional), so one
+        # device-side instance per capacity serves every run
+        res = _RES_INIT_CACHE[capacity] = reservoir_init(capacity)
+    if len(edge_i):
+        # drop repeat arrivals host-side: a duplicate shares the original's
+        # content-keyed coin, so it can never change reservoir state (it is
+        # admitted only while the original is resident, and then deduped) —
+        # feeding first occurrences only is exactly equivalent and lets the
+        # scan skip the in-merge lexsort (dedupe=False) on fewer lanes
+        ei, ej = edge_i, edge_j
+        if not (np.issubdtype(ei.dtype, np.integer)
+                and np.issubdtype(ej.dtype, np.integer)
+                and ei.min() >= 0 and ej.min() >= 0
+                and ei.max() < 2**32 and ej.max() < 2**32):
+            # arbitrary id ranges: compact first so the pair key packs
+            _, ei = np.unique(ei, return_inverse=True)
+            _, ej = np.unique(ej, return_inverse=True)
+        pk = (ei.astype(np.uint64) << np.uint64(32)) | ej.astype(np.uint64)
+        _, first = np.unique(pk, return_index=True)
+        first.sort()
+        # compact the (much smaller) distinct set so lanes fit int32
+        ui, ci = np.unique(ei[first], return_inverse=True)
+        uj, cj = np.unique(ej[first], return_inverse=True)
+        n = len(first)
+        chunk = int(chunk)
+        n_chunks = -(-n // chunk)
+        pad = n_chunks * chunk - n
+        lane_i = np.concatenate(
+            [ci.astype(np.int32), np.zeros(pad, np.int32)])
+        lane_j = np.concatenate(
+            [cj.astype(np.int32), np.zeros(pad, np.int32)])
+        lane_v = np.concatenate(
+            [np.ones(n, bool), np.zeros(pad, bool)])
+        res = _reservoir_scan(
+            lane_i.reshape(n_chunks, chunk),
+            lane_j.reshape(n_chunks, chunk),
+            lane_v.reshape(n_chunks, chunk),
+            res, jrandom.PRNGKey(int(seed)), gamma=float(gamma),
+            dedupe=False)
+    # exact count of the survivors host-side: at most `capacity` edges, and
+    # the sparse wedge counter is id-space-independent (a dense biadjacency
+    # over the full compacted id range would dwarf the whole scan)
+    valid = np.asarray(res.valid)
+    survivors = np.stack(
+        [np.asarray(res.edge_i)[valid], np.asarray(res.edge_j)[valid]],
+        axis=1).astype(np.int64)
+    from .butterfly import count_butterflies_np
+
+    count = count_butterflies_np(survivors)
+    p = float(gamma) ** int(res.k)
+    estimate = float(count) / p**4 if p > 0.0 else 0.0
+    return estimate, res

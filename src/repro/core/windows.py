@@ -79,6 +79,13 @@ class WindowBatch:
         multiplicity lane (``multiset`` duplicate policy).  ``None`` for
         distinct-mode batches — counting treats a missing lane as all-ones.
         Padding slots are zero (masked out by ``valid`` anyway).
+    sample_uid      : int64 [n_windows] | None     per-window sampling uid
+        for the ``sampled`` executor tier: the 64-bit value folded into the
+        threefry key so each window (of each stream) draws its own coin
+        stream.  The streaming engines stamp ``(res_seed << 32) +
+        cum_sgrs``; ``None`` makes the executor derive the equivalent from
+        ``stream_ids``/``cum_sgrs`` (seed-0 semantics).  Exact tiers never
+        read it.
     """
 
     edge_i: np.ndarray
@@ -94,6 +101,7 @@ class WindowBatch:
     n_j_per_window: np.ndarray
     stream_ids: np.ndarray | None = None
     edge_mult: np.ndarray | None = None
+    sample_uid: np.ndarray | None = None
 
     @property
     def n_windows(self) -> int:
@@ -138,6 +146,8 @@ class WindowBatch:
                         else self.stream_ids[idx]),
             edge_mult=(None if self.edge_mult is None
                        else self.edge_mult[idx, :cap]),
+            sample_uid=(None if self.sample_uid is None
+                        else self.sample_uid[idx]),
         )
 
 
@@ -156,6 +166,7 @@ def pack_windows(
     dedupe: bool = True,
     stream_ids: np.ndarray | None = None,
     per_window_mult: list[np.ndarray] | None = None,
+    sample_uid: np.ndarray | None = None,
 ) -> WindowBatch:
     """Pack per-window raw edge lists into padded device-ready tensors.
 
@@ -180,6 +191,11 @@ def pack_windows(
     (int32, zero-padded).  The lane is *ignored* under ``dedupe=True`` —
     distinct-mode packing collapses duplicates keep-first, so a multiplicity
     lane would be meaningless there (``edge_mult`` stays ``None``).
+
+    ``sample_uid`` (optional, int64 ``[n_windows]``) stamps each window's
+    64-bit sampling uid for the ``sampled`` executor tier (see
+    :class:`WindowBatch`).  Like ``stream_ids`` it is pure bookkeeping to
+    the packer.
     """
     n_win = len(per_window_edges)
     n_sgrs = np.asarray(n_sgrs, dtype=np.int64)
@@ -191,6 +207,12 @@ def pack_windows(
             raise ValueError(
                 f"stream_ids must be [n_windows]={n_win}, "
                 f"got shape {stream_ids.shape}")
+    if sample_uid is not None:
+        sample_uid = np.asarray(sample_uid, dtype=np.int64)
+        if sample_uid.shape != (n_win,):
+            raise ValueError(
+                f"sample_uid must be [n_windows]={n_win}, "
+                f"got shape {sample_uid.shape}")
     want_mult = per_window_mult is not None and not dedupe
     if per_window_mult is not None and len(per_window_mult) != n_win:
         raise ValueError(
@@ -202,7 +224,8 @@ def pack_windows(
         return WindowBatch(z2, z2, z2.astype(bool), z1, z1, z1, 0, 0,
                            np.zeros(0, dtype=np.float64), z1, z1,
                            stream_ids=stream_ids,
-                           edge_mult=z2 if want_mult else None)
+                           edge_mult=z2 if want_mult else None,
+                           sample_uid=sample_uid)
 
     from .butterfly import _check_id_range_np, _dedupe_edges_np
 
@@ -256,7 +279,7 @@ def pack_windows(
         edge_i=out_i, edge_j=out_j, valid=valid, n_edges=n_edges, n_sgrs=n_sgrs,
         cum_sgrs=cum_sgrs, n_i=n_i, n_j=n_j, window_end_tau=window_end_tau,
         n_i_per_window=ni_w, n_j_per_window=nj_w, stream_ids=stream_ids,
-        edge_mult=out_m,
+        edge_mult=out_m, sample_uid=sample_uid,
     )
 
 

@@ -67,7 +67,7 @@ from repro.streams.state import (
 )
 
 __all__ = ["StreamingSGrapp", "STATE_DICT_VERSION", "DUP_POLICIES",
-           "migrate_state_dict_v1"]
+           "migrate_state_dict_v1", "migrate_state_dict_v2"]
 
 # duplicate-edge policies: "distinct" is the paper's keep-first semantics
 # (today's behavior, now an explicit knob); "multiset" counts butterflies
@@ -83,17 +83,22 @@ DUP_POLICIES = ("distinct", "multiset")
 # v2 = v1 + the open-window per-record op/delta lane ("buf_op") of the
 # dynamic wire format; v1 checkpoints migrate forward on restore
 # (:func:`migrate_state_dict_v1` — an insert-only buffer is all-ones).
+# v3 = v2 + the per-stream reservoir seed ("res_seed") behind the sampled
+# executor tier's window uids; v2 checkpoints migrate forward on restore
+# (:func:`migrate_state_dict_v2` — pre-sampled engines behaved as seed=0).
 # MultiStreamSGrapp reuses the same field names with a stream axis (see
 # repro.streams.multi).
-STATE_DICT_VERSION = 2
+STATE_DICT_VERSION = 3
 
 _STATE_DICT_KEYS_V1 = frozenset({
     "version", "nt_w", "buf_i", "buf_j", "buf_last_tau", "buf_len", "uniq",
     "last_tau", "total_sgrs", "finalized", "counts", "estimates", "cum_sgrs",
     "end_tau", "carry_cum", "carry_alpha", "carry_err", "carry_sup",
 })
-_STATE_DICT_KEYS = _STATE_DICT_KEYS_V1 | {"buf_op"}
-_STATE_DICT_SCHEMAS = {1: _STATE_DICT_KEYS_V1, 2: _STATE_DICT_KEYS}
+_STATE_DICT_KEYS_V2 = _STATE_DICT_KEYS_V1 | {"buf_op"}
+_STATE_DICT_KEYS = _STATE_DICT_KEYS_V2 | {"res_seed"}
+_STATE_DICT_SCHEMAS = {1: _STATE_DICT_KEYS_V1, 2: _STATE_DICT_KEYS_V2,
+                       3: _STATE_DICT_KEYS}
 
 
 def advance_estimator(step_fn, carry, truths, new_counts, new_cums,
@@ -192,6 +197,23 @@ def migrate_state_dict_v1(state: dict) -> dict:
     return out
 
 
+def migrate_state_dict_v2(state: dict) -> dict:
+    """v2 -> v3 checkpoint migration, shared by both engines: v2 engines
+    predate the sampled tier's per-stream reservoir seed, and they behaved
+    exactly as a fresh ``seed=0`` engine does — so the migrated ``res_seed``
+    is 0 for the single-stream schema and the ``arange`` offsets for the
+    multi-stream one (dispatched on the fleet schema's ``n_streams`` key).
+    Returns a new dict; the input is not mutated."""
+    out = dict(state)
+    if "n_streams" in state:
+        out["res_seed"] = np.arange(int(np.asarray(state["n_streams"])),
+                                    dtype=np.int64)
+    else:
+        out["res_seed"] = np.int64(0)
+    out["version"] = np.int64(3)
+    return out
+
+
 class StreamingSGrapp:
     """Online sGrapp / sGrapp-x over a pushed sgr stream.
 
@@ -229,6 +251,14 @@ class StreamingSGrapp:
         edge does — ``"raise"`` (default, loud) or ``"ignore"`` (dropped as
         a no-op record).  Deletes resolve against the *open* window only:
         tumbling windows renew the graph, so closed windows are immutable.
+    seed : reservoir seed for the ``sampled`` executor tier — the high 32
+        bits of every closed window's sampling uid (the low 32 bits are the
+        window's cumulative sgr count), so two engines with different seeds
+        draw independent coins over the same stream.  Checkpointed
+        (``res_seed``, schema v3) and carried under every tier.  The
+        ``sampled`` tier rejects ``dup_policy="multiset"`` and delete ops
+        with ``NotImplementedError`` — subsampled estimates have no
+        multiplicity/retraction semantics yet.
     """
 
     def __init__(self, nt_w: int, alpha0: float, *, truths=None,
@@ -237,7 +267,7 @@ class StreamingSGrapp:
                  devices=None, mesh=None, flush_every: int = 32,
                  drop_partial: bool = True, align: int = 64,
                  dup_policy: str = "distinct",
-                 on_missing_delete: str = "raise"):
+                 on_missing_delete: str = "raise", seed: int = 0):
         if nt_w <= 0:
             raise ValueError("nt_w must be positive")
         if flush_every < 1:
@@ -271,10 +301,17 @@ class StreamingSGrapp:
         # executors keep the default cap snapping instead
         self.executor = executor if executor is not None else WindowExecutor(
             tier, align=align, snap=0, devices=devices, mesh=mesh)
+        if dup_policy == "multiset" and self.executor.tier == "sampled":
+            raise NotImplementedError(
+                "sampled tier does not support dup_policy='multiset': the "
+                "subsample-and-scale identity assumes distinct edges; use "
+                "an exact tier for multiset streams")
         self._step_fn = estimator_step(self.tol, self.step)
 
         # -- the whole per-stream state: a one-stream StreamState pytree
-        self._state: StreamState = stream_state_init(1, alpha0)
+        # (seed offsets res_seed — validated there before any state exists)
+        self._state: StreamState = stream_state_init(1, alpha0, seed=seed)
+        self.seed = int(seed)
 
         # -- closed-but-uncounted windows awaiting a flush, as
         # (edge_i, edge_j, ops, n_sgrs, end_tau) with ops=None marking an
@@ -330,6 +367,15 @@ class StreamingSGrapp:
         absent edge follows the engine's ``on_missing_delete`` knob."""
         if self._state.finalized[0]:
             raise RuntimeError("push after finalize(); stream already ended")
+        if op is not None and self.tier == "sampled":
+            from repro.streams.state import OP_DELETE
+
+            if np.any(np.atleast_1d(np.asarray(op)) == OP_DELETE):
+                # before windowizer_push: the batch must not mutate state
+                raise NotImplementedError(
+                    "sampled tier does not support delete ops: a subsampled "
+                    "window has no retraction semantics; use an exact tier "
+                    "for dynamic streams")
         closed = windowizer_push(self._state, 0, tau, edge_i, edge_j,
                                  self.nt_w, op=op,
                                  on_missing_delete=self.on_missing_delete)
@@ -359,15 +405,27 @@ class StreamingSGrapp:
         end_tau = np.array([t for _, _, _, _, t in pending],
                            dtype=np.float64)
         cum = int(self._state.total_sgrs[0]) + np.cumsum(n_sgrs)
+        # the sampled tier's per-window uid: res_seed (high half, uint32
+        # wraps) over the window's |E_k| (low half).  uint64 arithmetic so a
+        # large seed cannot overflow; the int64 cast wraps, and the
+        # executor's hi/lo split masks both halves back out.  Stamped under
+        # every tier — exact tiers never read it, and a replayed batch with
+        # no lane derives exactly these seed-0 values (streaming == replay).
+        hi = np.uint64(int(self._state.res_seed[0]) & 0xFFFFFFFF)
+        uid = ((hi << np.uint64(32))
+               + (cum.astype(np.uint64) & np.uint64(0xFFFFFFFF))
+               ).astype(np.int64)
         if self.dup_policy == "multiset":
             # resolved edges are already unique; the multiplicity lane rides
             # into the batch and routes every tier through its weighted twin
             batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
                                  window_end_tau=end_tau, align=self.align,
-                                 dedupe=False, per_window_mult=per_mult)
+                                 dedupe=False, per_window_mult=per_mult,
+                                 sample_uid=uid)
         else:
             batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
-                                 window_end_tau=end_tau, align=self.align)
+                                 window_end_tau=end_tau, align=self.align,
+                                 sample_uid=uid)
         counts = self.executor.window_counts(batch)   # float64 [m]
         # windows stay pending until counted: a packing/counting error (bad
         # edge ids, a dying device) leaves the engine consistent and the
@@ -439,6 +497,7 @@ class StreamingSGrapp:
             "carry_alpha": np.float32(st.carry_alpha[0]),
             "carry_err": np.float32(st.carry_err[0]),
             "carry_sup": np.bool_(st.carry_sup[0]),
+            "res_seed": np.int64(st.res_seed[0]),
         }
 
     def restore(self, state: dict) -> "StreamingSGrapp":
@@ -452,6 +511,9 @@ class StreamingSGrapp:
                                         schema="StreamingSGrapp")
         if version == 1:
             state = migrate_state_dict_v1(state)
+            version = 2
+        if version == 2:
+            state = migrate_state_dict_v2(state)
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine nt_w={self.nt_w}")
@@ -472,6 +534,9 @@ class StreamingSGrapp:
         st.carry_alpha[0] = np.float32(state["carry_alpha"])
         st.carry_err[0] = np.float32(state["carry_err"])
         st.carry_sup[0] = np.bool_(state["carry_sup"])
+        # the checkpoint's reservoir seed wins over the constructor's: the
+        # uid sequence must continue the saving engine's coin stream
+        st.res_seed[0] = int(state["res_seed"])
         self._state = st
         self._counts = [float(c) for c in np.asarray(state["counts"])]
         self._estimates = [np.float32(e) for e in np.asarray(state["estimates"])]

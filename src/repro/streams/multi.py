@@ -63,6 +63,7 @@ from repro.streams.engine import (
     advance_estimator,
     check_state_dict_keys,
     migrate_state_dict_v1,
+    migrate_state_dict_v2,
     resolve_pending_window,
 )
 from repro.streams.state import (
@@ -78,16 +79,19 @@ __all__ = ["MultiStreamSGrapp"]
 
 # v1 = insert-only fleet schema; v2 adds the flat "buf_op" lane (aligned
 # element-for-element with "buf_i" via the same "buf_offsets"), migrated
-# forward from v1 on restore exactly like the single-stream engine.
+# forward from v1 on restore exactly like the single-stream engine; v3 adds
+# the per-stream "res_seed" lane (sampled-tier reservoir identity).
 _MULTI_STATE_DICT_KEYS_V1 = frozenset({
     "version", "n_streams", "nt_w", "buf_i", "buf_j", "buf_offsets",
     "buf_last_tau", "buf_len", "uniq", "last_tau", "total_sgrs", "finalized",
     "counts", "estimates", "cum_sgrs", "end_tau", "hist_offsets",
     "carry_cum", "carry_alpha", "carry_err", "carry_sup",
 })
-_MULTI_STATE_DICT_KEYS = _MULTI_STATE_DICT_KEYS_V1 | {"buf_op"}
+_MULTI_STATE_DICT_KEYS_V2 = _MULTI_STATE_DICT_KEYS_V1 | {"buf_op"}
+_MULTI_STATE_DICT_KEYS = _MULTI_STATE_DICT_KEYS_V2 | {"res_seed"}
 _MULTI_STATE_DICT_SCHEMAS = {1: _MULTI_STATE_DICT_KEYS_V1,
-                             2: _MULTI_STATE_DICT_KEYS}
+                             2: _MULTI_STATE_DICT_KEYS_V2,
+                             3: _MULTI_STATE_DICT_KEYS}
 
 
 def _ragged_concat(parts: list[np.ndarray], dtype) -> tuple[np.ndarray, np.ndarray]:
@@ -125,6 +129,11 @@ class MultiStreamSGrapp:
     dup_policy, on_missing_delete : duplicate-edge / missing-delete
         semantics, shared by every tenant — exactly the single-stream
         engine's knobs (the N=1 bit-identity contract covers them).
+    seed : base reservoir seed for the ``sampled`` tier.  Tenant ``s``
+        gets reservoir identity ``seed + s`` (so distinct tenants draw
+        independent coin streams, and an ``N=1`` fleet at seed ``k``
+        matches a single-stream engine at seed ``k`` bit-for-bit).
+        Ignored by exact tiers.
     """
 
     def __init__(self, n_streams: int, nt_w: int, alpha0, *, truths=None,
@@ -133,7 +142,7 @@ class MultiStreamSGrapp:
                  devices=None, mesh=None, flush_every: int = 32,
                  drop_partial: bool = True, align: int = 64,
                  dup_policy: str = "distinct",
-                 on_missing_delete: str = "raise"):
+                 on_missing_delete: str = "raise", seed: int = 0):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if nt_w <= 0:
@@ -173,10 +182,15 @@ class MultiStreamSGrapp:
         # rungs and never re-trace at steady state
         self.executor = executor if executor is not None else WindowExecutor(
             tier, align=align, snap=0, devices=devices, mesh=mesh)
+        if dup_policy == "multiset" and self.executor.tier == "sampled":
+            raise NotImplementedError(
+                "the sampled tier does not support dup_policy='multiset': "
+                "reservoir scaling assumes distinct-edge counting")
         self._step_fn = estimator_step(self.tol, self.step)
+        self.seed = int(seed)
 
         n = int(n_streams)
-        self._state: StreamState = stream_state_init(n, alpha0)
+        self._state: StreamState = stream_state_init(n, alpha0, seed=seed)
         # per-stream closed-but-uncounted windows, in close order; the set
         # tracks which streams have any, so flush work scales with pending
         # tenants, never with fleet size
@@ -245,6 +259,12 @@ class MultiStreamSGrapp:
         1 = delete; ``None`` = all inserts) — deletes resolve against the
         record's own stream's open window, per the fleet's
         ``on_missing_delete`` knob."""
+        if op is not None and self.tier == "sampled":
+            from repro.streams.state import OP_DELETE
+            if np.any(np.atleast_1d(np.asarray(op)) == OP_DELETE):
+                raise NotImplementedError(
+                    "the sampled tier does not support edge deletions: "
+                    "reservoir estimates are insert-only (FLEET)")
         closed = windowizer_push(self._state, stream_id, tau, edge_i, edge_j,
                                  self.nt_w, op=op,
                                  on_missing_delete=self.on_missing_delete)
@@ -284,19 +304,30 @@ class MultiStreamSGrapp:
                 c += m
                 cum.append(c)
                 sids.append(s)
+        # per-window reservoir identity: the owning tenant's res_seed in the
+        # high 32 bits, its cumulative sgr count in the low 32 — the same
+        # uint64-wraparound packing as the single-stream engine, so each
+        # tenant's uid sequence matches its dedicated engine bit-for-bit
+        rs = self._state.res_seed[np.asarray(sids, dtype=np.int64)]
+        hi = (rs & np.int64(0xFFFFFFFF)).astype(np.uint64)
+        lo = (np.asarray(cum, dtype=np.int64) & np.int64(0xFFFFFFFF)) \
+            .astype(np.uint64)
+        uid = ((hi << np.uint64(32)) + lo).astype(np.int64)
         if self.dup_policy == "multiset":
             batch = pack_windows(
                 per_edges, n_sgrs=np.asarray(n_sgrs, dtype=np.int64),
                 cum_sgrs=np.asarray(cum, dtype=np.int64),
                 window_end_tau=np.asarray(end_tau, dtype=np.float64),
                 align=self.align, stream_ids=np.asarray(sids, dtype=np.int32),
-                dedupe=False, per_window_mult=per_mult)
+                dedupe=False, per_window_mult=per_mult,
+                sample_uid=uid)
         else:
             batch = pack_windows(
                 per_edges, n_sgrs=np.asarray(n_sgrs, dtype=np.int64),
                 cum_sgrs=np.asarray(cum, dtype=np.int64),
                 window_end_tau=np.asarray(end_tau, dtype=np.float64),
-                align=self.align, stream_ids=np.asarray(sids, dtype=np.int32))
+                align=self.align, stream_ids=np.asarray(sids, dtype=np.int32),
+                sample_uid=uid)
         counts = self.executor.window_counts(batch)   # float64 [m]
         # windows stay pending until counted: a packing/counting error (one
         # tenant's bad edge ids, a dying device) leaves the whole fleet
@@ -405,6 +436,7 @@ class MultiStreamSGrapp:
             "carry_alpha": st.carry_alpha.copy(),
             "carry_err": st.carry_err.copy(),
             "carry_sup": st.carry_sup.copy(),
+            "res_seed": st.res_seed.copy(),
         }
 
     def restore(self, state: dict) -> "MultiStreamSGrapp":
@@ -417,6 +449,9 @@ class MultiStreamSGrapp:
                                         schema="MultiStreamSGrapp")
         if version == 1:
             state = migrate_state_dict_v1(state)
+            version = 2
+        if version == 2:
+            state = migrate_state_dict_v2(state)
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine "
@@ -432,7 +467,8 @@ class MultiStreamSGrapp:
         buf_op = np.asarray(state["buf_op"], dtype=np.int8)
         buf_len = np.asarray(state["buf_len"], dtype=np.int64)
         cap = max(256, int(buf_len.max()) if n else 256)
-        st = stream_state_init(n, self.alpha0, buf_capacity=cap)
+        st = stream_state_init(n, self.alpha0, buf_capacity=cap,
+                               seed=self.seed)
         for s in range(n):
             a, b = int(buf_off[s]), int(buf_off[s + 1])
             st.buf_i[s, :b - a] = buf_i[a:b]
@@ -448,6 +484,9 @@ class MultiStreamSGrapp:
         st.carry_alpha[:] = np.asarray(state["carry_alpha"], np.float32)
         st.carry_err[:] = np.asarray(state["carry_err"], np.float32)
         st.carry_sup[:] = np.asarray(state["carry_sup"], bool)
+        # the checkpoint's reservoir seeds win over the constructor's: each
+        # tenant's uid sequence must continue the saving fleet's coin stream
+        st.res_seed[:] = np.asarray(state["res_seed"], np.int64)
         self._state = st
         hist_off = np.asarray(state["hist_offsets"], dtype=np.int64)
         counts = np.asarray(state["counts"], np.float64)

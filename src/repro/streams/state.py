@@ -72,6 +72,12 @@ class StreamState:
     finalized      : bool    [n_streams]
     carry_cum / carry_alpha / carry_err : float32 [n_streams]  estimator carry
     carry_sup      : bool    [n_streams]   (Alg. 5 supervision latch)
+    res_seed       : int64   [n_streams]   per-stream reservoir seed: the
+                     high 32 bits of every window's sampling uid for the
+                     ``sampled`` executor tier, so co-batched tenants draw
+                     decorrelated coins.  Carried (and checkpointed) even
+                     under exact tiers — it is stream identity, not tier
+                     state.
     """
 
     buf_i: np.ndarray
@@ -87,6 +93,7 @@ class StreamState:
     carry_alpha: np.ndarray
     carry_err: np.ndarray
     carry_sup: np.ndarray
+    res_seed: np.ndarray
 
     @property
     def n_streams(self) -> int:
@@ -116,12 +123,18 @@ _register_pytree()
 
 
 def stream_state_init(n_streams: int, alpha0, *,
-                      buf_capacity: int = 256) -> StreamState:
+                      buf_capacity: int = 256,
+                      seed: int = 0) -> StreamState:
     """Fresh fleet state: empty buffers, quota at zero, estimator carry at
     ``estimator_init(alpha0)``.  ``alpha0`` is a scalar (shared) or a length-
-    ``n_streams`` sequence (per-tenant initial exponent)."""
+    ``n_streams`` sequence (per-tenant initial exponent).  ``seed`` offsets
+    the per-stream reservoir seeds (``res_seed = seed + arange``), so tenant
+    s of a fleet draws the same sampled-tier coins as a dedicated engine
+    constructed with ``seed + s``."""
     if n_streams < 1:
         raise ValueError("n_streams must be >= 1")
+    if isinstance(seed, bool) or not isinstance(seed, (int, np.integer)):
+        raise ValueError(f"seed must be an int, got {seed!r}")
     alpha = np.broadcast_to(
         np.asarray(alpha0, dtype=np.float32), (n_streams,)).copy()
     return StreamState(
@@ -138,6 +151,7 @@ def stream_state_init(n_streams: int, alpha0, *,
         carry_alpha=alpha,
         carry_err=np.zeros(n_streams, dtype=np.float32),
         carry_sup=np.zeros(n_streams, dtype=bool),
+        res_seed=int(seed) + np.arange(n_streams, dtype=np.int64),
     )
 
 

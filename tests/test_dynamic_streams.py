@@ -199,6 +199,15 @@ def assert_matches_oracle(eng_result, end_taus, oracle, policy):
 @pytest.mark.parametrize("policy", ["distinct", "multiset"])
 def test_engine_matches_oracle_all_tiers(tier, policy):
     t, i, j, o = mkdyn(3)
+    if tier == "sampled":
+        # dynamic streams are the sampled tier's explicit non-goal: deletes
+        # (and multiset) refuse loudly — tests/test_sampled_tier.py pins the
+        # guard; every exact tier must replay the oracle below
+        with pytest.raises(NotImplementedError):
+            eng = StreamingSGrapp(NT_W, 0.95, tier=tier, flush_every=16,
+                                  dup_policy=policy)
+            push_dyn(eng, t, i, j, o)
+        return
     oracle = replay_dynamic(t, i, j, o, nt_w=NT_W)
     eng = StreamingSGrapp(NT_W, 0.95, tier=tier, flush_every=16,
                           dup_policy=policy)
@@ -373,7 +382,7 @@ def test_butterfly_delta_matches_recount():
 # -- v1 -> v2 checkpoint migration --------------------------------------------
 
 def roundtrip_v1(eng_cls, make, sd):
-    v1 = {k: v for k, v in sd.items() if k != "buf_op"}
+    v1 = {k: v for k, v in sd.items() if k not in ("buf_op", "res_seed")}
     v1["version"] = np.int64(1)
     return make().restore(v1)
 
@@ -384,7 +393,7 @@ def test_v1_checkpoint_migrates_single_stream():
     eng = StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=100)
     eng.push(t[:cut], i[:cut], j[:cut])
     sd = eng.state_dict()
-    assert int(sd["version"]) == 2 and "buf_op" in sd
+    assert int(sd["version"]) == 3 and "buf_op" in sd and "res_seed" in sd
     make = lambda: StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=100)
     eng_v2 = make().restore(sd)
     eng_v1 = roundtrip_v1(StreamingSGrapp, make, sd)
@@ -403,7 +412,7 @@ def test_v1_checkpoint_migrates_fleet():
     for s in range(2):
         fleet.push(s, [0.0, 1.0, 2.0], [0, 1, 2], [0, 1, 2])
     sd = fleet.state_dict()
-    assert int(sd["version"]) == 2 and "buf_op" in sd
+    assert int(sd["version"]) == 3 and "buf_op" in sd and "res_seed" in sd
     make = lambda: MultiStreamSGrapp(2, NT_W, 0.95, tier="numpy",
                                      flush_every=100)
     fleet_v1 = roundtrip_v1(MultiStreamSGrapp, make, sd)
@@ -423,17 +432,19 @@ def test_migration_preserves_strictness():
     eng = StreamingSGrapp(NT_W, 0.95, tier="numpy")
     eng.push([0.0], [1], [1])
     sd = eng.state_dict()
-    # a v1 dict that *has* buf_op is key-drifted, not migratable
+    # a v1 dict that *has* the later schemas' keys is key-drifted, not
+    # migratable
     v1_extra = dict(sd)
     v1_extra["version"] = np.int64(1)
-    with pytest.raises(ValueError, match="unknown=\\['buf_op'\\]"):
+    with pytest.raises(ValueError,
+                       match="unknown=\\['buf_op', 'res_seed'\\]"):
         StreamingSGrapp(NT_W, 0.95).restore(v1_extra)
-    # a v2 dict missing buf_op is truncated, not silently defaulted
-    v2_cut = {k: v for k, v in sd.items() if k != "buf_op"}
+    # a v3 dict missing buf_op is truncated, not silently defaulted
+    v3_cut = {k: v for k, v in sd.items() if k != "buf_op"}
     with pytest.raises(ValueError, match="missing=\\['buf_op'\\]"):
-        StreamingSGrapp(NT_W, 0.95).restore(v2_cut)
+        StreamingSGrapp(NT_W, 0.95).restore(v3_cut)
     # migrate_state_dict_v1 never mutates its input
-    v1 = {k: v for k, v in sd.items() if k != "buf_op"}
+    v1 = {k: v for k, v in sd.items() if k not in ("buf_op", "res_seed")}
     v1["version"] = np.int64(1)
     out = migrate_state_dict_v1(v1)
     assert int(v1["version"]) == 1 and int(out["version"]) == 2

@@ -1,0 +1,390 @@
+"""Differential validation of the executor's ``sampled`` (FLEET) tier.
+
+The contract has two regimes.  **Capacity-degenerate** (every window fits
+the reservoir): the subsample-and-scale program provably settles at p = 1
+and must be *bit-identical* to the exact ``dense`` tier — pinned here on
+the adversarial corpus (duplicate-heavy, hub stars, all-padding windows),
+through the online ``count_edges`` entry, through both streaming engines,
+and across the sharded dispatch path (subprocess leg with virtual CPU
+devices, in-process leg on the CI multi-device job).  **Sampling** (windows
+above capacity): estimates are deterministic per (seed, uid), non-negative
+and finite, and seed-sensitive; the statistical error bound lives in
+``tests/test_sampled_acceptance.py``.
+
+The ``(memory_budget, target_mape)`` budget router and the loud
+NotImplementedError guards (multiset dup policy, delete ops, decrement)
+are pinned here too — guard failures must raise before any state mutates.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.butterfly import count_butterflies_np
+from repro.core.executor import WindowExecutor, expected_mape
+from repro.core.sgrapp import run_sgrapp
+from repro.core.windows import WindowBatch, pack_windows, windowize
+from repro.streams import (
+    MultiStreamSGrapp,
+    StreamingSGrapp,
+    bipartite_pa_stream,
+    synthetic_rating_stream,
+)
+
+NT_W = 40
+
+
+def rand_edges(n_i, n_j, m, seed):
+    rng = np.random.default_rng(seed)
+    return list(zip(rng.integers(0, n_i, m).tolist(),
+                    rng.integers(0, n_j, m).tolist()))
+
+
+ADVERSARIAL = {
+    "i_hub_star": [(0, j) for j in range(37)],
+    "j_hub_star": [(i, 0) for i in range(41)],
+    "all_duplicates": [(3, 5)] * 25,
+    "complete_k9_7": [(i, j) for i in range(9) for j in range(7)],
+    "orientation_flip": rand_edges(150, 40, 400, seed=1),
+    "non_tile_multiple": rand_edges(13, 300, 350, seed=2),
+    "dense_random": rand_edges(30, 30, 500, seed=3),
+    "duplicate_heavy": rand_edges(12, 10, 600, seed=4),
+}
+
+
+def batch_of(edge_lists) -> WindowBatch:
+    tau, ei, ej = [], [], []
+    for k, edges in enumerate(edge_lists):
+        for i, j in edges:
+            tau.append(float(k)); ei.append(i); ej.append(j)
+    return windowize(np.asarray(tau), np.asarray(ei), np.asarray(ej), 1)
+
+
+def empty_window_batch() -> WindowBatch:
+    cap = 8
+    z = np.zeros((2, cap), np.int32)
+    zi = np.zeros(2, np.int64)
+    return WindowBatch(
+        edge_i=z, edge_j=z.copy(), valid=np.zeros((2, cap), bool),
+        n_edges=zi.copy(), n_sgrs=zi.copy(), cum_sgrs=np.array([1, 2]),
+        n_i=1, n_j=1, window_end_tau=np.zeros(2, np.float64),
+        n_i_per_window=zi.copy(), n_j_per_window=zi.copy(),
+    )
+
+
+def oracle_counts(batch: WindowBatch) -> np.ndarray:
+    out = np.zeros(batch.n_windows, dtype=np.float64)
+    for k in range(batch.n_windows):
+        v = batch.valid[k]
+        out[k] = count_butterflies_np(
+            np.stack([batch.edge_i[k][v], batch.edge_j[k][v]], axis=1))
+    return out
+
+
+# -- capacity-degenerate differential -----------------------------------------
+
+@pytest.mark.parametrize("align", [128, 8])
+def test_sampled_degenerate_matches_dense_on_adversarial(align):
+    """capacity >= every window's edge count: p = 1 and the sampled tier is
+    bit-identical to exact dense — including the duplicate-heavy window
+    (pack_windows dedupes; the reservoir never sees repeat lanes)."""
+    batch = batch_of(ADVERSARIAL.values())
+    want = WindowExecutor("dense", align=align).window_counts(batch)
+    got = WindowExecutor("sampled", align=align,
+                         capacity=4096).window_counts(batch)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, oracle_counts(batch))
+
+
+def test_sampled_zero_on_empty_windows():
+    got = WindowExecutor("sampled", capacity=16).window_counts(
+        empty_window_batch())
+    np.testing.assert_array_equal(got, np.zeros(2))
+
+
+def test_sampled_dynamic_degenerate_exact():
+    """capacity below the padded lane count but >= the window's *valid*
+    edges: the static shortcut cannot fire, the threefry path runs — and the
+    order-statistic cutoff still lands at p = 1, bit-identical to dense."""
+    edges = [(i, j) for i in range(10) for j in range(10)]  # 100 distinct
+    batch = batch_of([edges])
+    ex = WindowExecutor("sampled", align=128, capacity=100)
+    assert ex.plan(batch)[0].cap_e > 100  # the sampling path is live
+    np.testing.assert_array_equal(
+        ex.window_counts(batch),
+        WindowExecutor("dense", align=128).window_counts(batch))
+
+
+def test_sampled_count_edges_degenerate():
+    """The online single-window entry: degenerate capacity is exact, and
+    repeated calls stay exact as the internal uid sequence advances."""
+    ex = WindowExecutor("sampled", align=8, capacity=4096)
+    for name, edges in ADVERSARIAL.items():
+        e = np.asarray(edges, dtype=np.int64)
+        want = count_butterflies_np(e)
+        got = ex.count_edges(e[:, 0], e[:, 1])
+        assert got == want, name
+        assert ex.count_edges(e[:, 0], e[:, 1]) == want, name
+    assert ex.count_edges([], []) == 0.0
+
+
+# -- sampling regime: determinism, seed sensitivity ---------------------------
+
+def big_window_batch():
+    """Three windows far above a small reservoir capacity."""
+    return batch_of([rand_edges(60, 50, 700, seed=s) for s in (10, 11, 12)])
+
+
+def test_sampled_deterministic_and_seed_sensitive():
+    batch = big_window_batch()
+    a = WindowExecutor("sampled", capacity=64, seed=0).window_counts(batch)
+    b = WindowExecutor("sampled", capacity=64, seed=0).window_counts(batch)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.isfinite(a)) and np.all(a >= 0)
+    c = WindowExecutor("sampled", capacity=64, seed=1).window_counts(batch)
+    assert not np.array_equal(a, c)
+
+
+def test_run_sgrapp_accepts_sampled_tier():
+    s = synthetic_rating_stream(n_users=80, n_items=60, n_edges=1500, seed=6,
+                                temporal="uniform", n_unique=300)
+    wb = s.windowize(50)
+    ref = run_sgrapp(wb, 0.95, tier="dense")
+    res = run_sgrapp(wb, 0.95, tier="sampled")  # degenerate default capacity
+    np.testing.assert_array_equal(res.window_counts, ref.window_counts)
+    np.testing.assert_array_equal(res.estimates, ref.estimates)
+
+
+# -- budget router -------------------------------------------------------------
+
+def test_expected_mape_surrogate_shape():
+    assert expected_mape(64, 128, 0.7) == 0.0      # fits: exact
+    assert expected_mape(128, 128, 0.7) == 0.0
+    e1 = expected_mape(256, 128, 0.7)
+    e2 = expected_mape(4096, 128, 0.7)
+    assert 0.0 < e1 < e2                            # deeper rung, more error
+    # more reservoir at the same window size can only help
+    assert expected_mape(4096, 512, 0.7) < e2
+
+
+def test_memory_budget_routes_every_bucket_dense():
+    """Rungs within the budget run exact even at a tiny reservoir capacity:
+    sampling buys nothing a budget-sized exact window wouldn't give."""
+    batch = big_window_batch()
+    ex = WindowExecutor("sampled", capacity=16, memory_budget=10**6)
+    assert {ex.bucket_tier(b) for b in ex.plan(batch)} == {"dense"}
+    np.testing.assert_array_equal(
+        ex.window_counts(batch),
+        WindowExecutor("dense").window_counts(batch))
+
+
+def test_target_mape_falls_back_to_dense():
+    """A rung whose error surrogate blows the accuracy target must refuse to
+    sample — loose targets keep sampling, tight targets go exact."""
+    batch = big_window_batch()
+    loose = WindowExecutor("sampled", capacity=64, target_mape=1e9)
+    assert {loose.bucket_tier(b) for b in loose.plan(batch)} == {"sampled"}
+    tight = WindowExecutor("sampled", capacity=64, target_mape=1e-6)
+    assert {tight.bucket_tier(b) for b in tight.plan(batch)} == {"dense"}
+    np.testing.assert_array_equal(
+        tight.window_counts(batch),
+        WindowExecutor("dense").window_counts(batch))
+
+
+def test_mixed_routing_splits_on_memory_budget():
+    """One batch, both regimes: small windows under the budget go dense,
+    the big one samples."""
+    batch = batch_of([rand_edges(30, 30, 60, seed=20),
+                      rand_edges(60, 50, 700, seed=21)])
+    ex = WindowExecutor("sampled", align=8, capacity=64, memory_budget=128)
+    assert {ex.bucket_tier(b) for b in ex.plan(batch)} == {"dense", "sampled"}
+    got = ex.window_counts(batch)
+    assert np.all(np.isfinite(got)) and np.all(got >= 0)
+    # the dense-routed window is exact
+    want = oracle_counts(batch)
+    assert got[0] == want[0]
+
+
+# -- streaming engines: degenerate bit-identity + seed plumbing ----------------
+
+def make_stream(n=1200, seed=6):
+    return synthetic_rating_stream(n_users=80, n_items=60, n_edges=n,
+                                   seed=seed, temporal="uniform",
+                                   n_unique=max(2, n // 5))
+
+
+def push_all(eng, s, mb=33):
+    for a in range(0, len(s), mb):
+        eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb], s.edge_j[a:a + mb])
+    return eng.finalize()
+
+
+def test_engine_sampled_degenerate_matches_dense_engine():
+    s = make_stream()
+    ref = push_all(StreamingSGrapp(NT_W, 0.95, tier="dense"), s)
+    res = push_all(StreamingSGrapp(NT_W, 0.95, tier="sampled"), s)
+    np.testing.assert_array_equal(res.window_counts, ref.window_counts)
+    np.testing.assert_array_equal(res.estimates, ref.estimates)
+
+
+def sampled_exec():
+    # snap=0 matches the engines' own executor construction
+    return WindowExecutor("sampled", align=64, snap=0, capacity=96)
+
+
+def test_fleet_n1_sampled_bit_identity_with_real_sampling():
+    """N=1 fleet == dedicated engine under the sampled tier at a capacity
+    small enough that windows genuinely subsample."""
+    s = make_stream(n=1500, seed=9)
+    ref = push_all(StreamingSGrapp(NT_W, 0.95, executor=sampled_exec(),
+                                   flush_every=3, seed=7), s)
+    fleet = MultiStreamSGrapp(1, NT_W, 0.95, executor=sampled_exec(),
+                              flush_every=3, seed=7)
+    for a in range(0, len(s), 33):
+        fleet.push(0, s.tau[a:a + 33], s.edge_i[a:a + 33],
+                   s.edge_j[a:a + 33])
+    res = fleet.finalize()[0]
+    np.testing.assert_array_equal(res.window_counts, ref.window_counts)
+    np.testing.assert_array_equal(res.estimates, ref.estimates)
+
+
+def test_fleet_offsets_reservoir_seed_per_stream():
+    """Tenant s of a seed-k fleet draws the coins of a dedicated seed-(k+s)
+    engine — same stream pushed to both tenants, different counts."""
+    s = make_stream(n=1500, seed=9)
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95, executor=sampled_exec(),
+                              flush_every=3, seed=7)
+    for a in range(0, len(s), 33):
+        for sid in range(2):
+            fleet.push(sid, s.tau[a:a + 33], s.edge_i[a:a + 33],
+                       s.edge_j[a:a + 33])
+    res = fleet.finalize()
+    ded1 = push_all(StreamingSGrapp(NT_W, 0.95, executor=sampled_exec(),
+                                    flush_every=3, seed=8), s)
+    np.testing.assert_array_equal(res[1].window_counts, ded1.window_counts)
+    # identical stream, different per-tenant seeds: the coins moved
+    assert not np.array_equal(res[0].window_counts, res[1].window_counts)
+
+
+# -- guards: loud refusal before any state mutates -----------------------------
+
+def test_engine_rejects_multiset_with_sampled():
+    with pytest.raises(NotImplementedError, match="multiset"):
+        StreamingSGrapp(NT_W, 0.95, tier="sampled", dup_policy="multiset")
+    with pytest.raises(NotImplementedError, match="multiset"):
+        MultiStreamSGrapp(2, NT_W, 0.95, tier="sampled",
+                          dup_policy="multiset")
+
+
+def test_engine_rejects_delete_ops_without_mutating():
+    eng = StreamingSGrapp(NT_W, 0.95, tier="sampled", flush_every=100)
+    twin = StreamingSGrapp(NT_W, 0.95, tier="sampled", flush_every=100)
+    eng.push([0.0, 1.0], [0, 1], [0, 1])
+    twin.push([0.0, 1.0], [0, 1], [0, 1])
+    with pytest.raises(NotImplementedError, match="delete"):
+        eng.push([2.0], [0], [0], op=[1])
+    # the refused batch never reached the windowizer: both engines continue
+    # identically from here
+    t = np.arange(3.0, 60.0)
+    i = np.arange(57) % 9
+    j = np.arange(57) % 7
+    eng.push(t, i, j)
+    twin.push(t, i, j)
+    a, b = eng.finalize(), twin.finalize()
+    np.testing.assert_array_equal(a.estimates, b.estimates)
+
+
+def test_fleet_rejects_delete_ops():
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95, tier="sampled")
+    with pytest.raises(NotImplementedError, match="delet"):
+        fleet.push(0, [0.0], [1], [1], op=[1])
+    fleet.push(0, [0.0], [1], [1])  # inserts still fine
+
+
+def test_executor_rejects_multiset_batch():
+    e = np.asarray(ADVERSARIAL["dense_random"], dtype=np.int64)
+    batch = pack_windows([e], n_sgrs=np.array([len(e)]),
+                         cum_sgrs=np.array([len(e)]),
+                         window_end_tau=np.array([0.0]), dedupe=False,
+                         per_window_mult=[np.ones(len(e), np.int64)])
+    with pytest.raises(NotImplementedError, match="multiset"):
+        WindowExecutor("sampled").window_counts(batch)
+
+
+def test_executor_rejects_decrement():
+    ex = WindowExecutor("sampled")
+    e = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], dtype=np.int64)
+    with pytest.raises(NotImplementedError, match="decrement"):
+        ex.decrement_window_counts([e], [e[:1]], np.array([1.0]),
+                                   delta_frac=1.0)
+
+
+def test_sampled_knobs_validate_at_construction():
+    for bad in (0, -1, True, 2.5, "64"):
+        with pytest.raises(ValueError):
+            WindowExecutor("sampled", capacity=bad)
+    for bad_g in (0.0, 1.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            WindowExecutor("sampled", gamma=bad_g)
+    for bad_s in (1.5, True, "0"):
+        with pytest.raises(ValueError):
+            WindowExecutor("sampled", seed=bad_s)
+    for bad_mb in (0, -3, True, 1.5):
+        with pytest.raises(ValueError):
+            WindowExecutor("sampled", memory_budget=bad_mb)
+    for bad_t in (0.0, -0.1):
+        with pytest.raises(ValueError):
+            WindowExecutor("sampled", target_mape=bad_t)
+
+
+# -- sharded dispatch ----------------------------------------------------------
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_sharded_sampled_differential_subprocess():
+    """Sampled counts are bit-identical across device counts — both in the
+    real-sampling regime (capacity << window sizes; the per-window threefry
+    draw is shard-placement-independent) and degenerate-vs-dense."""
+    code = r"""
+import numpy as np
+from repro.core.executor import WindowExecutor
+from repro.streams import bipartite_pa_stream
+
+s = bipartite_pa_stream(2500, temporal="uniform", n_unique=600, seed=5)
+wb = s.windowize(40)
+assert wb.n_windows > 3
+ref = WindowExecutor("sampled", capacity=48).window_counts(wb)
+for dev in (2, 3):  # 3 never divides evenly -> padding lanes live
+    got = WindowExecutor("sampled", capacity=48,
+                         devices=dev).window_counts(wb)
+    np.testing.assert_array_equal(got, ref, err_msg=f"dev={dev}")
+dense = WindowExecutor("dense").window_counts(wb)
+got = WindowExecutor("sampled", capacity=10**6,
+                     devices=2).window_counts(wb)
+np.testing.assert_array_equal(got, dense)
+print("SHARDED_SAMPLED_OK")
+"""
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(REPO, "src"),
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                         + " --xla_force_host_platform_device_count=4"
+                         ).strip()}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=540, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARDED_SAMPLED_OK" in r.stdout
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+def test_sharded_sampled_matches_single_device_in_process():
+    s = bipartite_pa_stream(2000, temporal="uniform", n_unique=500, seed=8)
+    wb = s.windowize(40)
+    want = WindowExecutor("sampled", capacity=48).window_counts(wb)
+    got = WindowExecutor("sampled", capacity=48,
+                         devices=jax.device_count()).window_counts(wb)
+    np.testing.assert_array_equal(got, want)

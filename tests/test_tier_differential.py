@@ -33,7 +33,7 @@ from repro.core.sgrapp import run_sgrapp, window_exact_counts
 from repro.core.windows import WindowBatch, windowize
 from repro.streams import synthetic_rating_stream
 
-DEVICE_TIERS = ("dense", "tiled", "pallas", "sparse", "auto")
+DEVICE_TIERS = ("dense", "tiled", "pallas", "sparse", "auto", "sampled")
 
 
 # -- adversarial snapshot construction ----------------------------------------
