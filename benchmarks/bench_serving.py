@@ -1,0 +1,168 @@
+"""Serving-path benchmark: N concurrent tenants through the NDJSON server.
+
+An in-process load generator opens one real TCP connection per tenant and
+pushes that tenant's stream in fixed-size batches (each push waits for its
+ack — the serving protocol's synchronous client shape), all tenants
+concurrently on one event loop.  The server coalesces admitted pushes on
+its latency budget and drives the fleet engine off-loop, so the rows price
+the full production path: socket framing + admission + coalescing + one
+co-batched engine dispatch per cycle.
+
+Rows (us_per_call = total wall time / measured latency in us):
+
+- ``serving/aggregate_edges_per_s_n{N}`` — accepted edges / elapsed wall
+  seconds across all tenants (derived field),
+- ``serving/p50_push_ms_n{N}`` / ``serving/p99_push_ms_n{N}`` — engine
+  dispatch-cycle latency percentiles from the server's own histogram
+  (what ``/metrics`` exports).
+
+The run also asserts ``/healthz`` and ``/metrics`` respond with the
+documented shapes, so the CI leg that produces ``BENCH_serving.json``
+doubles as the serving smoke test.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+from repro.streams.config import EngineConfig
+from repro.streams.generators import bipartite_pa_stream
+from repro.streams.server import StreamServer
+from repro.streams.wire import normalize_records, records_to_json
+
+__all__ = ["run_serving"]
+
+
+async def _send(w, msg: dict) -> None:
+    w.write((json.dumps(msg, separators=(",", ":")) + "\n").encode())
+    await w.drain()
+
+
+async def _recv(r) -> dict:
+    line = await r.readline()
+    if not line:
+        raise ConnectionError("server closed")
+    return json.loads(line)
+
+
+async def _http_get(host: str, port: int, path: str) -> dict:
+    r, w = await asyncio.open_connection(host, port)
+    w.write(f"GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n".encode())
+    data = await r.read()
+    w.close()
+    head, body = data.split(b"\r\n\r\n", 1)
+    assert b"200" in head.split(b"\r\n", 1)[0], head
+    return json.loads(body)
+
+
+async def _drive_tenant(host: str, port: int, token: str, stream,
+                        batch: int) -> int:
+    """Push one tenant's whole stream, batch by batch, each awaiting its
+    ack; backpressure rejects back off and retry (the documented client
+    contract)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    await _send(writer, {"type": "hello", "token": token})
+    hello = await _recv(reader)
+    assert hello["type"] == "hello_ok", hello
+    accepted = 0
+    k = 0
+    while k < len(stream.tau):
+        sl = slice(k, k + batch)
+        rb = normalize_records(stream.tau[sl], stream.edge_i[sl],
+                               stream.edge_j[sl])
+        await _send(writer, {"type": "push", "records": records_to_json(rb)})
+        reply = await _recv(reader)
+        if reply["type"] == "ack":
+            accepted += reply["accepted"]
+            k += batch
+        elif reply.get("reason") == "backpressure":
+            await asyncio.sleep(0.002)
+        else:
+            raise AssertionError(f"unexpected push reply: {reply}")
+    writer.close()
+    return accepted
+
+
+async def _one_pass(streams, *, tier: str, batch: int,
+                    check_http: bool) -> tuple[float, dict]:
+    n = len(streams)
+    server = StreamServer(
+        nt_w=100, alpha0=0.95,
+        tenants={f"tenant{s}": s for s in range(n)},
+        config=EngineConfig(tier=tier), flush_ms=1.0, queue_limit=256)
+    await server.start()
+    t0 = time.perf_counter()
+    totals = await asyncio.gather(*[
+        _drive_tenant(server.host, server.port, f"tenant{s}", streams[s],
+                      batch)
+        for s in range(n)])
+    dt = time.perf_counter() - t0
+    if check_http:
+        health = await _http_get(server.host, server.http_port, "/healthz")
+        assert health["status"] == "ok" and health["n_streams"] == n, health
+        metrics = await _http_get(server.host, server.http_port, "/metrics")
+        agg = metrics["aggregate"]
+        assert agg["edges_accepted"] == sum(totals), agg
+        assert agg["push_latency_ms"]["count"] > 0, agg
+        assert set(metrics["tenants"]) == {str(s) for s in range(n)}, metrics
+    snap = server.metrics.snapshot()
+    await server.stop(finalize=True, checkpoint=False)
+    assert sum(totals) == sum(len(s.tau) for s in streams)
+    return dt, snap
+
+
+def run_serving(*, quick: bool = False, tier: str = "dense",
+                n_tenants: int = 4) -> list[tuple]:
+    n_edges = 2_000 if quick else 10_000
+    batch = 200
+    streams = [bipartite_pa_stream(n_edges, temporal="uniform",
+                                   n_unique=n_edges // 5, seed=11 + s)
+               for s in range(n_tenants)]
+
+    async def both_passes():
+        # warm pass compiles every bucket shape; the timed pass reuses the
+        # process-global jit cache, so it measures serving, not compilation
+        await _one_pass(streams, tier=tier, batch=batch, check_http=True)
+        return await _one_pass(streams, tier=tier, batch=batch,
+                               check_http=False)
+
+    dt, snap = asyncio.run(both_passes())
+    agg = snap["aggregate"]
+    lat = agg["push_latency_ms"]
+    total_edges = agg["edges_accepted"]
+    rows = [
+        (f"serving/aggregate_edges_per_s_n{n_tenants}", dt * 1e6,
+         f"{total_edges / dt:.0f} ({agg['pushes']} dispatch cycles, "
+         f"{agg['windows_closed']} windows, tier={tier})"),
+        (f"serving/p50_push_ms_n{n_tenants}", lat["p50"] * 1e3,
+         f"{lat['p50']:.2f}ms over {lat['count']} cycles"),
+        (f"serving/p99_push_ms_n{n_tenants}", lat["p99"] * 1e3,
+         f"{lat['p99']:.2f}ms (max {lat['max']:.2f}ms)"),
+    ]
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    from .artifacts import write_bench_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller per-tenant streams (CI smoke check)")
+    ap.add_argument("--tier", default="dense")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows = run_serving(quick=args.quick, tier=args.tier,
+                       n_tenants=args.tenants)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if not args.no_json:
+        write_bench_json("BENCH_serving.json", rows, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Minimal client for the multi-tenant streaming server (docs/serving.md).
+
+Start a server in one shell::
+
+    PYTHONPATH=src python -m repro.launch.serve_streams \
+        --nt-w 40 --tenant demo:0 --port 7315 --http-port 7316
+
+then push a synthetic stream and watch estimates arrive::
+
+    PYTHONPATH=src python examples/serve_streams_client.py \
+        --port 7315 --token demo
+
+The client speaks the NDJSON protocol directly with asyncio streams — no
+client library needed: hello (auth), push (batched records), subscribe
+(estimate feed), result (history so far).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+
+from repro.streams.generators import synthetic_rating_stream
+from repro.streams.wire import records_to_json, normalize_records
+
+
+async def send(writer: asyncio.StreamWriter, msg: dict) -> None:
+    writer.write((json.dumps(msg) + "\n").encode())
+    await writer.drain()
+
+
+async def recv(reader: asyncio.StreamReader) -> dict:
+    line = await reader.readline()
+    if not line:
+        raise ConnectionError("server closed the connection")
+    return json.loads(line)
+
+
+async def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--token", required=True)
+    ap.add_argument("--edges", type=int, default=4000)
+    ap.add_argument("--batch", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    reader, writer = await asyncio.open_connection(args.host, args.port)
+    await send(writer, {"type": "hello", "token": args.token})
+    hello = await recv(reader)
+    if hello.get("type") != "hello_ok":
+        raise SystemExit(f"auth failed: {hello}")
+    print(f"[client] authenticated as stream {hello['stream_id']} "
+          f"(nt_w={hello['nt_w']})")
+
+    # second connection subscribed to the estimate feed
+    sub_r, sub_w = await asyncio.open_connection(args.host, args.port)
+    await send(sub_w, {"type": "hello", "token": args.token})
+    await recv(sub_r)
+    await send(sub_w, {"type": "subscribe"})
+    await recv(sub_r)
+
+    async def print_estimates() -> None:
+        while True:
+            msg = await recv(sub_r)
+            if msg.get("type") == "estimate":
+                print(f"[client]   window {msg['window']:3d}: "
+                      f"estimate {msg['estimate']:12.1f}  "
+                      f"(count {msg['count']:.0f})")
+
+    feed = asyncio.create_task(print_estimates())
+
+    st = synthetic_rating_stream(n_users=500, n_items=300,
+                                 n_edges=args.edges, seed=args.seed)
+    accepted = 0
+    for k in range(0, len(st.tau), args.batch):
+        sl = slice(k, k + args.batch)
+        rb = normalize_records(st.tau[sl], st.edge_i[sl], st.edge_j[sl])
+        await send(writer, {"type": "push", "id": k,
+                            "records": records_to_json(rb)})
+        reply = await recv(reader)
+        if reply["type"] == "ack":
+            accepted += reply["accepted"]
+        elif reply["reason"] == "backpressure":
+            await asyncio.sleep(0.05)   # server queue full: back off, retry
+            continue
+        else:
+            print(f"[client] rejected: {reply}")
+
+    await send(writer, {"type": "result"})
+    res = await recv(reader)
+    await asyncio.sleep(0.1)   # let the feed drain
+    feed.cancel()
+    print(f"[client] pushed {accepted} edges, "
+          f"{len(res['estimates'])} windows estimated")
+    if res["estimates"]:
+        print(f"[client] latest estimate: {res['estimates'][-1]:.1f}")
+    writer.close()
+    sub_w.close()
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

@@ -17,18 +17,20 @@ import tempfile
 
 import numpy as np
 
-from repro.streams import StreamingSGrapp, bipartite_pa_stream
+from repro.streams import EngineConfig, StreamingSGrapp, bipartite_pa_stream
 from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
 NT_W = 120
 ALPHA0 = 0.95
 MICRO_BATCH = 256     # sgrs per push (a serving request's worth)
-FLUSH_EVERY = 4       # closed windows per executor dispatch
-TIER = os.environ.get("SGRAPP_TIER", "dense")
+CONFIG = EngineConfig(
+    tier=os.environ.get("SGRAPP_TIER", "dense"),
+    flush_every=4,    # closed windows per executor dispatch
+)
 
 
 def make_engine() -> StreamingSGrapp:
-    return StreamingSGrapp(NT_W, ALPHA0, tier=TIER, flush_every=FLUSH_EVERY)
+    return StreamingSGrapp(NT_W, ALPHA0, config=CONFIG)
 
 
 def process(stream, ckpt_dir, *, crash_after: int | None = None):

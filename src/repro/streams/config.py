@@ -1,0 +1,239 @@
+"""One validated config object for every streaming engine: ``EngineConfig``.
+
+`StreamingSGrapp` and `MultiStreamSGrapp` grew the same ~14 knobs (counting
+tier, flush batching, duplicate/delete semantics, sampling knobs, estimator
+band, device sharding) and each re-validated them with ~30 duplicated lines.
+:class:`EngineConfig` is now the single owner of those knobs and their
+validation: both engines, the serving front end
+(:mod:`repro.streams.server`), and checkpoints all share one frozen,
+serializable object.
+
+* Engines accept ``config=EngineConfig(...)``; the old per-knob keyword
+  arguments still work as a **deprecated compatibility shim** that builds
+  the config for you (and warns).  Mixing ``config=`` with legacy knob
+  kwargs is an error — one source of truth per engine.
+* ``state_dict()`` (schema v4) embeds ``config.to_json()``, so a checkpoint
+  is self-describing: ``StreamingSGrapp.from_state_dict`` /
+  ``MultiStreamSGrapp.from_state_dict`` rebuild an engine without the caller
+  re-supplying knobs.  ``devices`` / ``mesh`` are *deployment* properties —
+  they shard the same bit-identical computation — so they are deliberately
+  excluded from serialization and re-chosen per process.
+* :meth:`EngineConfig.make_executor` owns executor construction (engines
+  used to duplicate that too), including the ``executor=`` sharing path and
+  its conflict/compatibility checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["EngineConfig", "DUP_POLICIES", "resolve_engine_config"]
+
+# duplicate-edge policies: "distinct" is the paper's keep-first semantics;
+# "multiset" counts butterflies multiplicity-weighted — every
+# (insert - delete) net copy of an edge participates (PAPERS.md: "Counting
+# Butterflies over Streaming Bipartite Graphs with Duplicate Edges").
+# Lives here (not engine.py) so validation has no engine import;
+# repro.streams.engine re-exports it for compatibility.
+DUP_POLICIES = ("distinct", "multiset")
+
+# knobs that are part of the stream's *semantics or identity* and therefore
+# serialize into checkpoints; devices/mesh (pure deployment) are excluded
+_PORTABLE_FIELDS = (
+    "tier", "tol", "step", "flush_every", "drop_partial", "align",
+    "dup_policy", "on_missing_delete", "seed", "capacity", "gamma",
+    "memory_budget", "target_mape",
+)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Frozen, validated knob set for the streaming engines.
+
+    Parameters
+    ----------
+    tier : counting tier (``numpy | dense | tiled | pallas | sparse | auto
+        | sampled``) the engine builds its :class:`WindowExecutor` with.
+    tol, step : Algorithm 5 error band and alpha adaptation step.
+    flush_every : closed windows to accumulate before one bucketed executor
+        dispatch (fleet-wide total for `MultiStreamSGrapp`).
+    drop_partial : whether ``finalize()`` drops a trailing unfilled window.
+    align : edge-lane alignment of packed flush batches.
+    dup_policy : ``"distinct"`` (keep-first dedupe) or ``"multiset"``
+        (multiplicity-weighted counting).
+    on_missing_delete : ``"raise"`` or ``"ignore"`` for deletes of absent
+        edges.
+    seed : reservoir seed (sampled tier uid high bits; tenant ``s`` of a
+        fleet gets ``seed + s``).  Ignored by exact tiers.
+    capacity, gamma : sampled-tier reservoir size and admission ladder base.
+    memory_budget, target_mape : sampled-tier auto-routing budgets
+        (``None`` disables).
+    devices, mesh : shard each flush's window axis (mutually exclusive with
+        sharing a prebuilt ``executor=``; never serialized).
+    """
+
+    tier: str = "dense"
+    tol: float = 0.05
+    step: float = 0.005
+    flush_every: int = 32
+    drop_partial: bool = True
+    align: int = 64
+    dup_policy: str = "distinct"
+    on_missing_delete: str = "raise"
+    seed: int = 0
+    capacity: int = 8192
+    gamma: float = 0.7
+    memory_budget: int | None = None
+    target_mape: float | None = None
+    devices: object = None
+    mesh: object = None
+
+    def __post_init__(self):
+        # the ONE copy of the validation both engines used to duplicate
+        from repro.core.executor import TIERS
+        from repro.core.fleet import check_sampling_knobs
+
+        def pin(name, value):
+            object.__setattr__(self, name, value)
+
+        if self.tier not in TIERS:
+            raise ValueError(
+                f"tier must be one of {TIERS}, got {self.tier!r}")
+        pin("tol", float(self.tol))
+        pin("step", float(self.step))
+        if int(self.flush_every) < 1:
+            raise ValueError("flush_every must be >= 1")
+        pin("flush_every", int(self.flush_every))
+        pin("drop_partial", bool(self.drop_partial))
+        if int(self.align) < 1:
+            raise ValueError("align must be >= 1")
+        pin("align", int(self.align))
+        if self.dup_policy not in DUP_POLICIES:
+            raise ValueError(
+                f"dup_policy must be one of {DUP_POLICIES}, got "
+                f"{self.dup_policy!r}")
+        if self.on_missing_delete not in ("raise", "ignore"):
+            raise ValueError(
+                "on_missing_delete must be 'raise' or 'ignore', got "
+                f"{self.on_missing_delete!r}")
+        # sampling knobs validate unconditionally, as the executor does: a
+        # bad value should fail at construction, not on a later tier flip
+        check_sampling_knobs(self.capacity, self.gamma, self.seed)
+        pin("capacity", int(self.capacity))
+        pin("gamma", float(self.gamma))
+        pin("seed", int(self.seed))
+        if self.memory_budget is not None:
+            if (isinstance(self.memory_budget, bool)
+                    or not isinstance(self.memory_budget, (int, np.integer))
+                    or int(self.memory_budget) <= 0):
+                raise ValueError(
+                    f"memory_budget must be a positive int or None, "
+                    f"got {self.memory_budget!r}")
+            pin("memory_budget", int(self.memory_budget))
+        if self.target_mape is not None:
+            if not (float(self.target_mape) > 0.0):
+                raise ValueError(
+                    f"target_mape must be positive or None, "
+                    f"got {self.target_mape!r}")
+            pin("target_mape", float(self.target_mape))
+        if self.dup_policy == "multiset" and self.tier == "sampled":
+            raise NotImplementedError(
+                "sampled tier does not support dup_policy='multiset': the "
+                "subsample-and-scale identity assumes distinct edges; use "
+                "an exact tier for multiset streams")
+
+    # -- executor construction ----------------------------------------------
+
+    def make_executor(self, executor=None):
+        """Build the engine's :class:`WindowExecutor` — or validate and pass
+        through a prebuilt shared one.  ``snap=0`` because engine flushes see
+        the stream piecewise: bucket programs must compile at ladder rungs
+        and never re-trace at steady state (batch replay executors keep the
+        default cap snapping instead)."""
+        from repro.core.executor import WindowExecutor
+
+        if executor is not None:
+            if self.devices is not None or self.mesh is not None:
+                raise ValueError(
+                    "devices=/mesh= conflict with executor=; configure the "
+                    "executor's sharding at construction instead")
+            if self.dup_policy == "multiset" and executor.tier == "sampled":
+                raise NotImplementedError(
+                    "sampled tier does not support dup_policy='multiset': "
+                    "the subsample-and-scale identity assumes distinct "
+                    "edges; use an exact tier for multiset streams")
+            return executor
+        return WindowExecutor(
+            self.tier, align=self.align, snap=0,
+            capacity=self.capacity, gamma=self.gamma, seed=self.seed,
+            memory_budget=self.memory_budget, target_mape=self.target_mape,
+            devices=self.devices, mesh=self.mesh)
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> str:
+        """Portable JSON form (deterministic key order).  ``devices`` /
+        ``mesh`` are deployment-only and never serialized."""
+        return json.dumps(
+            {f: getattr(self, f) for f in _PORTABLE_FIELDS}, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "EngineConfig":
+        """Inverse of :meth:`to_json`.  Strict: an unknown field (schema
+        drift, corrupted checkpoint) raises instead of being dropped."""
+        obj = json.loads(payload)
+        if not isinstance(obj, dict):
+            raise ValueError(f"EngineConfig JSON must be an object, "
+                             f"got {type(obj).__name__}")
+        unknown = sorted(set(obj) - set(_PORTABLE_FIELDS))
+        if unknown:
+            raise ValueError(
+                f"EngineConfig JSON has unknown fields {unknown}")
+        return cls(**obj)
+
+    def replace(self, **changes) -> "EngineConfig":
+        """A copy with ``changes`` applied (re-validated)."""
+        return dataclasses.replace(self, **changes)
+
+
+# sentinel distinguishing "caller never passed this legacy kwarg" from any
+# real value (None is a real value for devices/mesh)
+_UNSET = object()
+
+
+def resolve_engine_config(config, legacy: dict) -> EngineConfig:
+    """The engines' compatibility shim: resolve ``config=`` vs the
+    deprecated per-knob kwargs into one validated :class:`EngineConfig`.
+
+    ``legacy`` maps knob name -> value-or-``_UNSET`` (the engine signatures
+    default every legacy knob to the sentinel).  Exactly one source wins:
+
+    * ``config=`` given, no legacy knobs: use it (the new API).
+    * legacy knobs only: build a config from them and emit a
+      ``DeprecationWarning`` naming the migration.
+    * both: ``ValueError`` — silently preferring either would surprise.
+    * neither: all defaults.
+    """
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if config is not None:
+        if not isinstance(config, EngineConfig):
+            raise TypeError(
+                f"config must be an EngineConfig, got "
+                f"{type(config).__name__}")
+        if passed:
+            raise ValueError(
+                f"config= conflicts with legacy engine kwargs "
+                f"{sorted(passed)}; set them on the EngineConfig instead")
+        return config
+    if passed:
+        warnings.warn(
+            "passing engine knobs as keyword arguments is deprecated; "
+            "build an EngineConfig and pass config= "
+            f"(got legacy kwargs {sorted(passed)})",
+            DeprecationWarning, stacklevel=3)
+        return EngineConfig(**passed)
+    return EngineConfig()

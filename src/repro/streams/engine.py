@@ -56,6 +56,12 @@ import numpy as np
 from repro.core.executor import WindowExecutor
 from repro.core.sgrapp import SGrappResult, estimator_step
 from repro.core.windows import pack_windows
+from repro.streams.config import (
+    DUP_POLICIES,
+    EngineConfig,
+    _UNSET,
+    resolve_engine_config,
+)
 from repro.streams.state import (
     StreamState,
     estimator_carry,
@@ -67,14 +73,12 @@ from repro.streams.state import (
 )
 
 __all__ = ["StreamingSGrapp", "STATE_DICT_VERSION", "DUP_POLICIES",
-           "migrate_state_dict_v1", "migrate_state_dict_v2"]
+           "EngineConfig", "config_to_bytes", "config_from_bytes",
+           "migrate_state_dict_v1", "migrate_state_dict_v2",
+           "migrate_state_dict_v3", "migrate_state_dict_to_latest"]
 
-# duplicate-edge policies: "distinct" is the paper's keep-first semantics
-# (today's behavior, now an explicit knob); "multiset" counts butterflies
-# multiplicity-weighted — every (insert - delete) net copy of an edge
-# participates (PAPERS.md: "Counting Butterflies over Streaming Bipartite
-# Graphs with Duplicate Edges").
-DUP_POLICIES = ("distinct", "multiset")
+# DUP_POLICIES moved to repro.streams.config (the knob's validator lives on
+# EngineConfig now); the import above keeps this module's historical export.
 
 # state_dict schema version: restore() rejects dicts whose key set drifted
 # from their version's schema (missing or unknown keys) and any version it
@@ -86,9 +90,16 @@ DUP_POLICIES = ("distinct", "multiset")
 # v3 = v2 + the per-stream reservoir seed ("res_seed") behind the sampled
 # executor tier's window uids; v2 checkpoints migrate forward on restore
 # (:func:`migrate_state_dict_v2` — pre-sampled engines behaved as seed=0).
-# MultiStreamSGrapp reuses the same field names with a stream axis (see
-# repro.streams.multi).
-STATE_DICT_VERSION = 3
+# v4 = v3 + the engine identity the dict used to omit: "config" (the
+# EngineConfig as UTF-8 JSON bytes — a uint8 lane, so checkpoint templates
+# never truncate it to a shorter fixed-width string dtype) and "alpha0"
+# (the constructor's initial exponent; carry_alpha only has the *adapted*
+# value).  v3 checkpoints migrate forward (:func:`migrate_state_dict_v3` —
+# empty config bytes mark "knobs unknown, constructor must supply them").
+# A v4 checkpoint is self-describing: see :meth:`StreamingSGrapp.
+# from_state_dict`.  MultiStreamSGrapp reuses the same field names with a
+# stream axis (see repro.streams.multi).
+STATE_DICT_VERSION = 4
 
 _STATE_DICT_KEYS_V1 = frozenset({
     "version", "nt_w", "buf_i", "buf_j", "buf_last_tau", "buf_len", "uniq",
@@ -96,9 +107,27 @@ _STATE_DICT_KEYS_V1 = frozenset({
     "end_tau", "carry_cum", "carry_alpha", "carry_err", "carry_sup",
 })
 _STATE_DICT_KEYS_V2 = _STATE_DICT_KEYS_V1 | {"buf_op"}
-_STATE_DICT_KEYS = _STATE_DICT_KEYS_V2 | {"res_seed"}
+_STATE_DICT_KEYS_V3 = _STATE_DICT_KEYS_V2 | {"res_seed"}
+_STATE_DICT_KEYS = _STATE_DICT_KEYS_V3 | {"config", "alpha0"}
 _STATE_DICT_SCHEMAS = {1: _STATE_DICT_KEYS_V1, 2: _STATE_DICT_KEYS_V2,
-                       3: _STATE_DICT_KEYS}
+                       3: _STATE_DICT_KEYS_V3, 4: _STATE_DICT_KEYS}
+
+
+def config_to_bytes(config: EngineConfig) -> np.ndarray:
+    """The checkpoint encoding of an :class:`EngineConfig`: UTF-8 JSON as a
+    uint8 lane.  Bytes, not a numpy unicode scalar, because checkpoint
+    restore casts loaded leaves to the *template's* dtype — a fixed-width
+    ``<U`` dtype from a fresh engine would silently truncate a longer saved
+    config."""
+    return np.frombuffer(config.to_json().encode("utf-8"),
+                         dtype=np.uint8).copy()
+
+
+def config_from_bytes(lane) -> str:
+    """Inverse of :func:`config_to_bytes`; empty lane -> empty string (a
+    migrated pre-v4 checkpoint that carries no config)."""
+    lane = np.asarray(lane, dtype=np.uint8)
+    return bytes(lane.tobytes()).decode("utf-8") if lane.size else ""
 
 
 def advance_estimator(step_fn, carry, truths, new_counts, new_cums,
@@ -214,6 +243,43 @@ def migrate_state_dict_v2(state: dict) -> dict:
     return out
 
 
+def migrate_state_dict_v3(state: dict) -> dict:
+    """v3 -> v4 checkpoint migration, shared by both engines: v3 dicts
+    carried stream state only, so the migrated engine identity is partial —
+    ``config`` becomes the *empty* byte lane (knobs unknown; the restoring
+    constructor supplies them, exactly as every pre-v4 restore did) and
+    ``alpha0`` is back-filled from the adapted ``carry_alpha`` (exact for
+    unsupervised streams, where alpha never moves; the closest available
+    value for supervised ones — restore() ignores it, and
+    ``from_state_dict`` on a migrated dict uses it only as the new
+    constructor's starting exponent).  Dispatches single vs fleet schema on
+    the ``n_streams`` key like :func:`migrate_state_dict_v2`.  Returns a new
+    dict; the input is not mutated."""
+    out = dict(state)
+    out["config"] = np.zeros(0, dtype=np.uint8)
+    if "n_streams" in state:
+        out["alpha0"] = np.asarray(state["carry_alpha"], dtype=np.float64)
+    else:
+        out["alpha0"] = np.float64(np.asarray(state["carry_alpha"]))
+    out["version"] = np.int64(4)
+    return out
+
+
+def migrate_state_dict_to_latest(state: dict, version: int) -> dict:
+    """Run the forward migration chain from ``version`` to
+    :data:`STATE_DICT_VERSION` — the one place the chain is spelled out,
+    shared by both engines' ``restore`` / ``from_state_dict``."""
+    if version == 1:
+        state = migrate_state_dict_v1(state)
+        version = 2
+    if version == 2:
+        state = migrate_state_dict_v2(state)
+        version = 3
+    if version == 3:
+        state = migrate_state_dict_v3(state)
+    return state
+
+
 class StreamingSGrapp:
     """Online sGrapp / sGrapp-x over a pushed sgr stream.
 
@@ -228,6 +294,14 @@ class StreamingSGrapp:
         freezes after — i.e. ``truths`` *is* the supervised prefix.  With
         ``truths=None`` alpha never moves and the engine is plain sGrapp
         (Algorithm 4).
+    config : an :class:`~repro.streams.config.EngineConfig` carrying every
+        knob below (tier, flush batching, duplicate/delete semantics,
+        sampling knobs, tol/step, devices/mesh).  The preferred API: the
+        per-knob kwargs below remain as a **deprecated** compatibility shim
+        that builds a config (with a ``DeprecationWarning``), and mixing
+        ``config=`` with them raises ``ValueError``.  ``executor=`` and
+        ``truths=`` stay engine-level (a shared object / per-stream data,
+        not portable knobs).
     tol, step : Algorithm 5 band and adaptation step.
     tier : counting tier (numpy | dense | tiled | pallas | sparse |
         auto), or pass a prebuilt ``executor=`` to share one across
@@ -262,56 +336,48 @@ class StreamingSGrapp:
     """
 
     def __init__(self, nt_w: int, alpha0: float, *, truths=None,
-                 tol: float = 0.05, step: float = 0.005,
-                 tier: str = "dense", executor: WindowExecutor | None = None,
-                 devices=None, mesh=None, flush_every: int = 32,
-                 drop_partial: bool = True, align: int = 64,
-                 dup_policy: str = "distinct",
-                 on_missing_delete: str = "raise", seed: int = 0):
+                 config: EngineConfig | None = None,
+                 executor: WindowExecutor | None = None,
+                 tol=_UNSET, step=_UNSET, tier=_UNSET,
+                 devices=_UNSET, mesh=_UNSET, flush_every=_UNSET,
+                 drop_partial=_UNSET, align=_UNSET, dup_policy=_UNSET,
+                 on_missing_delete=_UNSET, seed=_UNSET):
         if nt_w <= 0:
             raise ValueError("nt_w must be positive")
-        if flush_every < 1:
-            raise ValueError("flush_every must be >= 1")
-        if dup_policy not in DUP_POLICIES:
-            raise ValueError(
-                f"dup_policy must be one of {DUP_POLICIES}, got "
-                f"{dup_policy!r}")
-        if on_missing_delete not in ("raise", "ignore"):
-            raise ValueError(
-                "on_missing_delete must be 'raise' or 'ignore', got "
-                f"{on_missing_delete!r}")
-        if executor is not None and (devices is not None or mesh is not None):
-            raise ValueError(
-                "devices=/mesh= conflict with executor=; configure the "
-                "executor's sharding at construction instead")
+        # all knob validation lives on EngineConfig (shared with the fleet
+        # engine and the serving front end); the per-knob kwargs are a
+        # deprecated shim that builds a config — see resolve_engine_config
+        cfg = resolve_engine_config(config, dict(
+            tol=tol, step=step, tier=tier, devices=devices, mesh=mesh,
+            flush_every=flush_every, drop_partial=drop_partial, align=align,
+            dup_policy=dup_policy, on_missing_delete=on_missing_delete,
+            seed=seed))
+        self.config = cfg
         self.nt_w = int(nt_w)
         self.alpha0 = float(alpha0)
         self.truths = (None if truths is None
                        else np.asarray(truths, dtype=np.float64))
-        self.tol = float(tol)
-        self.step = float(step)
-        self.flush_every = int(flush_every)
-        self.drop_partial = bool(drop_partial)
-        self.align = int(align)
-        self.dup_policy = dup_policy
-        self.on_missing_delete = on_missing_delete
-        # snap=0: a flush sees the stream piecewise, so bucket programs
-        # compile at ladder rungs — stable shapes, no steady-state re-trace
-        # (test_flush_reuses_compiled_buckets pins this); batch replay
-        # executors keep the default cap snapping instead
-        self.executor = executor if executor is not None else WindowExecutor(
-            tier, align=align, snap=0, devices=devices, mesh=mesh)
-        if dup_policy == "multiset" and self.executor.tier == "sampled":
-            raise NotImplementedError(
-                "sampled tier does not support dup_policy='multiset': the "
-                "subsample-and-scale identity assumes distinct edges; use "
-                "an exact tier for multiset streams")
-        self._step_fn = estimator_step(self.tol, self.step)
+        # flat knob attributes kept for compatibility (and readability at
+        # call sites); cfg is the source of truth
+        self.tol = cfg.tol
+        self.step = cfg.step
+        self.flush_every = cfg.flush_every
+        self.drop_partial = cfg.drop_partial
+        self.align = cfg.align
+        self.dup_policy = cfg.dup_policy
+        self.on_missing_delete = cfg.on_missing_delete
+        self.seed = cfg.seed
+        # snap=0 inside make_executor: a flush sees the stream piecewise, so
+        # bucket programs compile at ladder rungs — stable shapes, no
+        # steady-state re-trace (test_flush_reuses_compiled_buckets pins
+        # this); batch replay executors keep the default cap snapping instead
+        self.executor = cfg.make_executor(executor)
+        self._step_fn = estimator_step(cfg.tol, cfg.step)
 
         # -- the whole per-stream state: a one-stream StreamState pytree
         # (seed offsets res_seed — validated there before any state exists)
-        self._state: StreamState = stream_state_init(1, alpha0, seed=seed)
-        self.seed = int(seed)
+        self._state: StreamState = stream_state_init(1, alpha0,
+                                                     seed=cfg.seed)
 
         # -- closed-but-uncounted windows awaiting a flush, as
         # (edge_i, edge_j, ops, n_sgrs, end_tau) with ops=None marking an
@@ -498,6 +564,11 @@ class StreamingSGrapp:
             "carry_err": np.float32(st.carry_err[0]),
             "carry_sup": np.bool_(st.carry_sup[0]),
             "res_seed": np.int64(st.res_seed[0]),
+            # v4: the engine's identity rides in the checkpoint, so
+            # from_state_dict can rebuild without the caller re-supplying
+            # knobs (devices/mesh excluded — deployment, not identity)
+            "config": config_to_bytes(self.config),
+            "alpha0": np.float64(self.alpha0),
         }
 
     def restore(self, state: dict) -> "StreamingSGrapp":
@@ -509,11 +580,7 @@ class StreamingSGrapp:
         bit-identically to one that never checkpointed."""
         version = check_state_dict_keys(state, _STATE_DICT_SCHEMAS,
                                         schema="StreamingSGrapp")
-        if version == 1:
-            state = migrate_state_dict_v1(state)
-            version = 2
-        if version == 2:
-            state = migrate_state_dict_v2(state)
+        state = migrate_state_dict_to_latest(state, version)
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine nt_w={self.nt_w}")
@@ -544,3 +611,30 @@ class StreamingSGrapp:
         self._end_tau = [float(t) for t in np.asarray(state["end_tau"])]
         self._pending = []
         return self
+
+    @classmethod
+    def from_state_dict(cls, state: dict, *, truths=None,
+                        config: EngineConfig | None = None,
+                        executor: WindowExecutor | None = None
+                        ) -> "StreamingSGrapp":
+        """Rebuild an engine from a self-describing (v4) :meth:`state_dict`
+        alone: ``nt_w``, ``alpha0`` and the embedded :class:`EngineConfig`
+        all come from the dict.  Pass ``config=`` to override the embedded
+        one (e.g. to re-shard on different hardware — remember devices/mesh
+        never serialize), ``truths=`` / ``executor=`` as at construction.
+        A pre-v4 checkpoint (no embedded config) raises ``ValueError`` —
+        construct the engine explicitly and call :meth:`restore` instead."""
+        version = check_state_dict_keys(state, _STATE_DICT_SCHEMAS,
+                                        schema="StreamingSGrapp")
+        state = migrate_state_dict_to_latest(state, version)
+        if config is None:
+            payload = config_from_bytes(state["config"])
+            if not payload:
+                raise ValueError(
+                    "checkpoint carries no EngineConfig (pre-v4 schema "
+                    "migrated forward): construct the engine explicitly "
+                    "and call restore(), or pass config=")
+            config = EngineConfig.from_json(payload)
+        eng = cls(int(state["nt_w"]), float(state["alpha0"]), truths=truths,
+                  config=config, executor=executor)
+        return eng.restore(state)

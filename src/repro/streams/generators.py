@@ -18,6 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from .stream import SgrStream
+from .wire import as_columns
 
 __all__ = ["ba_unipartite_edges", "ba_bipartite_stream", "assign_timestamps",
            "synthetic_rating_stream", "bipartite_pa_stream",
@@ -221,7 +222,10 @@ def dynamic_sgr_stream(
             live[e] = live.get(e, 0) + 1
             op = 0
         taus[k], ei[k], ej[k], ops[k] = t, e[0], e[1], op
-    return taus, ei, ej, ops
+    # canonicalize through the shared wire schema — generators return the
+    # same column convention push()/the oracle consume (an op lane is always
+    # materialized here so consumers can slice it uniformly)
+    return as_columns(taus, ei, ej, ops)
 
 
 def synthetic_rating_stream(

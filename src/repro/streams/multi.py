@@ -57,13 +57,14 @@ import numpy as np
 from repro.core.executor import WindowExecutor
 from repro.core.sgrapp import SGrappResult, estimator_step
 from repro.core.windows import pack_windows
+from repro.streams.config import _UNSET, EngineConfig, resolve_engine_config
 from repro.streams.engine import (
-    DUP_POLICIES,
     STATE_DICT_VERSION,
     advance_estimator,
     check_state_dict_keys,
-    migrate_state_dict_v1,
-    migrate_state_dict_v2,
+    config_from_bytes,
+    config_to_bytes,
+    migrate_state_dict_to_latest,
     resolve_pending_window,
 )
 from repro.streams.state import (
@@ -80,7 +81,10 @@ __all__ = ["MultiStreamSGrapp"]
 # v1 = insert-only fleet schema; v2 adds the flat "buf_op" lane (aligned
 # element-for-element with "buf_i" via the same "buf_offsets"), migrated
 # forward from v1 on restore exactly like the single-stream engine; v3 adds
-# the per-stream "res_seed" lane (sampled-tier reservoir identity).
+# the per-stream "res_seed" lane (sampled-tier reservoir identity); v4 adds
+# the fleet identity — "config" (EngineConfig JSON as uint8 bytes) and
+# "alpha0" (the constructor's per-stream initial exponents, [N] float64) —
+# so from_state_dict can rebuild the fleet from the checkpoint alone.
 _MULTI_STATE_DICT_KEYS_V1 = frozenset({
     "version", "n_streams", "nt_w", "buf_i", "buf_j", "buf_offsets",
     "buf_last_tau", "buf_len", "uniq", "last_tau", "total_sgrs", "finalized",
@@ -88,10 +92,12 @@ _MULTI_STATE_DICT_KEYS_V1 = frozenset({
     "carry_cum", "carry_alpha", "carry_err", "carry_sup",
 })
 _MULTI_STATE_DICT_KEYS_V2 = _MULTI_STATE_DICT_KEYS_V1 | {"buf_op"}
-_MULTI_STATE_DICT_KEYS = _MULTI_STATE_DICT_KEYS_V2 | {"res_seed"}
+_MULTI_STATE_DICT_KEYS_V3 = _MULTI_STATE_DICT_KEYS_V2 | {"res_seed"}
+_MULTI_STATE_DICT_KEYS = _MULTI_STATE_DICT_KEYS_V3 | {"config", "alpha0"}
 _MULTI_STATE_DICT_SCHEMAS = {1: _MULTI_STATE_DICT_KEYS_V1,
                              2: _MULTI_STATE_DICT_KEYS_V2,
-                             3: _MULTI_STATE_DICT_KEYS}
+                             3: _MULTI_STATE_DICT_KEYS_V3,
+                             4: _MULTI_STATE_DICT_KEYS}
 
 
 def _ragged_concat(parts: list[np.ndarray], dtype) -> tuple[np.ndarray, np.ndarray]:
@@ -117,6 +123,10 @@ class MultiStreamSGrapp:
         ``n_streams`` sequence whose entry s is that tenant's cumulative
         ground-truth prefix (or ``None`` for an unsupervised tenant) —
         exactly the single-stream engine's ``truths`` per tenant.
+    config : an :class:`~repro.streams.config.EngineConfig` carrying every
+        shared knob below — the preferred API, exactly as the single-stream
+        engine: per-knob kwargs remain a deprecated shim (DeprecationWarning)
+        and mixing them with ``config=`` raises.
     tol, step : Algorithm 5 band and adaptation step (shared).
     tier / executor / devices / mesh : the shared counting backend, as
         :class:`~repro.streams.engine.StreamingSGrapp` — ONE executor
@@ -137,60 +147,61 @@ class MultiStreamSGrapp:
     """
 
     def __init__(self, n_streams: int, nt_w: int, alpha0, *, truths=None,
-                 tol: float = 0.05, step: float = 0.005,
-                 tier: str = "dense", executor: WindowExecutor | None = None,
-                 devices=None, mesh=None, flush_every: int = 32,
-                 drop_partial: bool = True, align: int = 64,
-                 dup_policy: str = "distinct",
-                 on_missing_delete: str = "raise", seed: int = 0):
+                 config: EngineConfig | None = None,
+                 executor: WindowExecutor | None = None,
+                 tol=_UNSET, step=_UNSET, tier=_UNSET,
+                 devices=_UNSET, mesh=_UNSET, flush_every=_UNSET,
+                 drop_partial=_UNSET, align=_UNSET, dup_policy=_UNSET,
+                 on_missing_delete=_UNSET, seed=_UNSET):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if nt_w <= 0:
             raise ValueError("nt_w must be positive")
-        if flush_every < 1:
-            raise ValueError("flush_every must be >= 1")
-        if dup_policy not in DUP_POLICIES:
-            raise ValueError(
-                f"dup_policy must be one of {DUP_POLICIES}, got "
-                f"{dup_policy!r}")
-        if on_missing_delete not in ("raise", "ignore"):
-            raise ValueError(
-                "on_missing_delete must be 'raise' or 'ignore', got "
-                f"{on_missing_delete!r}")
-        if executor is not None and (devices is not None or mesh is not None):
-            raise ValueError(
-                "devices=/mesh= conflict with executor=; configure the "
-                "executor's sharding at construction instead")
+        # knob validation lives on EngineConfig, shared verbatim with the
+        # single-stream engine; per-knob kwargs are the deprecated shim
+        cfg = resolve_engine_config(config, dict(
+            tol=tol, step=step, tier=tier, devices=devices, mesh=mesh,
+            flush_every=flush_every, drop_partial=drop_partial, align=align,
+            dup_policy=dup_policy, on_missing_delete=on_missing_delete,
+            seed=seed))
+        self.config = cfg
         if truths is not None and len(truths) != n_streams:
             raise ValueError(
                 f"truths must have one entry per stream ({n_streams}), "
                 f"got {len(truths)}")
         self.nt_w = int(nt_w)
-        self.alpha0 = alpha0
+        # coerce like the single-stream engine (scalar -> float) — and a
+        # per-stream sequence -> list of floats, length-checked; a numpy
+        # float32 or a [N] array no longer leaks through unnormalized
+        if np.ndim(alpha0) == 0:
+            self.alpha0: float | list[float] = float(alpha0)
+        else:
+            alphas = [float(a) for a in np.asarray(alpha0).ravel()]
+            if len(alphas) != n_streams:
+                raise ValueError(
+                    f"alpha0 must be a scalar or one entry per stream "
+                    f"({n_streams}), got {len(alphas)}")
+            self.alpha0 = alphas
         self.truths = (None if truths is None else
                        [None if t is None else np.asarray(t, dtype=np.float64)
                         for t in truths])
-        self.tol = float(tol)
-        self.step = float(step)
-        self.flush_every = int(flush_every)
-        self.drop_partial = bool(drop_partial)
-        self.align = int(align)
-        self.dup_policy = dup_policy
-        self.on_missing_delete = on_missing_delete
-        # snap=0 for the same reason as the single-stream engine: flushes
-        # see the streams piecewise, bucket programs must compile at ladder
-        # rungs and never re-trace at steady state
-        self.executor = executor if executor is not None else WindowExecutor(
-            tier, align=align, snap=0, devices=devices, mesh=mesh)
-        if dup_policy == "multiset" and self.executor.tier == "sampled":
-            raise NotImplementedError(
-                "the sampled tier does not support dup_policy='multiset': "
-                "reservoir scaling assumes distinct-edge counting")
-        self._step_fn = estimator_step(self.tol, self.step)
-        self.seed = int(seed)
+        self.tol = cfg.tol
+        self.step = cfg.step
+        self.flush_every = cfg.flush_every
+        self.drop_partial = cfg.drop_partial
+        self.align = cfg.align
+        self.dup_policy = cfg.dup_policy
+        self.on_missing_delete = cfg.on_missing_delete
+        self.seed = cfg.seed
+        # snap=0 inside make_executor, for the same reason as the single-
+        # stream engine: flushes see the streams piecewise, bucket programs
+        # must compile at ladder rungs and never re-trace at steady state
+        self.executor = cfg.make_executor(executor)
+        self._step_fn = estimator_step(cfg.tol, cfg.step)
 
         n = int(n_streams)
-        self._state: StreamState = stream_state_init(n, alpha0, seed=seed)
+        self._state: StreamState = stream_state_init(n, self.alpha0,
+                                                     seed=cfg.seed)
         # per-stream closed-but-uncounted windows, in close order; the set
         # tracks which streams have any, so flush work scales with pending
         # tenants, never with fleet size
@@ -236,6 +247,29 @@ class MultiStreamSGrapp:
     def cum_sgrs(self, stream_id: int) -> int:
         """Tenant's |E|: total sgrs in its counted windows."""
         return int(self._state.total_sgrs[self._check_stream(stream_id)])
+
+    def n_counted(self, stream_id: int) -> int:
+        """Windows already counted (flushed) for one tenant — the length of
+        its materialized history, excluding pending closed windows."""
+        return len(self._counts[self._check_stream(stream_id)])
+
+    def history(self, stream_id: int, start: int = 0) -> dict:
+        """One tenant's counted-window history from window index ``start``
+        (no flush — pending windows stay pending), as plain-Python parallel
+        lists: ``window`` (indices), ``count``, ``estimate``, ``cum_sgrs``,
+        ``end_tau``.  The serving front end streams estimate updates to
+        subscribers by diffing ``n_counted`` and reading the new slice
+        through this accessor, so the private history lists never leak."""
+        s = self._check_stream(stream_id)
+        if start < 0:
+            raise ValueError(f"start must be >= 0, got {start}")
+        return {
+            "window": list(range(start, len(self._counts[s]))),
+            "count": [float(c) for c in self._counts[s][start:]],
+            "estimate": [float(e) for e in self._estimates[s][start:]],
+            "cum_sgrs": [int(c) for c in self._cum_sgrs[s][start:]],
+            "end_tau": [float(t) for t in self._end_tau[s][start:]],
+        }
 
     def _check_stream(self, stream_id) -> int:
         s = int(stream_id)
@@ -359,20 +393,33 @@ class MultiStreamSGrapp:
             off += n_new
         return len(per_edges)
 
+    def _close_tail(self, s: int) -> None:
+        if self._state.finalized[s]:
+            return
+        tail = windowizer_close_tail(self._state, s, self.nt_w,
+                                     drop_partial=self.drop_partial)
+        if tail is not None:
+            _, ei, ej, ops, m, end_tau = tail
+            self._pending[s].append((ei, ej, ops, m, end_tau))
+            self._pending_streams.add(s)
+            self._n_pending_total += 1
+
     def finalize(self) -> list[SGrappResult]:
         """End every stream: close trailing windows (kept iff the quota
         filled, else per ``drop_partial``), flush the fleet, and return one
         :class:`SGrappResult` per tenant.  Further ``push`` calls raise."""
         for s in range(self.n_streams):
-            if not self._state.finalized[s]:
-                tail = windowizer_close_tail(self._state, s, self.nt_w,
-                                             drop_partial=self.drop_partial)
-                if tail is not None:
-                    _, ei, ej, ops, m, end_tau = tail
-                    self._pending[s].append((ei, ej, ops, m, end_tau))
-                    self._pending_streams.add(s)
-                    self._n_pending_total += 1
+            self._close_tail(s)
         return self.results()
+
+    def finalize_stream(self, stream_id: int) -> SGrappResult:
+        """End ONE tenant's stream (its trailing window closes per
+        ``drop_partial`` and further pushes to it raise) without touching
+        the other tenants — the serving front end's per-tenant end-of-
+        stream.  Bit-identical to a dedicated engine's ``finalize()``."""
+        s = self._check_stream(stream_id)
+        self._close_tail(s)
+        return self.result(s)
 
     def result(self, stream_id: int) -> SGrappResult:
         """One tenant's estimate so far (flushes the fleet first).  Field-
@@ -437,6 +484,10 @@ class MultiStreamSGrapp:
             "carry_err": st.carry_err.copy(),
             "carry_sup": st.carry_sup.copy(),
             "res_seed": st.res_seed.copy(),
+            # v4: fleet identity (see the single-stream engine's schema doc)
+            "config": config_to_bytes(self.config),
+            "alpha0": np.broadcast_to(
+                np.asarray(self.alpha0, dtype=np.float64), (n,)).copy(),
         }
 
     def restore(self, state: dict) -> "MultiStreamSGrapp":
@@ -447,11 +498,7 @@ class MultiStreamSGrapp:
         tenant bit-identically."""
         version = check_state_dict_keys(state, _MULTI_STATE_DICT_SCHEMAS,
                                         schema="MultiStreamSGrapp")
-        if version == 1:
-            state = migrate_state_dict_v1(state)
-            version = 2
-        if version == 2:
-            state = migrate_state_dict_v2(state)
+        state = migrate_state_dict_to_latest(state, version)
         if int(state["nt_w"]) != self.nt_w:
             raise ValueError(
                 f"checkpoint nt_w={int(state['nt_w'])} != engine "
@@ -503,3 +550,31 @@ class MultiStreamSGrapp:
         self._pending_streams = set()
         self._n_pending_total = 0
         return self
+
+    @classmethod
+    def from_state_dict(cls, state: dict, *, truths=None,
+                        config: EngineConfig | None = None,
+                        executor: WindowExecutor | None = None
+                        ) -> "MultiStreamSGrapp":
+        """Rebuild a fleet from a self-describing (v4) :meth:`state_dict`
+        alone: ``n_streams``, ``nt_w``, per-stream ``alpha0`` and the
+        embedded :class:`EngineConfig` all come from the dict.  ``config=``
+        overrides the embedded one (devices/mesh never serialize, so
+        re-sharding happens here); a pre-v4 checkpoint raises ``ValueError``
+        — construct explicitly and :meth:`restore` instead."""
+        version = check_state_dict_keys(state, _MULTI_STATE_DICT_SCHEMAS,
+                                        schema="MultiStreamSGrapp")
+        state = migrate_state_dict_to_latest(state, version)
+        if config is None:
+            payload = config_from_bytes(state["config"])
+            if not payload:
+                raise ValueError(
+                    "checkpoint carries no EngineConfig (pre-v4 schema "
+                    "migrated forward): construct the fleet explicitly "
+                    "and call restore(), or pass config=")
+            config = EngineConfig.from_json(payload)
+        alpha0 = [float(a) for a in np.asarray(state["alpha0"],
+                                               dtype=np.float64)]
+        fleet = cls(int(state["n_streams"]), int(state["nt_w"]), alpha0,
+                    truths=truths, config=config, executor=executor)
+        return fleet.restore(state)

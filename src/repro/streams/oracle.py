@@ -37,7 +37,7 @@ from repro.core.butterfly import (
     count_butterflies_multiset_np,
     count_butterflies_np,
 )
-from repro.streams.state import OP_DELETE, OP_INSERT
+from repro.streams.wire import OP_DELETE, OP_INSERT, normalize_records
 
 __all__ = ["OracleWindow", "replay_dynamic", "oracle_window_counts",
            "OP_INSERT", "OP_DELETE"]
@@ -72,13 +72,11 @@ def replay_dynamic(tau, edge_i, edge_j, op=None, *, nt_w: int,
         raise ValueError(
             "on_missing_delete must be 'raise' or 'ignore', got "
             f"{on_missing_delete!r}")
-    tau = np.atleast_1d(np.asarray(tau, dtype=np.float64))
-    ei = np.atleast_1d(np.asarray(edge_i, dtype=np.int64))
-    ej = np.atleast_1d(np.asarray(edge_j, dtype=np.int64))
-    ops = (np.zeros(tau.shape[0], dtype=np.int64) if op is None
-           else np.atleast_1d(np.asarray(op, dtype=np.int64)))
-    if not (tau.shape == ei.shape == ej.shape == ops.shape and tau.ndim == 1):
-        raise ValueError("tau/edge_i/edge_j/op must be equal-length 1-D")
+    # shared wire normalization (shape/dtype/op-range) — the oracle stays
+    # independent of the engine's *windowizer*, not of the wire schema
+    rb = normalize_records(tau, edge_i, edge_j, op=op)
+    tau, ei, ej = rb.tau, rb.edge_i, rb.edge_j
+    ops = (np.zeros(rb.n, dtype=np.int64) if rb.op is None else rb.op)
 
     windows: list[OracleWindow] = []
     ledger: dict[tuple[int, int], int] = {}
@@ -121,11 +119,9 @@ def replay_dynamic(tau, edge_i, edge_j, op=None, *, nt_w: int,
                 continue     # ignored: a no-op record
             ledger[key] -= 1
             net_sum -= 1
-        elif o == OP_INSERT:
+        else:  # OP_INSERT — normalize_records already rejected other codes
             ledger[key] = ledger.get(key, 0) + 1
             net_sum += 1
-        else:
-            raise ValueError(f"op must be {OP_INSERT} or {OP_DELETE}, got {o}")
 
     if n_records and (uniq >= nt_w or not drop_partial):
         close()

@@ -1,0 +1,744 @@
+"""Network-facing multi-tenant serving front end for `MultiStreamSGrapp`.
+
+The ROADMAP's "millions of users" story as a subsystem: many concurrent
+clients push tagged edge batches over TCP, one fleet engine counts them,
+and per-tenant window estimates stream back — with admission, backpressure,
+metrics and crash recovery designed in rather than bolted on.  Stdlib only
+(asyncio + json + logging); the full protocol/operational contract lives in
+``docs/serving.md``.
+
+Data plane
+----------
+
+::
+
+    client ──hello {token}──────────────► auth: token -> TenantPolicy
+           ──push {records}─────────────► admission (draining? well-formed?
+                                          oversized? rate quota?) then a
+                                          BOUNDED ingress queue — QueueFull
+                                          is an explicit `backpressure`
+                                          reject, never an unbounded buffer
+                                 ┌────────┴────────┐
+                                 │ coalescer task  │  first record waits, then
+                                 │ (latency budget)│  gathers ≤ flush_ms /
+                                 └────────┬────────┘  ≤ max_coalesce_records
+                                          ▼
+                            ONE executor thread: per-item engine.push()
+                            in arrival order + ONE engine.flush() — so
+                            windows closed by different tenants in the same
+                            cycle co-batch through one bucketed dispatch
+                                          ▼
+           ◄──ack {windows_closed}──────  per-item futures resolve
+           ◄──estimate {...} (subscribed) new counted windows fan out
+
+Every engine touch (push/flush/result/finalize/state_dict) runs on that one
+``ThreadPoolExecutor(max_workers=1)`` thread: the engine needs no locks, the
+event loop never blocks on XLA, and cross-tenant co-batching — the whole
+point of the fleet engine — is preserved at the dispatch level.
+
+Tenancy: the hello token maps to a ``stream_id``; ``stream_id`` never
+travels on the wire (see :mod:`repro.streams.wire`), so a tenant cannot
+write into another tenant's stream.  Per-tenant admission is a token-bucket
+rate limit (records/s + burst) plus an oversized-batch cap.
+
+Observability: per-tenant and aggregate counters, a push-latency histogram
+(p50/p99 over a sliding reservoir), and queue depth — exported as JSON on
+``GET /metrics`` of a second (HTTP) port, with ``GET /healthz`` for
+liveness.  Request handling emits structured JSON logs on the
+``repro.streams.server`` logger.
+
+Durability: ``stop()`` drains the queue, flushes the engine and writes a
+checkpoint (``repro.train.checkpoint``) of the engine's v4 ``state_dict``;
+``start()`` on a directory holding one resumes every tenant bit-identically
+(mid-stream open windows included — ``state_dict`` captures them).  Acked
+records are durable only up to the last checkpoint; see docs/serving.md.
+"""
+from __future__ import annotations
+
+import asyncio
+import bisect
+import json
+import logging
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+from repro.streams.config import EngineConfig
+from repro.streams.multi import MultiStreamSGrapp
+from repro.streams.wire import RecordBatch, records_from_json
+
+__all__ = ["StreamServer", "TenantPolicy", "ServerMetrics"]
+
+log = logging.getLogger("repro.streams.server")
+
+# push rejection reasons, in admission-check order (docs/serving.md)
+REJECT_DRAINING = "draining"
+REJECT_FINALIZED = "finalized"
+REJECT_BAD_RECORDS = "bad_records"
+REJECT_OVERSIZED = "oversized"
+REJECT_QUOTA = "quota"
+REJECT_BACKPRESSURE = "backpressure"
+REJECT_ENGINE = "engine_reject"
+
+_LATENCY_BOUNDS_MS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+                      500.0, 1000.0)
+
+
+@dataclass(frozen=True)
+class TenantPolicy:
+    """Admission policy of one tenant (token -> this, at construction).
+
+    stream_id : the tenant's engine stream.
+    max_batch_records : largest single push accepted (oversized reject).
+    max_records_per_s : token-bucket refill rate; ``None`` = unlimited.
+    burst : bucket capacity; defaults to 2s of refill (or the batch cap
+        when unlimited).
+    """
+
+    stream_id: int
+    max_batch_records: int = 4096
+    max_records_per_s: float | None = None
+    burst: int | None = None
+
+
+class _TokenBucket:
+    def __init__(self, rate: float | None, burst: int):
+        self.rate = rate
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self.last = time.monotonic()
+
+    def admit(self, n: int) -> bool:
+        if self.rate is None:
+            return True
+        now = time.monotonic()
+        self.tokens = min(self.burst, self.tokens + (now - self.last) * self.rate)
+        self.last = now
+        if n > self.tokens:
+            return False
+        self.tokens -= n
+        return True
+
+
+@dataclass
+class _TenantCounters:
+    edges_accepted: int = 0
+    edges_rejected: int = 0
+    batches_accepted: int = 0
+    batches_rejected: int = 0
+    windows_closed: int = 0
+    rejects: dict = field(default_factory=dict)
+
+    def reject(self, reason: str, n_edges: int) -> None:
+        self.batches_rejected += 1
+        self.edges_rejected += n_edges
+        self.rejects[reason] = self.rejects.get(reason, 0) + 1
+
+
+class ServerMetrics:
+    """Aggregate + per-tenant serving counters and the push-latency
+    histogram.  ``snapshot()`` is the ``/metrics`` JSON body — the schema is
+    documented in docs/serving.md and pinned by the serving tests."""
+
+    def __init__(self, stream_ids):
+        self.tenants = {int(s): _TenantCounters() for s in stream_ids}
+        self.auth_rejected = 0
+        self.pushes = 0                       # engine dispatch cycles
+        self.coalesced_items = 0              # push batches applied
+        self._lat_count = 0
+        self._lat_sum_ms = 0.0
+        self._lat_max_ms = 0.0
+        self._lat_buckets = [0] * (len(_LATENCY_BOUNDS_MS) + 1)
+        self._lat_recent = deque(maxlen=4096)  # sliding p50/p99 reservoir
+
+    def observe_push_latency(self, ms: float, n_items: int) -> None:
+        self.pushes += 1
+        self.coalesced_items += n_items
+        self._lat_count += 1
+        self._lat_sum_ms += ms
+        self._lat_max_ms = max(self._lat_max_ms, ms)
+        self._lat_buckets[bisect.bisect_left(_LATENCY_BOUNDS_MS, ms)] += 1
+        self._lat_recent.append(ms)
+
+    def percentile(self, q: float) -> float:
+        if not self._lat_recent:
+            return 0.0
+        xs = sorted(self._lat_recent)
+        k = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+        return float(xs[k])
+
+    def snapshot(self, **extra) -> dict:
+        buckets = {f"<={b}ms": c for b, c in
+                   zip(_LATENCY_BOUNDS_MS, self._lat_buckets)}
+        buckets[f">{_LATENCY_BOUNDS_MS[-1]}ms"] = self._lat_buckets[-1]
+        agg = _TenantCounters()
+        for t in self.tenants.values():
+            agg.edges_accepted += t.edges_accepted
+            agg.edges_rejected += t.edges_rejected
+            agg.batches_accepted += t.batches_accepted
+            agg.batches_rejected += t.batches_rejected
+            agg.windows_closed += t.windows_closed
+            for r, c in t.rejects.items():
+                agg.rejects[r] = agg.rejects.get(r, 0) + c
+        out = {
+            "aggregate": {
+                "edges_accepted": agg.edges_accepted,
+                "edges_rejected": agg.edges_rejected,
+                "batches_accepted": agg.batches_accepted,
+                "batches_rejected": agg.batches_rejected,
+                "windows_closed": agg.windows_closed,
+                "auth_rejected": self.auth_rejected,
+                "pushes": self.pushes,
+                "coalesced_items": self.coalesced_items,
+                "push_latency_ms": {
+                    "count": self._lat_count,
+                    "mean": (self._lat_sum_ms / self._lat_count
+                             if self._lat_count else 0.0),
+                    "p50": self.percentile(0.50),
+                    "p99": self.percentile(0.99),
+                    "max": self._lat_max_ms,
+                    "buckets": buckets,
+                },
+            },
+            "tenants": {
+                str(s): {
+                    "edges_accepted": t.edges_accepted,
+                    "edges_rejected": t.edges_rejected,
+                    "batches_accepted": t.batches_accepted,
+                    "batches_rejected": t.batches_rejected,
+                    "windows_closed": t.windows_closed,
+                    "rejects": dict(t.rejects),
+                } for s, t in sorted(self.tenants.items())
+            },
+        }
+        out.update(extra)
+        return out
+
+
+class _Item:
+    """One admitted push riding the ingress queue to the coalescer."""
+
+    __slots__ = ("stream_id", "rb", "future", "t_enqueue")
+
+    def __init__(self, stream_id: int, rb: RecordBatch, future, t_enqueue):
+        self.stream_id = stream_id
+        self.rb = rb
+        self.future = future
+        self.t_enqueue = t_enqueue
+
+
+_STOP = object()   # coalescer shutdown sentinel (rides the queue last)
+
+
+class StreamServer:
+    """Asyncio NDJSON-over-TCP serving front end (see module doc +
+    docs/serving.md for the protocol).
+
+    Parameters
+    ----------
+    nt_w, alpha0, truths : the fleet engine's stream parameters.
+    tenants : ``{token: stream_id}`` or ``{token: TenantPolicy}``; the
+        stream ids must be exactly ``0..N-1``.
+    config : shared :class:`EngineConfig` for the fleet engine.
+    host, port : TCP data plane bind (``port=0`` = ephemeral; the bound
+        port is ``self.port`` after :meth:`start`).
+    http_port : ``/healthz`` + ``/metrics`` bind (also ephemeral at 0).
+    queue_limit : bounded ingress queue length, in push batches; a full
+        queue rejects with ``backpressure`` instead of buffering unbounded.
+    flush_ms : coalescing latency budget — after the first queued item, the
+        coalescer keeps gathering until this deadline (or the record cap)
+        before dispatching the micro-batch.
+    max_coalesce_records : record cap per dispatch cycle.
+    checkpoint_dir : durability root (``None`` disables checkpointing);
+        :meth:`start` recovers from the latest checkpoint found there.
+    checkpoint_every_s : periodic background checkpoint interval
+        (``None`` = only on :meth:`stop`).
+    """
+
+    def __init__(self, *, nt_w: int, alpha0, tenants: dict,
+                 config: EngineConfig | None = None, truths=None,
+                 host: str = "127.0.0.1", port: int = 0, http_port: int = 0,
+                 queue_limit: int = 64, flush_ms: float = 2.0,
+                 max_coalesce_records: int = 65536,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every_s: float | None = None):
+        if config is None:
+            config = EngineConfig()
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"config must be an EngineConfig, "
+                            f"got {type(config).__name__}")
+        if not tenants:
+            raise ValueError("tenants must map at least one token")
+        pols = {}
+        for token, pol in tenants.items():
+            if not isinstance(pol, TenantPolicy):
+                pol = TenantPolicy(stream_id=int(pol))
+            pols[str(token)] = pol
+        sids = sorted(p.stream_id for p in pols.values())
+        if sids != list(range(len(sids))):
+            raise ValueError(
+                f"tenant stream_ids must be exactly 0..N-1 with no "
+                f"duplicates, got {sids}")
+        if queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1")
+        if not (float(flush_ms) >= 0.0):
+            raise ValueError("flush_ms must be >= 0")
+        self.tenants = pols
+        self.n_streams = len(sids)
+        self.config = config
+        self.engine = MultiStreamSGrapp(self.n_streams, nt_w, alpha0,
+                                        truths=truths, config=config)
+        self.host = host
+        self._want_port = int(port)
+        self._want_http_port = int(http_port)
+        self.port: int | None = None
+        self.http_port: int | None = None
+        self.queue_limit = int(queue_limit)
+        self.flush_ms = float(flush_ms)
+        self.max_coalesce_records = int(max_coalesce_records)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every_s = checkpoint_every_s
+        self.metrics = ServerMetrics(range(self.n_streams))
+
+        self._buckets = {
+            tok: _TokenBucket(
+                p.max_records_per_s,
+                p.burst if p.burst is not None else (
+                    max(1, int(2 * p.max_records_per_s))
+                    if p.max_records_per_s is not None
+                    else p.max_batch_records))
+            for tok, p in pols.items()}
+        # ONE engine thread: every engine touch serializes here (no engine
+        # locks, co-batching preserved, event loop never blocks on XLA)
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="sgrapp-engine")
+        # published-window high-water marks per stream; read/written ONLY on
+        # the engine thread (history lists mutate there), shipped to the
+        # loop as plain dicts
+        self._published = [0] * self.n_streams
+        self._subscribers: dict[int, set[asyncio.StreamWriter]] = {
+            s: set() for s in range(self.n_streams)}
+        self._queue: asyncio.Queue | None = None
+        self._tcp = None
+        self._http = None
+        self._coalescer_task = None
+        self._ckpt_task = None
+        self._draining = False
+        self._stopped = False
+        self._started_at: float | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "StreamServer":
+        """Bind both listeners, recover from the latest checkpoint (if a
+        ``checkpoint_dir`` holds one) and start the coalescer.  Returns self;
+        ``self.port`` / ``self.http_port`` are the bound ports."""
+        self._loop = asyncio.get_running_loop()
+        self._queue = asyncio.Queue(maxsize=self.queue_limit)
+        if self.checkpoint_dir is not None:
+            self._recover()
+        self._tcp = await asyncio.start_server(
+            self._handle_conn, self.host, self._want_port)
+        self.port = self._tcp.sockets[0].getsockname()[1]
+        self._http = await asyncio.start_server(
+            self._handle_http, self.host, self._want_http_port)
+        self.http_port = self._http.sockets[0].getsockname()[1]
+        self._coalescer_task = asyncio.create_task(self._coalesce_loop())
+        if self.checkpoint_dir is not None and self.checkpoint_every_s:
+            self._ckpt_task = asyncio.create_task(self._checkpoint_loop())
+        self._started_at = time.monotonic()
+        self._log("start", port=self.port, http_port=self.http_port,
+                  n_streams=self.n_streams, recovered=self._recovered)
+        return self
+
+    _recovered = False
+
+    def _recover(self) -> None:
+        from repro.train.checkpoint import latest_step, restore_checkpoint
+
+        step = latest_step(self.checkpoint_dir)
+        if step is None:
+            return
+        state, _extra = restore_checkpoint(
+            self.checkpoint_dir, self.engine.state_dict(), host=True)
+        self.engine.restore(state)
+        # published marks restart at the restored history lengths: new
+        # subscribers replay nothing stale, result RPCs return everything
+        self._published = [self.engine.n_counted(s)
+                           for s in range(self.n_streams)]
+        self._recovered = True
+        self._log("recover", step=int(step),
+                  windows=[self.engine.n_counted(s)
+                           for s in range(self.n_streams)])
+
+    async def stop(self, *, finalize: bool = False,
+                   checkpoint: bool = True) -> None:
+        """Graceful drain: stop accepting pushes, let the coalescer apply
+        everything already admitted, flush the engine (``finalize=True``
+        additionally ends every stream — true end-of-stream only, since a
+        finalized checkpoint cannot be pushed to after recovery), publish
+        the final estimates, checkpoint, and close both listeners."""
+        if self._stopped:
+            return
+        self._draining = True
+        if self._tcp is not None:
+            # close() only — on >=3.12.1 wait_closed() also waits for live
+            # client handlers, which would deadlock the drain while a
+            # subscriber keeps its connection open
+            self._tcp.close()
+        await self._queue.put(_STOP)   # FIFO: lands after admitted items
+        if self._coalescer_task is not None:
+            await self._coalescer_task
+        if self._ckpt_task is not None:
+            self._ckpt_task.cancel()
+            try:
+                await self._ckpt_task
+            except asyncio.CancelledError:
+                pass
+        if finalize:
+            updates = await self._loop.run_in_executor(
+                self._pool, self._engine_finalize_all)
+        else:
+            updates = await self._loop.run_in_executor(
+                self._pool, self._engine_flush)
+        self._fanout_estimates(updates)
+        if checkpoint and self.checkpoint_dir is not None:
+            await self._loop.run_in_executor(self._pool, self._save_checkpoint)
+        if self._http is not None:
+            self._http.close()
+        for subs in self._subscribers.values():
+            subs.clear()
+        self._pool.shutdown(wait=True)
+        self._stopped = True
+        self._log("stop", finalize=finalize, checkpoint=checkpoint)
+
+    async def serve_forever(self) -> None:
+        """Run until cancelled (the launcher wires SIGINT/SIGTERM to a
+        graceful ``stop()``)."""
+        await self._tcp.serve_forever()
+
+    # -- engine-thread helpers (EVERY engine touch lives here) ---------------
+
+    def _collect_updates(self) -> dict:
+        ups = {}
+        for s in range(self.n_streams):
+            n = self.engine.n_counted(s)
+            if n > self._published[s]:
+                ups[s] = self.engine.history(s, self._published[s])
+                self._published[s] = n
+        return ups
+
+    def _engine_apply(self, items: list) -> tuple[list, dict]:
+        outs = []
+        for it in items:
+            try:
+                closed = self.engine.push(
+                    it.stream_id, it.rb.tau, it.rb.edge_i, it.rb.edge_j,
+                    op=it.rb.op)
+                outs.append({"ok": True, "accepted": it.rb.n,
+                             "windows_closed": closed})
+            except (ValueError, RuntimeError, NotImplementedError) as e:
+                outs.append({"ok": False, "reason": REJECT_ENGINE,
+                             "detail": str(e)})
+        # ONE flush for the whole cycle: windows closed by different tenants
+        # above co-batch through one bucketed executor dispatch
+        self.engine.flush()
+        return outs, self._collect_updates()
+
+    def _engine_flush(self) -> dict:
+        self.engine.flush()
+        return self._collect_updates()
+
+    def _engine_result(self, s: int) -> tuple:
+        res = self.engine.result(s)
+        return res, self._collect_updates()
+
+    def _engine_finalize_stream(self, s: int) -> tuple:
+        res = self.engine.finalize_stream(s)
+        return res, self._collect_updates()
+
+    def _engine_finalize_all(self) -> dict:
+        self.engine.finalize()
+        return self._collect_updates()
+
+    def _save_checkpoint(self) -> None:
+        from repro.train.checkpoint import latest_step, save_checkpoint
+
+        prev = latest_step(self.checkpoint_dir)
+        step = 0 if prev is None else int(prev) + 1
+        save_checkpoint(self.checkpoint_dir, step, self.engine.state_dict(),
+                        extra={"published": list(self._published)})
+        self._log("checkpoint", step=step)
+
+    # -- coalescer -----------------------------------------------------------
+
+    async def _coalesce_loop(self) -> None:
+        stop = False
+        while not stop:
+            item = await self._queue.get()
+            if item is _STOP:
+                break
+            batch = [item]
+            total = item.rb.n
+            deadline = self._loop.time() + self.flush_ms / 1000.0
+            while total < self.max_coalesce_records:
+                timeout = deadline - self._loop.time()
+                if timeout <= 0:
+                    break
+                try:
+                    nxt = await asyncio.wait_for(self._queue.get(), timeout)
+                except asyncio.TimeoutError:
+                    break
+                if nxt is _STOP:
+                    stop = True
+                    break
+                batch.append(nxt)
+                total += nxt.rb.n
+            t0 = time.monotonic()
+            outs, updates = await self._loop.run_in_executor(
+                self._pool, self._engine_apply, batch)
+            dt_ms = (time.monotonic() - t0) * 1e3
+            self.metrics.observe_push_latency(dt_ms, len(batch))
+            for it, out in zip(batch, outs):
+                t = self.metrics.tenants[it.stream_id]
+                if out["ok"]:
+                    t.edges_accepted += it.rb.n
+                    t.batches_accepted += 1
+                    t.windows_closed += out["windows_closed"]
+                else:
+                    t.reject(out["reason"], it.rb.n)
+                if not it.future.done():
+                    it.future.set_result(out)
+            self._fanout_estimates(updates)
+
+    def _fanout_estimates(self, updates: dict) -> None:
+        for s, h in updates.items():
+            if not self._subscribers[s]:
+                continue
+            lines = []
+            for k, est, cnt, ce, et in zip(h["window"], h["estimate"],
+                                           h["count"], h["cum_sgrs"],
+                                           h["end_tau"]):
+                lines.append(_encode({
+                    "type": "estimate", "window": k, "estimate": est,
+                    "count": cnt, "cum_sgrs": ce, "end_tau": et}))
+            payload = b"".join(lines)
+            dead = []
+            for w in self._subscribers[s]:
+                try:
+                    w.write(payload)
+                except (ConnectionError, RuntimeError):
+                    dead.append(w)
+            for w in dead:
+                self._subscribers[s].discard(w)
+
+    # -- data-plane protocol -------------------------------------------------
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        peer = writer.get_extra_info("peername")
+        token: str | None = None
+        pol: TenantPolicy | None = None
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    msg = json.loads(line)
+                    if not isinstance(msg, dict):
+                        raise ValueError("message must be a JSON object")
+                except ValueError:
+                    await self._send(writer, {"type": "error",
+                                              "reason": "bad_json"})
+                    continue
+                mtype = msg.get("type")
+                if mtype == "hello":
+                    tok = str(msg.get("token"))
+                    p = self.tenants.get(tok)
+                    if p is None:
+                        self.metrics.auth_rejected += 1
+                        self._log("auth_reject", peer=str(peer))
+                        await self._send(writer, {"type": "error",
+                                                  "reason": "auth"})
+                        break   # unauthenticated connections drop
+                    token, pol = tok, p
+                    await self._send(writer, {
+                        "type": "hello_ok", "stream_id": p.stream_id,
+                        "nt_w": self.engine.nt_w,
+                        "max_batch_records": p.max_batch_records})
+                    continue
+                if pol is None:
+                    await self._send(writer, {"type": "error",
+                                              "reason": "hello_required"})
+                    continue
+                if mtype == "push":
+                    await self._handle_push(token, pol, msg, writer)
+                elif mtype == "subscribe":
+                    self._subscribers[pol.stream_id].add(writer)
+                    await self._send(writer, {
+                        "type": "subscribed",
+                        "next_window": self._published[pol.stream_id]})
+                elif mtype == "result":
+                    res, updates = await self._loop.run_in_executor(
+                        self._pool, self._engine_result, pol.stream_id)
+                    self._fanout_estimates(updates)
+                    await self._send(writer, _result_msg(res))
+                elif mtype == "finalize":
+                    res, updates = await self._loop.run_in_executor(
+                        self._pool, self._engine_finalize_stream,
+                        pol.stream_id)
+                    self._fanout_estimates(updates)
+                    self._log("finalize", stream_id=pol.stream_id,
+                              windows=len(res.estimates))
+                    await self._send(writer, _result_msg(res,
+                                                         type="finalized"))
+                elif mtype == "ping":
+                    await self._send(writer, {"type": "pong"})
+                else:
+                    await self._send(writer, {"type": "error",
+                                              "reason": "unknown_type",
+                                              "detail": str(mtype)})
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            if pol is not None:
+                self._subscribers[pol.stream_id].discard(writer)
+            writer.close()
+
+    async def _handle_push(self, token: str, pol: TenantPolicy, msg: dict,
+                           writer: asyncio.StreamWriter) -> None:
+        t0 = time.monotonic()
+        tag = msg.get("id")
+        s = pol.stream_id
+        tcnt = self.metrics.tenants[s]
+
+        async def reject(reason: str, n_edges: int, detail: str = "") -> None:
+            tcnt.reject(reason, n_edges)
+            self._log("push_reject", stream_id=s, reason=reason,
+                      n_edges=n_edges)
+            out = {"type": "reject", "reason": reason}
+            if tag is not None:
+                out["id"] = tag
+            if detail:
+                out["detail"] = detail
+            await self._send(writer, out)
+
+        if self._draining:
+            await reject(REJECT_DRAINING, 0)
+            return
+        try:
+            rb = records_from_json(msg.get("records"), stream_id=s)
+        except ValueError as e:
+            await reject(REJECT_BAD_RECORDS, 0, detail=str(e))
+            return
+        if rb.n > pol.max_batch_records:
+            await reject(REJECT_OVERSIZED, rb.n,
+                         detail=f"{rb.n} > max_batch_records="
+                                f"{pol.max_batch_records}")
+            return
+        if not self._buckets[token].admit(rb.n):
+            await reject(REJECT_QUOTA, rb.n)
+            return
+        fut = self._loop.create_future()
+        try:
+            self._queue.put_nowait(_Item(s, rb, fut, t0))
+        except asyncio.QueueFull:
+            await reject(REJECT_BACKPRESSURE, rb.n,
+                         detail=f"ingress queue full "
+                                f"(queue_limit={self.queue_limit})")
+            return
+        out = await fut     # resolves when the engine applied the item
+        ms = (time.monotonic() - t0) * 1e3
+        if out["ok"]:
+            reply = {"type": "ack", "accepted": out["accepted"],
+                     "windows_closed": out["windows_closed"]}
+            self._log("push", stream_id=s, n_edges=rb.n,
+                      windows_closed=out["windows_closed"],
+                      latency_ms=round(ms, 3))
+        else:
+            reply = {"type": "reject", "reason": out["reason"],
+                     "detail": out["detail"]}
+            self._log("push_reject", stream_id=s, reason=out["reason"],
+                      n_edges=rb.n)
+        if tag is not None:
+            reply["id"] = tag
+        await self._send(writer, reply)
+
+    @staticmethod
+    async def _send(writer: asyncio.StreamWriter, obj: dict) -> None:
+        writer.write(_encode(obj))
+        try:
+            await writer.drain()
+        except ConnectionError:
+            pass
+
+    # -- control plane (minimal HTTP/1.1: /healthz + /metrics) ---------------
+
+    async def _handle_http(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            req = await reader.readline()
+            while True:   # drain headers; we never read a body
+                h = await reader.readline()
+                if not h or h in (b"\r\n", b"\n"):
+                    break
+            parts = req.decode("ascii", "replace").split()
+            path = parts[1] if len(parts) >= 2 else "/"
+            if path == "/healthz":
+                status, body = 200, {
+                    "status": "draining" if self._draining else "ok",
+                    "uptime_s": round(time.monotonic() - self._started_at, 3),
+                    "n_streams": self.n_streams,
+                }
+            elif path == "/metrics":
+                status, body = 200, self.metrics.snapshot(
+                    queue_depth=self._queue.qsize(),
+                    queue_limit=self.queue_limit,
+                    uptime_s=round(time.monotonic() - self._started_at, 3),
+                    windows_counted=[self.engine.n_counted(s)
+                                     for s in range(self.n_streams)],
+                )
+            else:
+                status, body = 404, {"error": "not found",
+                                     "paths": ["/healthz", "/metrics"]}
+            payload = json.dumps(body).encode()
+            phrase = {200: "OK", 404: "Not Found"}[status]
+            writer.write(
+                f"HTTP/1.1 {status} {phrase}\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(payload)}\r\n"
+                f"Connection: close\r\n\r\n".encode() + payload)
+            await writer.drain()
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            writer.close()
+
+    # -- periodic checkpoint -------------------------------------------------
+
+    async def _checkpoint_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.checkpoint_every_s)
+            await self._loop.run_in_executor(self._pool, self._save_checkpoint)
+
+    # -- structured logs -----------------------------------------------------
+
+    def _log(self, event: str, **kv) -> None:
+        log.info("%s", json.dumps({"event": event, **kv}, sort_keys=True))
+
+
+def _encode(obj: dict) -> bytes:
+    return (json.dumps(obj, separators=(",", ":")) + "\n").encode()
+
+
+def _result_msg(res, *, type: str = "result") -> dict:
+    return {
+        "type": type,
+        "estimates": [float(e) for e in res.estimates],
+        "counts": [float(c) for c in res.window_counts],
+        "cum_sgrs": [float(c) for c in res.cum_edges],
+        "alpha_final": float(res.alpha_final),
+    }

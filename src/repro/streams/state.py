@@ -32,6 +32,8 @@ from dataclasses import dataclass, fields
 
 import numpy as np
 
+from repro.streams.wire import OP_DELETE, OP_INSERT, normalize_records
+
 __all__ = [
     "StreamState",
     "stream_state_init",
@@ -47,14 +49,15 @@ __all__ = [
 
 NO_TAU = float("nan")  # sentinel: no timestamp observed yet
 
-# dynamic wire format: per-record op codes.  A record is (op, stream_id,
-# tau, i, j); op=None on push means all-insert (the static wire format,
-# unchanged).  Internally every record carries a *delta* lane instead:
-# +1 insert, -1 applied delete, 0 no-op (a delete dropped under
+# dynamic wire format: per-record op codes, defined once in
+# repro.streams.wire (re-exported here for compatibility).  A record is
+# (op, stream_id, tau, i, j); op=None on push means all-insert (the static
+# wire format, unchanged).  Internally every record carries a *delta* lane
+# instead: +1 insert, -1 applied delete, 0 no-op (a delete dropped under
 # on_missing_delete="ignore" — kept as a record so the unique-timestamp
-# quota and |E_k| bookkeeping see exactly the pushed stream).
-OP_INSERT = 0
-OP_DELETE = 1
+# quota and |E_k| bookkeeping see exactly the pushed stream).  The imported
+# OP_INSERT / OP_DELETE bindings above stay in __all__ — this module is the
+# historical home of the constants.
 
 
 @dataclass
@@ -464,33 +467,21 @@ def windowizer_push(
         raise ValueError(
             "on_missing_delete must be 'raise' or 'ignore', got "
             f"{on_missing_delete!r}")
-    tau = np.atleast_1d(np.asarray(tau, dtype=np.float64))
-    ei = np.atleast_1d(np.asarray(edge_i, dtype=np.int64))
-    ej = np.atleast_1d(np.asarray(edge_j, dtype=np.int64))
-    if not (tau.shape == ei.shape == ej.shape and tau.ndim == 1):
-        raise ValueError("tau/edge_i/edge_j must be equal-length 1-D")
-    dl = None
-    if op is not None:
-        opa = np.atleast_1d(np.asarray(op, dtype=np.int64))
-        if opa.shape != tau.shape:
-            raise ValueError("op must match tau/edge_i/edge_j in length")
-        if opa.size and (opa.min() < OP_INSERT or opa.max() > OP_DELETE):
-            raise ValueError(
-                f"op must be {OP_INSERT} (insert) or {OP_DELETE} (delete)")
-        if opa.any():
-            dl = (1 - 2 * opa).astype(np.int8)  # wire op -> delta lane
-        # else: all-insert wire batch, dl stays None (static fast path)
-    if np.ndim(stream_ids) == 0:
+    # the shared wire schema owns shape/dtype/op-range normalization
+    # (repro.streams.wire); an all-insert op lane comes back as rb.op=None
+    rb = normalize_records(tau, edge_i, edge_j, op=op, stream_id=stream_ids)
+    tau, ei, ej = rb.tau, rb.edge_i, rb.edge_j
+    # wire op (0 insert / 1 delete) -> internal delta lane (+1 / -1)
+    dl = None if rb.op is None else (1 - 2 * rb.op).astype(np.int8)
+    if rb.single_stream:
         # scalar tag: the whole batch is one stream's — the dominant
         # serving shape (and the single-stream engine's only shape), so it
         # skips the grouping machinery entirely
         if tau.size == 0:
             return []
-        return _push_one_stream(state, int(stream_ids), tau, ei, ej, nt_w,
+        return _push_one_stream(state, int(rb.stream_id), tau, ei, ej, nt_w,
                                 dl, on_missing_delete)
-    sid = np.atleast_1d(np.asarray(stream_ids, dtype=np.int64))
-    if sid.shape != tau.shape:
-        raise ValueError("stream_ids/tau/edge_i/edge_j must be equal-length 1-D")
+    sid = rb.stream_id
     if tau.size == 0:
         return []
     if sid[0] == sid[-1] and (sid == sid[0]).all():

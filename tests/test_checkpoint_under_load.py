@@ -1,0 +1,209 @@
+"""Checkpoint-under-load coverage: snapshots taken mid-stream — deletions
+buffered, sampled-tier reservoirs in flight — must survive the disk round
+trip (the server's durability path) and the full v1 -> v2 -> v3 -> v4
+migration chain, on both engines, and continue bit-identically.
+
+The existing migration tests snapshot quiet engines; these snapshot engines
+with real work in the buffer, which is what a serving checkpoint actually
+captures.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.streams.config import EngineConfig
+from repro.streams.engine import (
+    StreamingSGrapp,
+    migrate_state_dict_to_latest,
+)
+from repro.streams.generators import bipartite_pa_stream, dynamic_sgr_stream
+from repro.streams.multi import MultiStreamSGrapp
+from repro.train.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+NT_W = 30
+CFG = EngineConfig(tier="numpy", flush_every=100)   # big flush_every: the
+# snapshot catches closed-but-uncounted windows AND a partial open window
+
+_POST_V1_KEYS = ("buf_op", "res_seed", "config", "alpha0")
+
+
+def dyn(seed, n=900, **kw):
+    return dynamic_sgr_stream(n, NT_W, n_i=48, n_j=48, seed=seed,
+                              delete_frac=kw.pop("delete_frac", 0.15),
+                              dup_frac=kw.pop("dup_frac", 0.1), **kw)
+
+
+def to_v1(sd):
+    v1 = {k: v for k, v in sd.items() if k not in _POST_V1_KEYS}
+    v1["version"] = np.int64(1)
+    return v1
+
+
+# ---------------------------------------------------------------------------
+# disk round trip (the server's save/restore pattern) under buffered deletes
+# ---------------------------------------------------------------------------
+
+def test_single_engine_disk_checkpoint_with_deletes_in_flight(tmp_path):
+    t, i, j, o = dyn(seed=21)
+    cut = t.size // 2
+    assert (o[:cut] == 1).any()   # deletes genuinely in the first half
+
+    eng = StreamingSGrapp(NT_W, 0.95, config=CFG)
+    eng.push(t[:cut], i[:cut], j[:cut], op=o[:cut])
+    save_checkpoint(str(tmp_path), 0, eng.state_dict())
+    assert latest_step(str(tmp_path)) == 0
+
+    # the server's recovery: restore into a template from an identically
+    # configured engine, then engine.restore
+    clone = StreamingSGrapp(NT_W, 0.95, config=CFG)
+    state, extra = restore_checkpoint(str(tmp_path), clone.state_dict(),
+                                      host=True)
+    clone.restore(state)
+    for e in (eng, clone):
+        e.push(t[cut:], i[cut:], j[cut:], op=o[cut:])
+    r0, r1 = eng.finalize(), clone.finalize()
+    np.testing.assert_array_equal(r0.estimates, r1.estimates)
+    np.testing.assert_array_equal(r0.window_counts, r1.window_counts)
+
+
+def test_fleet_disk_checkpoint_with_deletes_in_flight(tmp_path):
+    streams = [dyn(seed=31), dyn(seed=32), dyn(seed=33, delete_frac=0.0,
+                                               dup_frac=0.0)]
+    fleet = MultiStreamSGrapp(3, NT_W, [0.9, 0.95, 1.0], config=CFG)
+    for s, (t, i, j, o) in enumerate(streams):
+        cut = t.size // 2
+        fleet.push(s, t[:cut], i[:cut], j[:cut], op=o[:cut])
+    save_checkpoint(str(tmp_path), 0, fleet.state_dict())
+
+    clone = MultiStreamSGrapp(3, NT_W, [0.9, 0.95, 1.0], config=CFG)
+    state, _ = restore_checkpoint(str(tmp_path), clone.state_dict(),
+                                  host=True)
+    clone.restore(state)
+    for e in (fleet, clone):
+        for s, (t, i, j, o) in enumerate(streams):
+            cut = t.size // 2
+            e.push(s, t[cut:], i[cut:], j[cut:], op=o[cut:])
+    for ra, rb in zip(fleet.finalize(), clone.finalize()):
+        np.testing.assert_array_equal(ra.estimates, rb.estimates)
+        np.testing.assert_array_equal(ra.window_counts, rb.window_counts)
+
+
+def test_from_state_dict_after_disk_roundtrip(tmp_path):
+    """v4 self-description survives the disk trip: the engine rebuilds from
+    the checkpoint alone (config + nt_w + alpha0 all come from the file)."""
+    t, i, j, o = dyn(seed=41)
+    cut = t.size // 2
+    eng = StreamingSGrapp(NT_W, 0.95, config=CFG)
+    eng.push(t[:cut], i[:cut], j[:cut], op=o[:cut])
+    save_checkpoint(str(tmp_path), 0, eng.state_dict())
+
+    template = StreamingSGrapp(NT_W, 0.95, config=CFG).state_dict()
+    state, _ = restore_checkpoint(str(tmp_path), template, host=True)
+    clone = StreamingSGrapp.from_state_dict(state)
+    assert clone.config == CFG and clone.alpha0 == 0.95
+    for e in (eng, clone):
+        e.push(t[cut:], i[cut:], j[cut:], op=o[cut:])
+    np.testing.assert_array_equal(eng.finalize().estimates,
+                                  clone.finalize().estimates)
+
+
+# ---------------------------------------------------------------------------
+# sampled tier: reservoir state in flight
+# ---------------------------------------------------------------------------
+
+def test_sampled_tier_checkpoint_mid_stream(tmp_path):
+    cfg = EngineConfig(tier="sampled", capacity=64, gamma=0.7, seed=9,
+                       flush_every=100)
+    s = bipartite_pa_stream(1200, temporal="uniform", n_unique=240, seed=13)
+    cut = 600
+    eng = StreamingSGrapp(NT_W, 0.95, config=cfg)
+    eng.push(s.tau[:cut], s.edge_i[:cut], s.edge_j[:cut])
+    save_checkpoint(str(tmp_path), 0, eng.state_dict())
+
+    clone = StreamingSGrapp(NT_W, 0.95, config=cfg)
+    state, _ = restore_checkpoint(str(tmp_path), clone.state_dict(),
+                                  host=True)
+    clone.restore(state)
+    for e in (eng, clone):
+        e.push(s.tau[cut:], s.edge_i[cut:], s.edge_j[cut:])
+    r0, r1 = eng.finalize(), clone.finalize()
+    # sampled counts are stochastic per (seed, window) but the reservoir
+    # seed rides the checkpoint (res_seed), so the clone is bit-identical
+    np.testing.assert_array_equal(r0.estimates, r1.estimates)
+    np.testing.assert_array_equal(r0.window_counts, r1.window_counts)
+
+
+def test_sampled_fleet_checkpoint_mid_stream(tmp_path):
+    cfg = EngineConfig(tier="sampled", capacity=64, gamma=0.7, seed=2,
+                       flush_every=100)
+    streams = [bipartite_pa_stream(1000, temporal="uniform", n_unique=200,
+                                   seed=50 + s) for s in range(2)]
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95, config=cfg)
+    for s, st in enumerate(streams):
+        fleet.push(s, st.tau[:500], st.edge_i[:500], st.edge_j[:500])
+    save_checkpoint(str(tmp_path), 0, fleet.state_dict())
+
+    clone = MultiStreamSGrapp(2, NT_W, 0.95, config=cfg)
+    state, _ = restore_checkpoint(str(tmp_path), clone.state_dict(),
+                                  host=True)
+    clone.restore(state)
+    for e in (fleet, clone):
+        for s, st in enumerate(streams):
+            e.push(s, st.tau[500:], st.edge_i[500:], st.edge_j[500:])
+    for ra, rb in zip(fleet.finalize(), clone.finalize()):
+        np.testing.assert_array_equal(ra.estimates, rb.estimates)
+
+
+# ---------------------------------------------------------------------------
+# migration chain v1 -> v4 with work in the buffer
+# ---------------------------------------------------------------------------
+
+def test_migration_chain_under_load_single():
+    # insert-only first half (a v1 checkpoint cannot carry buffered deletes
+    # or a config — that is exactly what the migration backfills)
+    t, i, j, o = dyn(seed=61, delete_frac=0.0, dup_frac=0.0)
+    cut = t.size // 2
+    eng = StreamingSGrapp(NT_W, 0.95, config=CFG)
+    eng.push(t[:cut], i[:cut], j[:cut])
+    sd = eng.state_dict()
+    assert int(sd["buf_len"]) > 0   # open-window records really buffered
+
+    v1 = to_v1(sd)
+    migrated = migrate_state_dict_to_latest(dict(v1), 1)
+    assert int(migrated["version"]) == 4
+    assert migrated["config"].size == 0          # pre-v4: no embedded config
+    assert float(migrated["alpha0"]) == float(np.ravel(sd["carry_alpha"])[0])
+
+    clone = StreamingSGrapp(NT_W, 0.95, config=CFG).restore(v1)
+    for e in (eng, clone):
+        e.push(t[cut:], i[cut:], j[cut:])
+    np.testing.assert_array_equal(eng.finalize().estimates,
+                                  clone.finalize().estimates)
+
+
+def test_migration_chain_under_load_fleet():
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95, config=CFG)
+    streams = [dyn(seed=71, delete_frac=0.0, dup_frac=0.0),
+               dyn(seed=72, delete_frac=0.0, dup_frac=0.0)]
+    for s, (t, i, j, _) in enumerate(streams):
+        fleet.push(s, t[:t.size // 2], i[:t.size // 2], j[:t.size // 2])
+    sd = fleet.state_dict()
+
+    v1 = to_v1(sd)
+    migrated = migrate_state_dict_to_latest(dict(v1), 1)
+    assert int(migrated["version"]) == 4
+    # fleet migration backfills a per-stream alpha0 lane from carry_alpha
+    np.testing.assert_array_equal(migrated["alpha0"],
+                                  np.asarray(sd["carry_alpha"], np.float64))
+
+    clone = MultiStreamSGrapp(2, NT_W, 0.95, config=CFG).restore(v1)
+    for e in (fleet, clone):
+        for s, (t, i, j, _) in enumerate(streams):
+            cut = t.size // 2
+            e.push(s, t[cut:], i[cut:], j[cut:])
+    for ra, rb in zip(fleet.finalize(), clone.finalize()):
+        np.testing.assert_array_equal(ra.estimates, rb.estimates)

@@ -381,8 +381,12 @@ def test_butterfly_delta_matches_recount():
 
 # -- v1 -> v2 checkpoint migration --------------------------------------------
 
+# keys added after v1 (v2: buf_op, v3: res_seed, v4: config/alpha0)
+_POST_V1_KEYS = ("buf_op", "res_seed", "config", "alpha0")
+
+
 def roundtrip_v1(eng_cls, make, sd):
-    v1 = {k: v for k, v in sd.items() if k not in ("buf_op", "res_seed")}
+    v1 = {k: v for k, v in sd.items() if k not in _POST_V1_KEYS}
     v1["version"] = np.int64(1)
     return make().restore(v1)
 
@@ -393,7 +397,7 @@ def test_v1_checkpoint_migrates_single_stream():
     eng = StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=100)
     eng.push(t[:cut], i[:cut], j[:cut])
     sd = eng.state_dict()
-    assert int(sd["version"]) == 3 and "buf_op" in sd and "res_seed" in sd
+    assert int(sd["version"]) == 4 and "buf_op" in sd and "res_seed" in sd
     make = lambda: StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=100)
     eng_v2 = make().restore(sd)
     eng_v1 = roundtrip_v1(StreamingSGrapp, make, sd)
@@ -412,7 +416,7 @@ def test_v1_checkpoint_migrates_fleet():
     for s in range(2):
         fleet.push(s, [0.0, 1.0, 2.0], [0, 1, 2], [0, 1, 2])
     sd = fleet.state_dict()
-    assert int(sd["version"]) == 3 and "buf_op" in sd and "res_seed" in sd
+    assert int(sd["version"]) == 4 and "buf_op" in sd and "res_seed" in sd
     make = lambda: MultiStreamSGrapp(2, NT_W, 0.95, tier="numpy",
                                      flush_every=100)
     fleet_v1 = roundtrip_v1(MultiStreamSGrapp, make, sd)
@@ -436,15 +440,16 @@ def test_migration_preserves_strictness():
     # migratable
     v1_extra = dict(sd)
     v1_extra["version"] = np.int64(1)
-    with pytest.raises(ValueError,
-                       match="unknown=\\['buf_op', 'res_seed'\\]"):
+    with pytest.raises(
+            ValueError,
+            match="unknown=\\['alpha0', 'buf_op', 'config', 'res_seed'\\]"):
         StreamingSGrapp(NT_W, 0.95).restore(v1_extra)
-    # a v3 dict missing buf_op is truncated, not silently defaulted
-    v3_cut = {k: v for k, v in sd.items() if k != "buf_op"}
+    # a v4 dict missing buf_op is truncated, not silently defaulted
+    v4_cut = {k: v for k, v in sd.items() if k != "buf_op"}
     with pytest.raises(ValueError, match="missing=\\['buf_op'\\]"):
-        StreamingSGrapp(NT_W, 0.95).restore(v3_cut)
+        StreamingSGrapp(NT_W, 0.95).restore(v4_cut)
     # migrate_state_dict_v1 never mutates its input
-    v1 = {k: v for k, v in sd.items() if k not in ("buf_op", "res_seed")}
+    v1 = {k: v for k, v in sd.items() if k not in _POST_V1_KEYS}
     v1["version"] = np.int64(1)
     out = migrate_state_dict_v1(v1)
     assert int(v1["version"]) == 1 and int(out["version"]) == 2

@@ -1,0 +1,325 @@
+"""EngineConfig + wire-schema tests: the API-redesign surface.
+
+One frozen ``EngineConfig`` owns every engine knob and its validation; both
+engines consume it (legacy kwargs are a deprecation shim), checkpoints embed
+it (schema v4 self-description), and :mod:`repro.streams.wire` owns the one
+record layout every pusher speaks.  These tests pin the contracts:
+validation errors, the shim's warning/conflict behavior, JSON round-trips,
+``from_state_dict`` reconstruction, and the alpha0 coercion fix.
+"""
+from __future__ import annotations
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.streams.config import DUP_POLICIES, EngineConfig
+from repro.streams.engine import (
+    StreamingSGrapp,
+    config_from_bytes,
+    config_to_bytes,
+)
+from repro.streams.generators import bipartite_pa_stream
+from repro.streams.multi import MultiStreamSGrapp
+from repro.streams.wire import (
+    OP_DELETE,
+    OP_INSERT,
+    RecordBatch,
+    as_columns,
+    normalize_records,
+    records_from_json,
+    records_to_json,
+)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig validation: the single owner of every knob check
+# ---------------------------------------------------------------------------
+
+def test_defaults_validate_and_freeze():
+    cfg = EngineConfig()
+    assert cfg.tier == "dense" and cfg.flush_every == 32
+    assert cfg.dup_policy == "distinct" and cfg.on_missing_delete == "raise"
+    with pytest.raises(Exception):  # frozen dataclass
+        cfg.tier = "numpy"
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(tier="warp"), "tier must be one of"),
+    (dict(flush_every=0), "flush_every must be >= 1"),
+    (dict(align=0), "align must be >= 1"),
+    (dict(dup_policy="latest"), "dup_policy must be one of"),
+    (dict(on_missing_delete="drop"), "on_missing_delete must be"),
+    (dict(capacity=0), "capacity"),
+    (dict(gamma=1.5), "gamma"),
+    (dict(memory_budget=-1), "memory_budget must be a positive int"),
+    (dict(memory_budget=True), "memory_budget must be a positive int"),
+    (dict(target_mape=0.0), "target_mape must be positive"),
+])
+def test_validation_errors(kw, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kw)
+
+
+def test_multiset_sampled_rejected_at_config():
+    with pytest.raises(NotImplementedError, match="sampled tier does not"):
+        EngineConfig(tier="sampled", dup_policy="multiset")
+
+
+def test_coercion_pins_types():
+    cfg = EngineConfig(tol="0.1", flush_every=np.int64(8), gamma=np.float32(0.5))
+    assert cfg.tol == 0.1 and type(cfg.tol) is float
+    assert cfg.flush_every == 8 and type(cfg.flush_every) is int
+    assert type(cfg.gamma) is float
+
+
+def test_make_executor_conflicts():
+    from repro.core.executor import WindowExecutor
+
+    ex = WindowExecutor("numpy")
+    with pytest.raises(ValueError, match="conflict with executor="):
+        EngineConfig(devices=1).make_executor(ex)
+    with pytest.raises(NotImplementedError, match="sampled tier"):
+        EngineConfig(dup_policy="multiset").make_executor(
+            WindowExecutor("sampled"))
+    # pass-through keeps the shared instance; fresh build honors the knobs
+    assert EngineConfig().make_executor(ex) is ex
+    built = EngineConfig(tier="numpy", align=16).make_executor()
+    assert built.tier == "numpy" and built.align == 16
+
+
+def test_json_roundtrip_and_strictness():
+    cfg = EngineConfig(tier="sampled", capacity=512, gamma=0.5, seed=7,
+                       flush_every=4, target_mape=0.1, devices=2)
+    back = EngineConfig.from_json(cfg.to_json())
+    # devices/mesh are deployment-only: dropped by serialization
+    assert back == cfg.replace(devices=None)
+    obj = json.loads(cfg.to_json())
+    assert "devices" not in obj and "mesh" not in obj
+    with pytest.raises(ValueError, match="unknown fields \\['snap'\\]"):
+        EngineConfig.from_json(json.dumps({"snap": 8}))
+    with pytest.raises(ValueError, match="must be an object"):
+        EngineConfig.from_json("[1, 2]")
+
+
+def test_replace_revalidates():
+    cfg = EngineConfig(tier="sampled")
+    with pytest.raises(NotImplementedError):
+        cfg.replace(dup_policy="multiset")
+
+
+def test_config_bytes_roundtrip():
+    cfg = EngineConfig(tier="tiled", flush_every=3)
+    lane = config_to_bytes(cfg)
+    assert lane.dtype == np.uint8
+    assert EngineConfig.from_json(config_from_bytes(lane)) == cfg
+    assert config_from_bytes(np.zeros(0, dtype=np.uint8)) == ""
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim: config= vs legacy kwargs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("build", [
+    lambda **kw: StreamingSGrapp(40, 0.95, **kw),
+    lambda **kw: MultiStreamSGrapp(2, 40, 0.95, **kw),
+])
+def test_legacy_kwargs_warn_and_match_config(build):
+    with pytest.warns(DeprecationWarning,
+                      match=r"deprecated; build an EngineConfig.*"
+                            r"\['flush_every', 'tier'\]"):
+        legacy = build(tier="numpy", flush_every=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # config= path must not warn
+        modern = build(config=EngineConfig(tier="numpy", flush_every=2))
+    assert legacy.config == modern.config
+    assert modern.tier == "numpy" and modern.flush_every == 2
+
+
+@pytest.mark.parametrize("build", [
+    lambda **kw: StreamingSGrapp(40, 0.95, **kw),
+    lambda **kw: MultiStreamSGrapp(2, 40, 0.95, **kw),
+])
+def test_config_conflicts_with_legacy_kwargs(build):
+    with pytest.raises(ValueError,
+                       match=r"config= conflicts with legacy engine kwargs "
+                             r"\['tier'\]"):
+        build(config=EngineConfig(), tier="numpy")
+    with pytest.raises(TypeError, match="must be an EngineConfig"):
+        build(config={"tier": "numpy"})
+
+
+def test_engines_share_one_validation_copy():
+    # a config error surfaces identically from both engines — it is raised
+    # by EngineConfig itself, not engine-local checks
+    for build in (lambda: StreamingSGrapp(40, 1.0, config=EngineConfig(
+                      dup_policy="latest")),
+                  lambda: MultiStreamSGrapp(2, 40, 1.0, config=EngineConfig(
+                      dup_policy="latest"))):
+        with pytest.raises(ValueError, match="dup_policy must be one of"):
+            build()
+
+
+# ---------------------------------------------------------------------------
+# v4 self-describing checkpoints: from_state_dict
+# ---------------------------------------------------------------------------
+
+def _stream(n=800, seed=5):
+    return bipartite_pa_stream(n, temporal="uniform", n_unique=n // 4,
+                               seed=seed)
+
+
+def test_single_stream_from_state_dict_roundtrip():
+    cfg = EngineConfig(tier="numpy", flush_every=2, seed=3)
+    s = _stream()
+    eng = StreamingSGrapp(50, 0.9, config=cfg)
+    eng.push(s.tau[:500], s.edge_i[:500], s.edge_j[:500])
+    sd = eng.state_dict()
+    assert int(sd["version"]) == 4
+    assert EngineConfig.from_json(config_from_bytes(sd["config"])) == cfg
+    assert float(sd["alpha0"]) == 0.9
+
+    # reconstruct WITHOUT re-supplying any knob, continue, bit-identical
+    clone = StreamingSGrapp.from_state_dict(sd)
+    assert clone.config == cfg and clone.nt_w == 50 and clone.alpha0 == 0.9
+    eng.push(s.tau[500:], s.edge_i[500:], s.edge_j[500:])
+    clone.push(s.tau[500:], s.edge_i[500:], s.edge_j[500:])
+    np.testing.assert_array_equal(eng.finalize().estimates,
+                                  clone.finalize().estimates)
+
+
+def test_fleet_from_state_dict_roundtrip():
+    cfg = EngineConfig(tier="numpy", flush_every=1)
+    a, b = _stream(seed=6), _stream(seed=7)
+    eng = MultiStreamSGrapp(2, 50, [0.9, 1.1], config=cfg)
+    eng.push(0, a.tau[:400], a.edge_i[:400], a.edge_j[:400])
+    eng.push(1, b.tau[:400], b.edge_i[:400], b.edge_j[:400])
+    sd = eng.state_dict()
+    assert int(sd["version"]) == 4
+    np.testing.assert_array_equal(sd["alpha0"],
+                                  np.array([0.9, 1.1], dtype=np.float64))
+
+    clone = MultiStreamSGrapp.from_state_dict(sd)
+    assert clone.config == cfg and clone.alpha0 == [0.9, 1.1]
+    for e in (eng, clone):
+        e.push(0, a.tau[400:], a.edge_i[400:], a.edge_j[400:])
+        e.push(1, b.tau[400:], b.edge_i[400:], b.edge_j[400:])
+    for s, (r0, r1) in enumerate(zip(eng.finalize(), clone.finalize())):
+        np.testing.assert_array_equal(r0.estimates, r1.estimates)
+
+
+def test_from_state_dict_pre_v4_requires_explicit_config():
+    eng = StreamingSGrapp(40, 1.0, config=EngineConfig(tier="numpy"))
+    sd = eng.state_dict()
+    sd["config"] = np.zeros(0, dtype=np.uint8)   # what v3 migration writes
+    with pytest.raises(ValueError, match="carries no EngineConfig"):
+        StreamingSGrapp.from_state_dict(sd)
+    # the documented escape hatch: supply the config explicitly
+    clone = StreamingSGrapp.from_state_dict(
+        sd, config=EngineConfig(tier="numpy"))
+    assert clone.config.tier == "numpy"
+
+
+# ---------------------------------------------------------------------------
+# alpha0 coercion (bugfix pin): numpy scalars and per-stream lists
+# ---------------------------------------------------------------------------
+
+def test_fleet_alpha0_coercion():
+    # np scalars coerce to plain float (previously leaked np types into
+    # state_dict metadata and json)
+    eng = MultiStreamSGrapp(2, 40, np.float32(0.9),
+                            config=EngineConfig(tier="numpy"))
+    assert type(eng.alpha0) is float and eng.alpha0 == pytest.approx(0.9)
+    # per-stream array coerces elementwise to a plain list of floats
+    eng = MultiStreamSGrapp(3, 40, np.array([0.8, 0.9, 1.0], np.float32),
+                            config=EngineConfig(tier="numpy"))
+    assert eng.alpha0 == pytest.approx([0.8, 0.9, 1.0])
+    assert all(type(a) is float for a in eng.alpha0)
+    with pytest.raises(ValueError, match="one entry per stream"):
+        MultiStreamSGrapp(3, 40, [0.8, 0.9],
+                          config=EngineConfig(tier="numpy"))
+
+
+def test_single_alpha0_coercion():
+    eng = StreamingSGrapp(40, np.float64(1.25),
+                          config=EngineConfig(tier="numpy"))
+    assert type(eng.alpha0) is float and eng.alpha0 == 1.25
+
+
+# ---------------------------------------------------------------------------
+# wire schema: the one record layout every pusher speaks
+# ---------------------------------------------------------------------------
+
+def test_normalize_records_canonicalizes():
+    rb = normalize_records(1.5, 2, 3)   # scalars broadcast
+    assert rb.n == 1 and rb.single_stream and rb.stream_id == 0
+    assert rb.tau.dtype == np.float64 and rb.edge_i.dtype == np.int64
+    assert rb.op is None
+    # explicit all-insert op lane collapses to the static marker
+    rb = normalize_records([1.0, 2.0], [0, 1], [0, 1],
+                           op=[OP_INSERT, OP_INSERT])
+    assert rb.op is None
+    rb = normalize_records([1.0, 2.0], [0, 1], [0, 1],
+                           op=[OP_INSERT, OP_DELETE], stream_id=[4, 5])
+    assert rb.op is not None and not rb.single_stream
+    assert rb.stream_id.tolist() == [4, 5]
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(tau=[1.0, 2.0], edge_i=[1], edge_j=[1, 2]),
+     "equal-length 1-D"),
+    (dict(tau=[1.0], edge_i=[1], edge_j=[1], op=[0, 1]),
+     "op must match"),
+    (dict(tau=[1.0], edge_i=[1], edge_j=[1], op=[2]),
+     "op must be 0"),
+    (dict(tau=[1.0], edge_i=[1], edge_j=[1], stream_id=[0, 1]),
+     "stream_ids/tau"),
+])
+def test_normalize_records_rejects(kw, match):
+    with pytest.raises(ValueError, match=match):
+        normalize_records(**kw)
+
+
+def test_as_columns_always_materializes_op():
+    tau, ei, ej, ops = as_columns([1.0, 2.0], [0, 1], [2, 3])
+    assert ops.tolist() == [0, 0] and ops.dtype == np.int64
+    _, _, _, ops = as_columns([1.0], [0], [2], op=[1])
+    assert ops.tolist() == [1]
+
+
+def test_records_json_roundtrip():
+    rb = normalize_records([1.0, 2.0], [3, 4], [5, 6], op=[0, 1])
+    obj = records_to_json(rb)
+    assert set(obj) == {"tau", "i", "j", "op"}
+    back = records_from_json(obj, stream_id=7)
+    assert back.stream_id == 7
+    np.testing.assert_array_equal(back.tau, rb.tau)
+    np.testing.assert_array_equal(back.op, rb.op)
+    # insert-only batches omit the op column entirely
+    obj = records_to_json(normalize_records([1.0], [0], [0]))
+    assert "op" not in obj
+
+
+@pytest.mark.parametrize("obj,match", [
+    (None, "must be an object"),
+    ([1, 2], "must be an object"),
+    ({"tau": [1.0]}, r"missing columns \['i', 'j'\]"),
+    ({"tau": [1.0], "i": [0], "j": [0], "sid": [2]},
+     r"unknown columns \['sid'\]"),
+    # ragged columns surface as ValueError too — numpy's inhomogeneous-shape
+    # error or the wrapped non-numeric message, either way a bad_records
+    # rejection at the server
+    ({"tau": [[1.0], [2.0, 3.0]], "i": [0, 1], "j": [0, 1]},
+     "columns must be numeric|equal-length|inhomogeneous"),
+])
+def test_records_from_json_strict(obj, match):
+    with pytest.raises(ValueError, match=match):
+        records_from_json(obj)
+
+
+def test_record_batch_is_plain_dataclass():
+    rb = RecordBatch(tau=np.array([1.0]), edge_i=np.array([0]),
+                     edge_j=np.array([1]))
+    assert rb.n == 1 and rb.op is None

@@ -302,7 +302,7 @@ def test_single_stream_restore_is_strict():
     eng = StreamingSGrapp(NT_W, 0.95)
     eng.push([1.0, 2.0], [0, 1], [0, 1])
     sd = eng.state_dict()
-    assert int(sd["version"]) == 3
+    assert int(sd["version"]) == 4
 
     missing = dict(sd)
     del missing["uniq"]
