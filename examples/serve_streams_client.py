@@ -13,6 +13,12 @@ then push a synthetic stream and watch estimates arrive::
 The client speaks the NDJSON protocol directly with asyncio streams — no
 client library needed: hello (auth), push (batched records), subscribe
 (estimate feed), result (history so far).
+
+Pushes carry a per-tenant sequence number and retry with the *same* seq
+on backpressure, transient rejects, or a dropped connection (the server
+restarting, say) — the durability contract makes that exactly-once: a
+seq the server already applied re-acks idempotently with
+``duplicate: true`` instead of double-counting (docs/serving.md).
 """
 from __future__ import annotations
 
@@ -46,13 +52,17 @@ async def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    reader, writer = await asyncio.open_connection(args.host, args.port)
-    await send(writer, {"type": "hello", "token": args.token})
-    hello = await recv(reader)
-    if hello.get("type") != "hello_ok":
-        raise SystemExit(f"auth failed: {hello}")
+    async def connect():
+        r, w = await asyncio.open_connection(args.host, args.port)
+        await send(w, {"type": "hello", "token": args.token})
+        h = await recv(r)
+        if h.get("type") != "hello_ok":
+            raise SystemExit(f"auth failed: {h}")
+        return r, w, h
+
+    reader, writer, hello = await connect()
     print(f"[client] authenticated as stream {hello['stream_id']} "
-          f"(nt_w={hello['nt_w']})")
+          f"(nt_w={hello['nt_w']}, next_seq={hello['next_seq']})")
 
     # second connection subscribed to the estimate feed
     sub_r, sub_w = await asyncio.open_connection(args.host, args.port)
@@ -74,19 +84,36 @@ async def main() -> None:
     st = synthetic_rating_stream(n_users=500, n_items=300,
                                  n_edges=args.edges, seed=args.seed)
     accepted = 0
+    seq = hello["next_seq"]
     for k in range(0, len(st.tau), args.batch):
         sl = slice(k, k + args.batch)
         rb = normalize_records(st.tau[sl], st.edge_i[sl], st.edge_j[sl])
-        await send(writer, {"type": "push", "id": k,
-                            "records": records_to_json(rb)})
-        reply = await recv(reader)
-        if reply["type"] == "ack":
-            accepted += reply["accepted"]
-        elif reply["reason"] == "backpressure":
-            await asyncio.sleep(0.05)   # server queue full: back off, retry
-            continue
-        else:
+        msg = {"type": "push", "id": k, "seq": seq,
+               "records": records_to_json(rb)}
+        while True:     # same batch, same seq, until it acks
+            try:
+                await send(writer, msg)
+                reply = await recv(reader)
+            except (ConnectionError, OSError):
+                print("[client] connection lost; reconnecting...")
+                await asyncio.sleep(0.2)
+                try:
+                    reader, writer, _ = await connect()
+                except OSError:
+                    continue            # server still down: keep trying
+                continue                # resend the same seq
+            if reply["type"] == "ack":
+                if reply.get("duplicate"):
+                    print(f"[client] seq {seq} already applied (deduped)")
+                accepted += reply["accepted"]
+                seq += 1
+                break
+            if reply["reason"] in ("backpressure", "quota", "wal_error",
+                                   "internal", "draining"):
+                await asyncio.sleep(0.05)   # transient: back off, retry
+                continue
             print(f"[client] rejected: {reply}")
+            break       # non-retryable (bad_records, oversized, ...)
 
     await send(writer, {"type": "result"})
     res = await recv(reader)

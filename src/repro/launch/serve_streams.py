@@ -19,7 +19,8 @@ import asyncio
 import logging
 import signal
 
-from repro.streams.config import EngineConfig
+from repro.streams.config import EngineConfig, ServingConfig
+from repro.streams.faults import install_from_env
 from repro.streams.server import StreamServer, TenantPolicy
 
 log = logging.getLogger("repro.streams.server")
@@ -48,12 +49,15 @@ def build_server(args: argparse.Namespace) -> StreamServer:
         raise SystemExit("duplicate tenant tokens")
     config = EngineConfig(tier=args.tier, flush_every=args.flush_every,
                           seed=args.seed)
+    serving = ServingConfig(wal=not args.no_wal,
+                            wal_fsync=not args.no_wal_fsync)
     return StreamServer(
         nt_w=args.nt_w, alpha0=args.alpha0, tenants=tenants, config=config,
         host=args.host, port=args.port, http_port=args.http_port,
         queue_limit=args.queue_limit, flush_ms=args.flush_ms,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every_s=args.checkpoint_every_s,
+        serving=serving,
     )
 
 
@@ -93,6 +97,11 @@ def main() -> None:
     ap.add_argument("--flush-ms", type=float, default=2.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every-s", type=float, default=None)
+    ap.add_argument("--no-wal", action="store_true",
+                    help="disable the write-ahead log (acked records are "
+                         "then durable only up to the last checkpoint)")
+    ap.add_argument("--no-wal-fsync", action="store_true",
+                    help="keep the WAL but skip fsync (benchmarking only)")
     ap.add_argument("--finalize-on-stop", action="store_true")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="structured JSON request logs on stderr")
@@ -100,6 +109,9 @@ def main() -> None:
     logging.basicConfig(
         level=logging.INFO if args.verbose else logging.WARNING,
         format="%(message)s")
+    # crash legs ship their fault plan via $SGRAPP_FAULT_PLAN; a no-op
+    # otherwise (repro.streams.faults)
+    install_from_env()
     asyncio.run(run(args))
 
 

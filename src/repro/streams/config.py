@@ -31,7 +31,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["EngineConfig", "DUP_POLICIES", "resolve_engine_config"]
+__all__ = ["EngineConfig", "ServingConfig", "DUP_POLICIES",
+           "resolve_engine_config"]
 
 # duplicate-edge policies: "distinct" is the paper's keep-first semantics;
 # "multiset" counts butterflies multiplicity-weighted — every
@@ -197,6 +198,77 @@ class EngineConfig:
 
     def replace(self, **changes) -> "EngineConfig":
         """A copy with ``changes`` applied (re-validated)."""
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Durability + supervision knobs of the serving front end
+    (:class:`repro.streams.server.StreamServer`).  Deliberately separate
+    from :class:`EngineConfig`: these govern the *server process* (WAL,
+    watchdog restarts, checkpoint retry), not the stream's semantics, so
+    they never serialize into engine checkpoints and can differ across
+    restarts of the same stream.
+
+    Parameters
+    ----------
+    wal : write every admitted push to the per-tenant WAL before acking
+        (requires the server's ``checkpoint_dir``; exactly-once recovery —
+        docs/serving.md).  ``False`` reverts to checkpoint-only
+        durability.
+    wal_segment_bytes : WAL segment rotation size.
+    wal_fsync : fsync the WAL once per coalesce cycle (group commit).
+        ``False`` leaves durability to the OS page cache — survives
+        process crashes (SIGKILL) but not power loss; benchmarks and tests
+        on slow disks may want it.
+    restart_backoff : supervisor backoff for crashed internal loops
+        (coalescer, checkpoint loop) — restarts are unbounded, the *delay*
+        is bounded by ``restart_backoff.max_s``.
+    checkpoint_retry : backoff between retries of a failed periodic
+        checkpoint (e.g. disk full).
+    degraded_checkpoint_age_factor : report degraded health when the last
+        successful checkpoint is older than ``factor *
+        checkpoint_every_s``.
+    drain_timeout_s : ``stop()`` waits this long for the coalescer to
+        drain before force-resolving queued pushes with ``draining``.
+    """
+
+    wal: bool = True
+    wal_segment_bytes: int = 4 << 20
+    wal_fsync: bool = True
+    restart_backoff: object = None
+    checkpoint_retry: object = None
+    degraded_checkpoint_age_factor: float = 3.0
+    drain_timeout_s: float = 10.0
+
+    def __post_init__(self):
+        from repro.train.fault import BackoffPolicy
+
+        def pin(name, value):
+            object.__setattr__(self, name, value)
+
+        pin("wal", bool(self.wal))
+        if int(self.wal_segment_bytes) < 1:
+            raise ValueError("wal_segment_bytes must be >= 1")
+        pin("wal_segment_bytes", int(self.wal_segment_bytes))
+        pin("wal_fsync", bool(self.wal_fsync))
+        if self.restart_backoff is None:
+            pin("restart_backoff", BackoffPolicy(initial_s=0.05, max_s=5.0))
+        elif not isinstance(self.restart_backoff, BackoffPolicy):
+            raise TypeError("restart_backoff must be a BackoffPolicy")
+        if self.checkpoint_retry is None:
+            pin("checkpoint_retry", BackoffPolicy(initial_s=0.5, max_s=30.0))
+        elif not isinstance(self.checkpoint_retry, BackoffPolicy):
+            raise TypeError("checkpoint_retry must be a BackoffPolicy")
+        if not (float(self.degraded_checkpoint_age_factor) > 0.0):
+            raise ValueError("degraded_checkpoint_age_factor must be > 0")
+        pin("degraded_checkpoint_age_factor",
+            float(self.degraded_checkpoint_age_factor))
+        if not (float(self.drain_timeout_s) > 0.0):
+            raise ValueError("drain_timeout_s must be > 0")
+        pin("drain_timeout_s", float(self.drain_timeout_s))
+
+    def replace(self, **changes) -> "ServingConfig":
         return dataclasses.replace(self, **changes)
 
 

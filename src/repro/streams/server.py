@@ -47,11 +47,22 @@ Observability: per-tenant and aggregate counters, a push-latency histogram
 liveness.  Request handling emits structured JSON logs on the
 ``repro.streams.server`` logger.
 
-Durability: ``stop()`` drains the queue, flushes the engine and writes a
-checkpoint (``repro.train.checkpoint``) of the engine's v4 ``state_dict``;
-``start()`` on a directory holding one resumes every tenant bit-identically
-(mid-stream open windows included — ``state_dict`` captures them).  Acked
-records are durable only up to the last checkpoint; see docs/serving.md.
+Durability: every admitted push is appended to a per-tenant write-ahead log
+(:mod:`repro.streams.wal`) keyed by its monotonic ``seq`` and group-commit
+fsynced *before* its ack leaves the server; periodic + ``stop()``
+checkpoints (``repro.train.checkpoint``, CRC-verified) record the engine's
+v4 ``state_dict`` plus the per-tenant seq watermarks.  ``start()`` restores
+the newest *valid* checkpoint (corrupt steps are skipped — degraded mode)
+and replays WAL records past its watermark, so an acked record survives
+SIGKILL at any instant and a client retry of an applied seq acks
+idempotently — exactly-once, bit-identical recovery (docs/serving.md).
+
+Supervision: the coalescer and checkpoint loops run under a watchdog that
+isolates per-item failures, restarts crashed loops with bounded backoff and
+surfaces degraded mode on ``/healthz`` + ``/metrics``.  The deterministic
+fault-injection points threaded through this module
+(:mod:`repro.streams.faults`) are how the crash-recovery suite lands kills
+exactly between WAL-fsync and ack, or mid-checkpoint-rename.
 """
 from __future__ import annotations
 
@@ -59,14 +70,17 @@ import asyncio
 import bisect
 import json
 import logging
+import os
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
-from repro.streams.config import EngineConfig
+from repro.streams.config import EngineConfig, ServingConfig
 from repro.streams.multi import MultiStreamSGrapp
-from repro.streams.wire import RecordBatch, records_from_json
+from repro.streams.wal import FleetWAL, WALCorruption, WALError
+from repro.streams.wire import RecordBatch, normalize_seq, records_from_json
+from repro.train.fault import fault_point
 
 __all__ = ["StreamServer", "TenantPolicy", "ServerMetrics"]
 
@@ -76,10 +90,13 @@ log = logging.getLogger("repro.streams.server")
 REJECT_DRAINING = "draining"
 REJECT_FINALIZED = "finalized"
 REJECT_BAD_RECORDS = "bad_records"
+REJECT_BAD_SEQ = "bad_seq"
 REJECT_OVERSIZED = "oversized"
 REJECT_QUOTA = "quota"
 REJECT_BACKPRESSURE = "backpressure"
 REJECT_ENGINE = "engine_reject"
+REJECT_WAL = "wal_error"
+REJECT_INTERNAL = "internal"
 
 _LATENCY_BOUNDS_MS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
                       500.0, 1000.0)
@@ -146,6 +163,14 @@ class ServerMetrics:
         self.auth_rejected = 0
         self.pushes = 0                       # engine dispatch cycles
         self.coalesced_items = 0              # push batches applied
+        # durability + supervision counters (docs/serving.md)
+        self.duplicate_acks = 0               # idempotent duplicate-seq acks
+        self.engine_errors = 0                # unexpected engine exceptions
+        self.flush_errors = 0                 # engine.flush() failures
+        self.internal_errors = 0              # dispatch cycles that blew up
+        self.wal_errors = 0                   # WAL append/sync failures
+        self.checkpoint_failures = 0          # failed checkpoint attempts
+        self.checkpoint_fallbacks = 0         # corrupt steps skipped at boot
         self._lat_count = 0
         self._lat_sum_ms = 0.0
         self._lat_max_ms = 0.0
@@ -191,6 +216,10 @@ class ServerMetrics:
                 "auth_rejected": self.auth_rejected,
                 "pushes": self.pushes,
                 "coalesced_items": self.coalesced_items,
+                "duplicate_acks": self.duplicate_acks,
+                "engine_errors": self.engine_errors,
+                "flush_errors": self.flush_errors,
+                "internal_errors": self.internal_errors,
                 "push_latency_ms": {
                     "count": self._lat_count,
                     "mean": (self._lat_sum_ms / self._lat_count
@@ -217,15 +246,20 @@ class ServerMetrics:
 
 
 class _Item:
-    """One admitted push riding the ingress queue to the coalescer."""
+    """One admitted push riding the ingress queue to the coalescer.
+    ``seq`` is the tenant's durability sequence number (client-supplied or
+    server-assigned at admission) — it keys the WAL record and duplicate
+    detection."""
 
-    __slots__ = ("stream_id", "rb", "future", "t_enqueue")
+    __slots__ = ("stream_id", "rb", "future", "t_enqueue", "seq")
 
-    def __init__(self, stream_id: int, rb: RecordBatch, future, t_enqueue):
+    def __init__(self, stream_id: int, rb: RecordBatch, future, t_enqueue,
+                 seq: int):
         self.stream_id = stream_id
         self.rb = rb
         self.future = future
         self.t_enqueue = t_enqueue
+        self.seq = seq
 
 
 _STOP = object()   # coalescer shutdown sentinel (rides the queue last)
@@ -251,9 +285,16 @@ class StreamServer:
         before dispatching the micro-batch.
     max_coalesce_records : record cap per dispatch cycle.
     checkpoint_dir : durability root (``None`` disables checkpointing);
-        :meth:`start` recovers from the latest checkpoint found there.
+        :meth:`start` recovers from the newest *valid* checkpoint found
+        there (corrupt steps are skipped — degraded mode), then replays
+        the WAL past its watermark.
     checkpoint_every_s : periodic background checkpoint interval
         (``None`` = only on :meth:`stop`).
+    serving : :class:`ServingConfig` — WAL + supervision knobs
+        (docs/serving.md durability contract).
+    wal_dir : override for the write-ahead-log root; defaults to
+        ``<checkpoint_dir>/wal`` when checkpointing is on and
+        ``serving.wal`` is true.
     """
 
     def __init__(self, *, nt_w: int, alpha0, tenants: dict,
@@ -262,7 +303,9 @@ class StreamServer:
                  queue_limit: int = 64, flush_ms: float = 2.0,
                  max_coalesce_records: int = 65536,
                  checkpoint_dir: str | None = None,
-                 checkpoint_every_s: float | None = None):
+                 checkpoint_every_s: float | None = None,
+                 serving: ServingConfig | None = None,
+                 wal_dir: str | None = None):
         if config is None:
             config = EngineConfig()
         if not isinstance(config, EngineConfig):
@@ -299,6 +342,15 @@ class StreamServer:
         self.max_coalesce_records = int(max_coalesce_records)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every_s = checkpoint_every_s
+        if serving is None:
+            serving = ServingConfig()
+        if not isinstance(serving, ServingConfig):
+            raise TypeError(f"serving must be a ServingConfig, "
+                            f"got {type(serving).__name__}")
+        self.serving = serving
+        if wal_dir is None and checkpoint_dir is not None and serving.wal:
+            wal_dir = os.path.join(checkpoint_dir, "wal")
+        self.wal_dir = wal_dir
         self.metrics = ServerMetrics(range(self.n_streams))
 
         self._buckets = {
@@ -326,18 +378,38 @@ class StreamServer:
         self._ckpt_task = None
         self._draining = False
         self._stopped = False
+        self._stop_done: asyncio.Event | None = None
         self._started_at: float | None = None
         self._loop: asyncio.AbstractEventLoop | None = None
+        # durability state (engine-thread-owned after start(); admission
+        # reads are GIL-atomic int/list peeks)
+        self._wal: FleetWAL | None = None
+        self._watermarks = [0] * self.n_streams   # last applied seq
+        self._seq_hwm = [0] * self.n_streams      # highest admitted seq
+        # WAL GC lags one checkpoint generation: segments are deleted only
+        # once the PREVIOUS checkpoint covers them, so recovery still works
+        # when the newest step turns out corrupt and we fall back
+        self._gc_marks = [0] * self.n_streams
+        self._last_ack: list[dict | None] = [None] * self.n_streams
+        # supervision state
+        self._degraded: dict[str, str] = {}       # reason -> detail
+        self._task_restarts: dict[str, int] = {}
+        self._last_ckpt_t: float | None = None
 
     # -- lifecycle -----------------------------------------------------------
 
     async def start(self) -> "StreamServer":
-        """Bind both listeners, recover from the latest checkpoint (if a
-        ``checkpoint_dir`` holds one) and start the coalescer.  Returns self;
+        """Bind both listeners, recover (newest *valid* checkpoint + WAL
+        replay past its watermark, GC of stale tmp dirs and covered WAL
+        segments) and start the supervised loops.  Returns self;
         ``self.port`` / ``self.http_port`` are the bound ports."""
         self._loop = asyncio.get_running_loop()
         self._queue = asyncio.Queue(maxsize=self.queue_limit)
-        if self.checkpoint_dir is not None:
+        if self.wal_dir is not None:
+            self._wal = FleetWAL(self.wal_dir, self.n_streams,
+                                 segment_bytes=self.serving.wal_segment_bytes,
+                                 fsync=self.serving.wal_fsync)
+        if self.checkpoint_dir is not None or self._wal is not None:
             self._recover()
         self._tcp = await asyncio.start_server(
             self._handle_conn, self.host, self._want_port)
@@ -345,33 +417,95 @@ class StreamServer:
         self._http = await asyncio.start_server(
             self._handle_http, self.host, self._want_http_port)
         self.http_port = self._http.sockets[0].getsockname()[1]
-        self._coalescer_task = asyncio.create_task(self._coalesce_loop())
+        self._coalescer_task = asyncio.create_task(
+            self._supervised("coalescer", self._coalesce_loop))
         if self.checkpoint_dir is not None and self.checkpoint_every_s:
-            self._ckpt_task = asyncio.create_task(self._checkpoint_loop())
+            self._ckpt_task = asyncio.create_task(
+                self._supervised("checkpoint", self._checkpoint_loop))
         self._started_at = time.monotonic()
+        self._last_ckpt_t = time.monotonic()
         self._log("start", port=self.port, http_port=self.http_port,
-                  n_streams=self.n_streams, recovered=self._recovered)
+                  n_streams=self.n_streams, recovered=self._recovered,
+                  wal=self._wal is not None)
         return self
 
     _recovered = False
 
     def _recover(self) -> None:
-        from repro.train.checkpoint import latest_step, restore_checkpoint
+        """Recovery = newest valid checkpoint + WAL replay.  Runs before
+        the listeners bind and the engine thread exists, so it may touch
+        the engine directly."""
+        from repro.train.checkpoint import (CheckpointCorruption,
+                                            gc_tmp_dirs,
+                                            restore_latest_valid)
 
-        step = latest_step(self.checkpoint_dir)
-        if step is None:
-            return
-        state, _extra = restore_checkpoint(
-            self.checkpoint_dir, self.engine.state_dict(), host=True)
-        self.engine.restore(state)
-        # published marks restart at the restored history lengths: new
+        state, extra, step = None, {}, None
+        if self.checkpoint_dir is not None:
+            for tmp in gc_tmp_dirs(self.checkpoint_dir):
+                self._log("gc_tmp_checkpoint", path=tmp)
+            try:
+                state, extra, step, skipped = restore_latest_valid(
+                    self.checkpoint_dir, self.engine.state_dict(), host=True)
+            except FileNotFoundError:
+                skipped = []
+            except CheckpointCorruption as e:
+                # steps exist but none is loadable: fresh engine + full WAL
+                # replay is the best remaining truth — surface loudly
+                skipped = []
+                self.metrics.checkpoint_fallbacks += 1
+                self._set_degraded("checkpoint_fallback", str(e))
+                self._log("recover_no_valid_checkpoint", error=str(e))
+            if skipped:
+                self.metrics.checkpoint_fallbacks += len(skipped)
+                self._set_degraded(
+                    "checkpoint_fallback",
+                    f"skipped corrupt steps {skipped}, restored {step}")
+                self._log("recover_fallback", skipped=skipped, step=step)
+        if state is not None:
+            self.engine.restore(state)
+            marks = extra.get("watermarks")
+            if marks is not None:
+                self._watermarks = [int(w) for w in marks]
+            self._recovered = True
+            self._log("recover", step=int(step),
+                      watermarks=list(self._watermarks),
+                      windows=[self.engine.n_counted(s)
+                               for s in range(self.n_streams)])
+        if self._wal is not None:
+            self._replay_wal()
+        # published marks restart at the recovered history lengths: new
         # subscribers replay nothing stale, result RPCs return everything
         self._published = [self.engine.n_counted(s)
                            for s in range(self.n_streams)]
-        self._recovered = True
-        self._log("recover", step=int(step),
-                  windows=[self.engine.n_counted(s)
-                           for s in range(self.n_streams)])
+        self._seq_hwm = list(self._watermarks)
+
+    def _replay_wal(self) -> None:
+        """Apply WAL records past the checkpoint watermark, per tenant in
+        seq order — engine determinism across micro-batch cuts makes the
+        result bit-identical to the crash-free run.  Rejected records
+        re-reject identically; torn tails are repaired; segments fully
+        covered by the checkpoint are GC'd."""
+        ckpt_marks = list(self._watermarks)   # GC bound: checkpoint only
+        n_replayed = 0
+        for s in range(self.n_streams):
+            try:
+                for seq, rb in self._wal.replay(s):
+                    if seq <= self._watermarks[s]:
+                        continue          # covered by the checkpoint
+                    out = self._apply_records(s, rb)
+                    self._watermarks[s] = seq
+                    self._last_ack[s] = out
+                    n_replayed += 1
+            except WALCorruption as e:
+                self._set_degraded("wal_corruption", str(e))
+                self._log("wal_corruption", stream_id=s, error=str(e))
+        if n_replayed:
+            self.engine.flush()
+            self._recovered = True
+        removed = self._wal.gc(ckpt_marks)
+        self._gc_marks = list(ckpt_marks)
+        self._log("wal_replay", replayed=n_replayed,
+                  watermarks=list(self._watermarks), segments_gc=removed)
 
     async def stop(self, *, finalize: bool = False,
                    checkpoint: bool = True) -> None:
@@ -379,40 +513,99 @@ class StreamServer:
         everything already admitted, flush the engine (``finalize=True``
         additionally ends every stream — true end-of-stream only, since a
         finalized checkpoint cannot be pushed to after recovery), publish
-        the final estimates, checkpoint, and close both listeners."""
-        if self._stopped:
+        the final estimates, checkpoint, and close both listeners.
+
+        Idempotent: a second ``stop()`` (signal race, test teardown) waits
+        for the first to finish and returns.  A drain that exceeds
+        ``serving.drain_timeout_s`` is cancelled and every still-queued
+        item's future resolves with a ``draining`` reject — no client
+        coroutine is left hanging on an orphaned future."""
+        if self._stop_done is not None:
+            await self._stop_done.wait()
             return
-        self._draining = True
-        if self._tcp is not None:
-            # close() only — on >=3.12.1 wait_closed() also waits for live
-            # client handlers, which would deadlock the drain while a
-            # subscriber keeps its connection open
-            self._tcp.close()
-        await self._queue.put(_STOP)   # FIFO: lands after admitted items
-        if self._coalescer_task is not None:
-            await self._coalescer_task
-        if self._ckpt_task is not None:
-            self._ckpt_task.cancel()
+        self._stop_done = asyncio.Event()
+        try:
+            self._draining = True
+            if self._tcp is not None:
+                # close() only — on >=3.12.1 wait_closed() also waits for
+                # live client handlers, which would deadlock the drain while
+                # a subscriber keeps its connection open
+                self._tcp.close()
+            if self._queue is not None:
+                try:   # FIFO: the sentinel lands after admitted items
+                    await asyncio.wait_for(self._queue.put(_STOP),
+                                           self.serving.drain_timeout_s)
+                except asyncio.TimeoutError:
+                    pass   # coalescer wedged; the cancel below cleans up
+            if self._coalescer_task is not None:
+                try:
+                    await asyncio.wait_for(
+                        asyncio.shield(self._coalescer_task),
+                        self.serving.drain_timeout_s)
+                except asyncio.TimeoutError:
+                    self._coalescer_task.cancel()
+                    try:
+                        await self._coalescer_task
+                    except asyncio.CancelledError:
+                        pass
+            if self._ckpt_task is not None:
+                self._ckpt_task.cancel()
+                try:
+                    await self._ckpt_task
+                except asyncio.CancelledError:
+                    pass
+            self._drain_queue_rejects()
             try:
-                await self._ckpt_task
-            except asyncio.CancelledError:
-                pass
-        if finalize:
-            updates = await self._loop.run_in_executor(
-                self._pool, self._engine_finalize_all)
-        else:
-            updates = await self._loop.run_in_executor(
-                self._pool, self._engine_flush)
-        self._fanout_estimates(updates)
-        if checkpoint and self.checkpoint_dir is not None:
-            await self._loop.run_in_executor(self._pool, self._save_checkpoint)
-        if self._http is not None:
-            self._http.close()
-        for subs in self._subscribers.values():
-            subs.clear()
-        self._pool.shutdown(wait=True)
-        self._stopped = True
-        self._log("stop", finalize=finalize, checkpoint=checkpoint)
+                if finalize:
+                    updates = await self._loop.run_in_executor(
+                        self._pool, self._engine_finalize_all)
+                else:
+                    updates = await self._loop.run_in_executor(
+                        self._pool, self._engine_flush)
+                self._fanout_estimates(updates)
+            except Exception as e:
+                self.metrics.flush_errors += 1
+                self._log("stop_flush_error", error=repr(e))
+            if checkpoint and self.checkpoint_dir is not None:
+                try:
+                    await self._loop.run_in_executor(
+                        self._pool, self._save_checkpoint)
+                except Exception as e:
+                    self.metrics.checkpoint_failures += 1
+                    self._log("stop_checkpoint_error", error=repr(e))
+            if self._wal is not None:
+                self._wal.close()
+            if self._http is not None:
+                self._http.close()
+            for subs in self._subscribers.values():
+                subs.clear()
+            self._pool.shutdown(wait=True)
+            self._stopped = True
+            self._log("stop", finalize=finalize, checkpoint=checkpoint)
+        finally:
+            self._stop_done.set()
+
+    def _drain_queue_rejects(self) -> None:
+        """Resolve every future still riding the queue with a ``draining``
+        reject — a timed-out drain or a crash-restarted coalescer must not
+        leave client coroutines awaiting forever."""
+        if self._queue is None:
+            return
+        n = 0
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            if item is _STOP:
+                continue
+            if not item.future.done():
+                item.future.set_result({
+                    "ok": False, "reason": REJECT_DRAINING,
+                    "detail": "server stopped before applying this batch"})
+                n += 1
+        if n:
+            self._log("drain_rejects", n_items=n)
 
     async def serve_forever(self) -> None:
         """Run until cancelled (the launcher wires SIGINT/SIGTERM to a
@@ -430,21 +623,84 @@ class StreamServer:
                 self._published[s] = n
         return ups
 
+    def _apply_records(self, s: int, rb: RecordBatch) -> dict:
+        """Apply one batch on the engine and return its ack outcome.
+        Shared by the live path and WAL replay, so replay reproduces the
+        original outcomes — deterministic engine rejects re-reject
+        identically, which is what lets the watermark advance over them."""
+        try:
+            closed = self.engine.push(s, rb.tau, rb.edge_i, rb.edge_j,
+                                      op=rb.op)
+            return {"ok": True, "accepted": rb.n, "windows_closed": closed}
+        except (ValueError, RuntimeError, NotImplementedError) as e:
+            return {"ok": False, "reason": REJECT_ENGINE, "detail": str(e)}
+
+    def _apply_one(self, it: _Item) -> dict:
+        """WAL-append + engine-apply one admitted item, with broad per-item
+        exception isolation: a poisoned batch rejects (``internal``) instead
+        of killing the coalescer for every tenant."""
+        s = it.stream_id
+        if self._wal is not None:
+            try:
+                self._wal.append(s, it.seq, it.rb)
+            except WALError as e:
+                # nothing acked durable: reject so the client retries after
+                # the disk recovers; watermark does NOT advance
+                self.metrics.wal_errors += 1
+                self._set_degraded("wal", str(e))
+                return {"ok": False, "reason": REJECT_WAL, "detail": str(e)}
+        try:
+            fault_point("engine_apply_raise")
+            out = self._apply_records(s, it.rb)
+        except Exception as e:
+            self.metrics.engine_errors += 1
+            self._log("engine_error", stream_id=s, error=repr(e))
+            out = {"ok": False, "reason": REJECT_INTERNAL, "detail": repr(e)}
+        # the watermark advances for applied AND engine-rejected outcomes
+        # (replay re-rejects deterministically) but not for wal/internal
+        # errors, which the client should retry under the same seq
+        if out["ok"] or out["reason"] == REJECT_ENGINE:
+            self._watermarks[s] = it.seq
+            self._last_ack[s] = dict(out)
+        return out
+
     def _engine_apply(self, items: list) -> tuple[list, dict]:
         outs = []
         for it in items:
+            s = it.stream_id
+            if it.seq <= self._watermarks[s]:
+                # duplicate already durably applied (a client retry raced
+                # its own in-flight original): idempotent ack from the cache
+                cached = (self._last_ack[s]
+                          if it.seq == self._watermarks[s] else None)
+                out = (dict(cached) if cached is not None
+                       else {"ok": True, "accepted": 0, "windows_closed": 0})
+                out["duplicate"] = True
+                outs.append(out)
+                continue
+            outs.append(self._apply_one(it))
+        fault_point("post_ack_pre_wal")
+        # batched group commit: ONE fsync covers the whole cycle, and it
+        # lands before any of the acks above reach a socket
+        wal_failed = any(not o.get("ok") and o.get("reason") == REJECT_WAL
+                         for o in outs)
+        if self._wal is not None:
             try:
-                closed = self.engine.push(
-                    it.stream_id, it.rb.tau, it.rb.edge_i, it.rb.edge_j,
-                    op=it.rb.op)
-                outs.append({"ok": True, "accepted": it.rb.n,
-                             "windows_closed": closed})
-            except (ValueError, RuntimeError, NotImplementedError) as e:
-                outs.append({"ok": False, "reason": REJECT_ENGINE,
-                             "detail": str(e)})
-        # ONE flush for the whole cycle: windows closed by different tenants
-        # above co-batch through one bucketed executor dispatch
-        self.engine.flush()
+                self._wal.sync()
+                if not wal_failed:   # a clean full cycle clears degraded
+                    self._clear_degraded("wal")
+            except WALError as e:
+                # the records ARE applied — acks stand; durability degrades
+                # to checkpoint-only until the disk recovers
+                self.metrics.wal_errors += 1
+                self._set_degraded("wal", str(e))
+        try:
+            # ONE flush for the whole cycle: windows closed by different
+            # tenants above co-batch through one bucketed executor dispatch
+            self.engine.flush()
+        except Exception as e:
+            self.metrics.flush_errors += 1
+            self._log("flush_error", error=repr(e))
         return outs, self._collect_updates()
 
     def _engine_flush(self) -> dict:
@@ -468,8 +724,18 @@ class StreamServer:
 
         prev = latest_step(self.checkpoint_dir)
         step = 0 if prev is None else int(prev) + 1
+        # state_dict + watermarks snapshot on the same (engine) thread, so
+        # the saved watermark is exactly the state's last applied seq
         save_checkpoint(self.checkpoint_dir, step, self.engine.state_dict(),
-                        extra={"published": list(self._published)})
+                        extra={"published": list(self._published),
+                               "watermarks": list(self._watermarks)})
+        self._last_ckpt_t = time.monotonic()
+        if self._wal is not None:
+            removed = self._wal.gc(self._gc_marks)
+            if removed:
+                self._log("wal_gc", segments=removed,
+                          watermarks=list(self._gc_marks))
+        self._gc_marks = list(self._watermarks)
         self._log("checkpoint", step=step)
 
     # -- coalescer -----------------------------------------------------------
@@ -497,13 +763,40 @@ class StreamServer:
                 batch.append(nxt)
                 total += nxt.rb.n
             t0 = time.monotonic()
-            outs, updates = await self._loop.run_in_executor(
-                self._pool, self._engine_apply, batch)
+            try:
+                outs, updates = await self._loop.run_in_executor(
+                    self._pool, self._engine_apply, batch)
+                self._clear_degraded("coalescer")
+            except asyncio.CancelledError:
+                # drain timeout cancelled us mid-dispatch: the batch's
+                # futures must not be orphaned — clients would await forever
+                for it in batch:
+                    if not it.future.done():
+                        it.future.set_result({
+                            "ok": False, "reason": REJECT_DRAINING,
+                            "detail": "server stopped before acking this "
+                                      "batch"})
+                raise
+            except Exception as e:
+                # the whole dispatch cycle blew up: resolve every future so
+                # no client hangs, then keep coalescing
+                self.metrics.internal_errors += 1
+                self._set_degraded("coalescer", repr(e))
+                self._log("dispatch_error", error=repr(e),
+                          n_items=len(batch))
+                outs = [{"ok": False, "reason": REJECT_INTERNAL,
+                         "detail": repr(e)}] * len(batch)
+                updates = {}
             dt_ms = (time.monotonic() - t0) * 1e3
             self.metrics.observe_push_latency(dt_ms, len(batch))
+            # kill here = WAL synced + applied but nothing acked: the
+            # client's retry must dedupe (exactly-once leg of the contract)
+            fault_point("pre_ack")
             for it, out in zip(batch, outs):
                 t = self.metrics.tenants[it.stream_id]
-                if out["ok"]:
+                if out.get("duplicate"):
+                    self.metrics.duplicate_acks += 1
+                elif out["ok"]:
                     t.edges_accepted += it.rb.n
                     t.batches_accepted += 1
                     t.windows_closed += out["windows_closed"]
@@ -568,7 +861,10 @@ class StreamServer:
                     await self._send(writer, {
                         "type": "hello_ok", "stream_id": p.stream_id,
                         "nt_w": self.engine.nt_w,
-                        "max_batch_records": p.max_batch_records})
+                        "max_batch_records": p.max_batch_records,
+                        # durable watermark + 1: a reconnecting client
+                        # resumes its seq lane here (docs/serving.md)
+                        "next_seq": self._watermarks[p.stream_id] + 1})
                     continue
                 if pol is None:
                     await self._send(writer, {"type": "error",
@@ -634,6 +930,31 @@ class StreamServer:
         except ValueError as e:
             await reject(REJECT_BAD_RECORDS, 0, detail=str(e))
             return
+        try:
+            seq = normalize_seq(msg.get("seq"))
+        except ValueError as e:
+            await reject(REJECT_BAD_SEQ, rb.n, detail=str(e))
+            return
+        if seq is not None and seq <= self._watermarks[s]:
+            # already durably applied (client retry after a lost ack):
+            # idempotent duplicate ack, bypassing oversized/quota — the
+            # records were admitted and charged the first time
+            self.metrics.duplicate_acks += 1
+            cached = (self._last_ack[s]
+                      if seq == self._watermarks[s] else None)
+            out = (dict(cached) if cached is not None
+                   else {"ok": True, "accepted": 0, "windows_closed": 0})
+            reply = self._push_reply(out, seq, duplicate=True)
+            if tag is not None:
+                reply["id"] = tag
+            self._log("push_duplicate", stream_id=s, seq=seq)
+            await self._send(writer, reply)
+            return
+        if seq is not None and seq > self._seq_hwm[s] + 1:
+            await reject(REJECT_BAD_SEQ, rb.n,
+                         detail=f"seq {seq} skips ahead (highest admitted "
+                                f"is {self._seq_hwm[s]})")
+            return
         if rb.n > pol.max_batch_records:
             await reject(REJECT_OVERSIZED, rb.n,
                          detail=f"{rb.n} > max_batch_records="
@@ -642,30 +963,45 @@ class StreamServer:
         if not self._buckets[token].admit(rb.n):
             await reject(REJECT_QUOTA, rb.n)
             return
+        if seq is None:
+            seq = self._seq_hwm[s] + 1   # legacy client: server-assigned
         fut = self._loop.create_future()
         try:
-            self._queue.put_nowait(_Item(s, rb, fut, t0))
+            self._queue.put_nowait(_Item(s, rb, fut, t0, seq))
         except asyncio.QueueFull:
+            # hwm intentionally NOT advanced: a backpressure reject must
+            # not burn the seq the client will retry with
             await reject(REJECT_BACKPRESSURE, rb.n,
                          detail=f"ingress queue full "
                                 f"(queue_limit={self.queue_limit})")
             return
+        self._seq_hwm[s] = max(self._seq_hwm[s], seq)
         out = await fut     # resolves when the engine applied the item
         ms = (time.monotonic() - t0) * 1e3
+        reply = self._push_reply(out, seq,
+                                 duplicate=bool(out.get("duplicate")))
         if out["ok"]:
-            reply = {"type": "ack", "accepted": out["accepted"],
-                     "windows_closed": out["windows_closed"]}
-            self._log("push", stream_id=s, n_edges=rb.n,
+            self._log("push", stream_id=s, n_edges=rb.n, seq=seq,
                       windows_closed=out["windows_closed"],
                       latency_ms=round(ms, 3))
         else:
-            reply = {"type": "reject", "reason": out["reason"],
-                     "detail": out["detail"]}
             self._log("push_reject", stream_id=s, reason=out["reason"],
                       n_edges=rb.n)
         if tag is not None:
             reply["id"] = tag
         await self._send(writer, reply)
+
+    @staticmethod
+    def _push_reply(out: dict, seq: int, *, duplicate: bool = False) -> dict:
+        if out["ok"]:
+            reply = {"type": "ack", "accepted": out["accepted"],
+                     "windows_closed": out["windows_closed"], "seq": seq}
+        else:
+            reply = {"type": "reject", "reason": out["reason"],
+                     "detail": out.get("detail", ""), "seq": seq}
+        if duplicate:
+            reply["duplicate"] = True
+        return reply
 
     @staticmethod
     async def _send(writer: asyncio.StreamWriter, obj: dict) -> None:
@@ -688,8 +1024,11 @@ class StreamServer:
             parts = req.decode("ascii", "replace").split()
             path = parts[1] if len(parts) >= 2 else "/"
             if path == "/healthz":
+                degraded = self._degraded_reasons()
                 status, body = 200, {
-                    "status": "draining" if self._draining else "ok",
+                    "status": ("draining" if self._draining
+                               else "degraded" if degraded else "ok"),
+                    "degraded": degraded,
                     "uptime_s": round(time.monotonic() - self._started_at, 3),
                     "n_streams": self.n_streams,
                 }
@@ -700,6 +1039,19 @@ class StreamServer:
                     uptime_s=round(time.monotonic() - self._started_at, 3),
                     windows_counted=[self.engine.n_counted(s)
                                      for s in range(self.n_streams)],
+                    degraded=self._degraded_reasons(),
+                    supervision={
+                        "task_restarts": dict(self._task_restarts),
+                        "checkpoint_failures":
+                            self.metrics.checkpoint_failures,
+                        "checkpoint_fallbacks":
+                            self.metrics.checkpoint_fallbacks,
+                        "last_checkpoint_age_s": (
+                            round(time.monotonic() - self._last_ckpt_t, 3)
+                            if self._last_ckpt_t is not None else None),
+                    },
+                    wal=self._wal_stats(),
+                    watermarks=list(self._watermarks),
                 )
             else:
                 status, body = 404, {"error": "not found",
@@ -717,12 +1069,89 @@ class StreamServer:
         finally:
             writer.close()
 
+    # -- supervision ---------------------------------------------------------
+
+    async def _supervised(self, name: str, factory) -> None:
+        """Run ``factory()`` to completion, restarting it on unexpected
+        exceptions with bounded exponential backoff (unbounded restarts —
+        the loops are load-bearing; a wedged loop is worse than a thrashing
+        one).  A clean return (graceful drain) or cancellation ends
+        supervision.  Restarts count into ``/metrics`` supervision stats and
+        flag degraded mode until the loop runs a healthy cycle again."""
+        backoff = self.serving.restart_backoff
+        attempt = 0
+        while True:
+            t0 = time.monotonic()
+            try:
+                await factory()
+                return
+            except asyncio.CancelledError:
+                raise
+            except Exception as e:
+                if time.monotonic() - t0 > 5.0:
+                    attempt = 0     # ran healthy for a while: reset backoff
+                self._task_restarts[name] = \
+                    self._task_restarts.get(name, 0) + 1
+                self._set_degraded(name, f"restarted after {e!r}")
+                self._log("task_restart", task=name, error=repr(e),
+                          restarts=self._task_restarts[name])
+                await asyncio.sleep(backoff.delay(attempt))
+                attempt += 1
+
     # -- periodic checkpoint -------------------------------------------------
 
     async def _checkpoint_loop(self) -> None:
+        retry = self.serving.checkpoint_retry
         while True:
             await asyncio.sleep(self.checkpoint_every_s)
-            await self._loop.run_in_executor(self._pool, self._save_checkpoint)
+            attempt = 0
+            while True:     # retry in place: a full disk must not silently
+                try:        # end periodic checkpointing for the process
+                    await self._loop.run_in_executor(
+                        self._pool, self._save_checkpoint)
+                    self._clear_degraded("checkpoint")
+                    break
+                except asyncio.CancelledError:
+                    raise
+                except Exception as e:
+                    self.metrics.checkpoint_failures += 1
+                    self._set_degraded("checkpoint", repr(e))
+                    self._log("checkpoint_error", error=repr(e),
+                              failures=self.metrics.checkpoint_failures)
+                    await asyncio.sleep(retry.delay(attempt))
+                    attempt += 1
+
+    # -- degraded mode -------------------------------------------------------
+
+    def _set_degraded(self, reason: str, detail: str) -> None:
+        if reason not in self._degraded:
+            self._log("degraded", reason=reason, detail=detail)
+        self._degraded[reason] = detail
+
+    def _clear_degraded(self, reason: str) -> None:
+        if self._degraded.pop(reason, None) is not None:
+            self._log("degraded_clear", reason=reason)
+
+    def _degraded_reasons(self) -> list[str]:
+        """Persistent degraded reasons plus the transient staleness check:
+        a checkpoint older than ``degraded_checkpoint_age_factor`` intervals
+        means periodic durability is behind even if no attempt failed yet."""
+        reasons = sorted(self._degraded)
+        if (self.checkpoint_every_s and self._last_ckpt_t is not None
+                and not self._stopped):
+            age = time.monotonic() - self._last_ckpt_t
+            if (age > self.serving.degraded_checkpoint_age_factor
+                    * self.checkpoint_every_s
+                    and "checkpoint_stale" not in reasons):
+                reasons.append("checkpoint_stale")
+        return reasons
+
+    def _wal_stats(self) -> dict:
+        out = {"enabled": self._wal is not None,
+               "errors": self.metrics.wal_errors}
+        if self._wal is not None:
+            out.update(self._wal.stats())
+        return out
 
     # -- structured logs -----------------------------------------------------
 

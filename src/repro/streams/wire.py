@@ -34,6 +34,17 @@ On the socket (:mod:`repro.streams.server`) a batch is the JSON object
 never travels on the wire; the server derives it from the connection's
 authenticated token, so a tenant cannot write into another tenant's stream.
 :func:`records_from_json` / :func:`records_to_json` are that mapping.
+
+Durability lane: a push message may carry ``"seq"`` — a client-assigned
+**monotonic per-tenant sequence number** (1-based, contiguous) validated by
+:func:`normalize_seq`.  It keys the server's write-ahead log and duplicate
+detection: a batch durably applied under seq ``N`` and retried (crash,
+timeout, reconnect) with the same ``N`` is acked idempotently instead of
+applied twice — the exactly-once half of the durability contract
+(docs/serving.md).  ``hello_ok`` returns ``next_seq`` so a reconnecting
+client knows the server's durable watermark.  Omitting ``seq`` keeps the
+pre-durability behavior (the server assigns one internally; retries are
+then indistinguishable from new batches).
 """
 from __future__ import annotations
 
@@ -50,6 +61,7 @@ __all__ = [
     "as_columns",
     "records_from_json",
     "records_to_json",
+    "normalize_seq",
 ]
 
 OP_INSERT = 0
@@ -151,6 +163,21 @@ def records_from_json(obj, *, stream_id: int = 0) -> RecordBatch:
                                  op=obj.get("op"), stream_id=stream_id)
     except TypeError as e:  # ragged / non-numeric JSON payloads
         raise ValueError(f"records columns must be numeric arrays: {e}")
+
+
+def normalize_seq(value) -> int | None:
+    """Validate a push message's durability sequence number: a positive
+    integer (1-based) or ``None`` (absent — server assigns).  Bools,
+    floats, strings and non-positive values raise ``ValueError`` — the
+    server turns that into a ``bad_seq`` rejection."""
+    if value is None:
+        return None
+    if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
+        raise ValueError(
+            f"seq must be a positive integer, got {type(value).__name__}")
+    if value < 1:
+        raise ValueError(f"seq must be >= 1, got {value}")
+    return int(value)
 
 
 def records_to_json(batch: RecordBatch) -> dict:

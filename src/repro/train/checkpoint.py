@@ -7,6 +7,17 @@ Layout: <dir>/step_<N>/
 
 Atomicity: written to ``<dir>/.tmp_step_<N>`` then os.rename'd (rename is
 atomic on POSIX), so a crash mid-write never corrupts the latest checkpoint.
+Integrity: the manifest records a CRC32 of ``arrays.npz``;
+:func:`verify_checkpoint` checks it and :func:`restore_latest_valid` walks
+steps newest-first, falling back past any truncated/bit-flipped/corrupt
+step instead of crashing (the serving front end then replays its WAL on
+top — see docs/serving.md).  Both files are fsynced before the rename and
+the parent directory after it, so a SIGKILL at any point leaves either the
+previous step or a complete new one.  ``save_checkpoint`` traverses the
+``pre_checkpoint_rename`` / ``disk_full`` fault points
+(:mod:`repro.streams.faults`) so crash tests can land exactly in the
+tmp-written-not-renamed window; :func:`gc_tmp_dirs` sweeps the stale
+``.tmp_step_*`` dirs such a crash leaves.
 Restore accepts a *different* mesh/sharding than the one saved with —
 arrays land host-side then ``jax.device_put`` against the new shardings
 (elastic resume / resharding restarts).  ``AsyncCheckpointer`` runs saves on
@@ -19,11 +30,29 @@ import os
 import shutil
 import threading
 from typing import Any
+from zlib import crc32
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer"]
+from repro.train.fault import fault_point
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "restore_latest_valid",
+    "verify_checkpoint",
+    "valid_steps",
+    "latest_step",
+    "gc_tmp_dirs",
+    "CheckpointCorruption",
+    "AsyncCheckpointer",
+]
+
+
+class CheckpointCorruption(ValueError):
+    """A step directory failed verification (missing file, bad JSON, CRC
+    mismatch, leaf-count drift)."""
 
 
 def _flatten_with_names(tree):
@@ -31,7 +60,19 @@ def _flatten_with_names(tree):
     return leaves, treedef
 
 
+def _file_crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                break
+            crc = crc32(chunk, crc)
+    return crc
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, extra: dict | None = None) -> str:
+    fault_point("disk_full")
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
@@ -40,13 +81,18 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, extra: dict | None =
     os.makedirs(tmp)
     leaves, treedef = _flatten_with_names(tree)
     host = [np.asarray(x) for x in leaves]
-    np.savez(os.path.join(tmp, "arrays.npz"), *host)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    with open(arrays_path, "wb") as f:
+        np.savez(f, *host)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "n_leaves": len(host),
         "shapes": [list(a.shape) for a in host],
         "dtypes": [str(a.dtype) for a in host],
+        "crc32_arrays": f"{_file_crc32(arrays_path):08x}",
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -55,7 +101,14 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, extra: dict | None =
         os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
+    fault_point("pre_checkpoint_rename")
     os.rename(tmp, final)
+    # fsync the parent dir so the rename itself survives a power cut
+    dfd = os.open(ckpt_dir, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
     return final
 
 
@@ -65,6 +118,63 @@ def latest_step(ckpt_dir: str) -> int | None:
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
              if d.startswith("step_")]
     return max(steps) if steps else None
+
+
+def valid_steps(ckpt_dir: str) -> list[int]:
+    """Every step under ``ckpt_dir``, ascending — existence only; use
+    :func:`verify_checkpoint` for integrity."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_"))
+
+
+def gc_tmp_dirs(ckpt_dir: str) -> list[str]:
+    """Remove stale ``.tmp_step_*`` dirs (a crash between tmp-write and
+    rename leaves one).  Returns the paths removed."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    removed = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith(".tmp_step_"):
+            path = os.path.join(ckpt_dir, d)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> dict:
+    """Integrity-check one step; returns its manifest or raises
+    :class:`CheckpointCorruption`.  Pre-checksum checkpoints (no
+    ``crc32_arrays``) are verified structurally (files parse/load and the
+    leaf count matches the manifest)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruption(f"{path}: unreadable manifest: {e}") from e
+    arrays_path = os.path.join(path, "arrays.npz")
+    want_crc = manifest.get("crc32_arrays")
+    if want_crc is not None:
+        try:
+            got = f"{_file_crc32(arrays_path):08x}"
+        except OSError as e:
+            raise CheckpointCorruption(f"{path}: unreadable arrays: {e}") from e
+        if got != want_crc:
+            raise CheckpointCorruption(
+                f"{path}: arrays.npz CRC mismatch "
+                f"(manifest {want_crc}, file {got})")
+    try:
+        with np.load(arrays_path) as data:
+            n = len(data.files)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruption(f"{path}: arrays.npz unloadable: {e}") from e
+    if n != manifest.get("n_leaves"):
+        raise CheckpointCorruption(
+            f"{path}: {n} arrays vs manifest n_leaves="
+            f"{manifest.get('n_leaves')}")
+    return manifest
 
 
 def restore_checkpoint(ckpt_dir: str, template: Any, *, step: int | None = None,
@@ -107,6 +217,36 @@ def restore_checkpoint(ckpt_dir: str, template: Any, *, step: int | None = None,
     else:
         placed = [jax.numpy.asarray(h, dtype=t.dtype) for h, t in zip(loaded, t_leaves)]
     return jax.tree.unflatten(treedef, placed), manifest["extra"]
+
+
+def restore_latest_valid(ckpt_dir: str, template: Any, *, shardings: Any = None,
+                         host: bool = False
+                         ) -> tuple[Any, dict, int, list[int]]:
+    """Restore the newest step that passes :func:`verify_checkpoint` *and*
+    loads against ``template``, skipping corrupt ones newest-first.
+
+    Returns ``(state, extra, step, skipped)`` where ``skipped`` lists the
+    corrupt steps passed over (callers surface that as degraded mode).
+    Raises ``FileNotFoundError`` when no step exists at all and
+    :class:`CheckpointCorruption` when steps exist but none is loadable.
+    """
+    steps = valid_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    skipped: list[int] = []
+    last_err: Exception | None = None
+    for step in reversed(steps):
+        try:
+            verify_checkpoint(ckpt_dir, step)
+            state, extra = restore_checkpoint(
+                ckpt_dir, template, step=step, shardings=shardings, host=host)
+            return state, extra, step, skipped
+        except (CheckpointCorruption, OSError, ValueError) as e:
+            skipped.append(step)
+            last_err = e
+    raise CheckpointCorruption(
+        f"no valid checkpoint under {ckpt_dir}: all of {steps} failed "
+        f"(last error: {last_err})")
 
 
 class AsyncCheckpointer:

@@ -23,7 +23,68 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-__all__ = ["ElasticPlan", "recompute_plan", "StragglerPolicy"]
+__all__ = [
+    "ElasticPlan",
+    "recompute_plan",
+    "StragglerPolicy",
+    "BackoffPolicy",
+    "fault_point",
+    "set_fault_hook",
+]
+
+
+# -- deterministic fault-injection seam --------------------------------------
+#
+# ``fault_point(name)`` marks a crash/fault site on a production code path
+# (checkpoint rename, WAL sync, engine apply, ...).  By default it is a
+# no-op; the serving fault harness (:mod:`repro.streams.faults`) installs a
+# hook that counts traversals and fires planned faults (SIGKILL, raised
+# OSError, ...).  The hook lives *here* — the lowest layer that needs a
+# seam — so `train.checkpoint` can mark its sites without importing the
+# streams package.
+
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook) -> None:
+    """Install (or with ``None`` remove) the process-global fault hook.
+    Called by :func:`repro.streams.faults.install_plan`."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
+
+
+def fault_point(name: str) -> None:
+    """Traverse a named injection point.  No-op unless a plan is installed;
+    an installed hook may raise or kill the process here, by design."""
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK(name)
+
+
+@dataclass(frozen=True)
+class BackoffPolicy:
+    """Deterministic bounded exponential backoff (no jitter — the fault
+    harness replays schedules, so delays must be reproducible).
+
+    ``delay(k)`` is the sleep before retry ``k`` (0-based):
+    ``min(max_s, initial_s * factor**k)``.
+    """
+
+    initial_s: float = 0.05
+    max_s: float = 5.0
+    factor: float = 2.0
+
+    def __post_init__(self):
+        if not (self.initial_s > 0.0):
+            raise ValueError("initial_s must be positive")
+        if not (self.max_s >= self.initial_s):
+            raise ValueError("max_s must be >= initial_s")
+        if not (self.factor >= 1.0):
+            raise ValueError("factor must be >= 1")
+
+    def delay(self, attempt: int) -> float:
+        if attempt < 0:
+            raise ValueError("attempt must be >= 0")
+        return min(self.max_s, self.initial_s * self.factor ** attempt)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,155 @@
+"""Unit coverage of the deterministic fault-injection harness
+(:mod:`repro.streams.faults`) and the :mod:`repro.train.fault` seam it
+hooks: traversal-count determinism, env-var serialization, and the backoff
+policy the supervisors share.  The SIGKILL action is exercised end-to-end
+in ``tests/test_crash_recovery.py``.
+"""
+import errno
+
+import pytest
+
+from repro.streams.faults import (FAULT_PLAN_ENV, FAULT_POINTS, FaultError,
+                                  FaultPlan, FaultSpec, active_plan,
+                                  clear_plan, install_from_env, install_plan)
+from repro.train.fault import BackoffPolicy, fault_point, set_fault_hook
+
+
+@pytest.fixture(autouse=True)
+def _clean_hook():
+    yield
+    clear_plan()
+
+
+# ---------------------------------------------------------------------------
+# the fault_point seam
+# ---------------------------------------------------------------------------
+
+
+def test_fault_point_noop_without_hook():
+    fault_point("pre_ack")      # nothing installed: must be free and silent
+
+
+def test_fault_point_calls_hook():
+    seen = []
+    set_fault_hook(seen.append)
+    try:
+        fault_point("pre_ack")
+        fault_point("disk_full")
+    finally:
+        set_fault_hook(None)
+    assert seen == ["pre_ack", "disk_full"]
+    fault_point("pre_ack")      # cleared: silent again
+    assert seen == ["pre_ack", "disk_full"]
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultPlan validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="action"):
+        FaultSpec(action="explode")
+    with pytest.raises(ValueError, match="at"):
+        FaultSpec(at=0)
+    with pytest.raises(ValueError, match="count"):
+        FaultSpec(count=0)
+
+
+def test_plan_rejects_unknown_point():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultPlan({"not_a_point": {"action": "raise"}})
+
+
+def test_fault_error_is_not_an_engine_contract_error():
+    # the server's engine-contract clause catches (ValueError, RuntimeError,
+    # NotImplementedError); an injected fault must NOT be misclassified as
+    # an ordinary engine_reject
+    assert not issubclass(FaultError, (ValueError, RuntimeError,
+                                       NotImplementedError))
+
+
+# ---------------------------------------------------------------------------
+# deterministic firing
+# ---------------------------------------------------------------------------
+
+
+def test_raise_fires_at_exact_traversal():
+    plan = FaultPlan({"engine_apply_raise": {"action": "raise", "at": 3}})
+    plan.hit("engine_apply_raise")
+    plan.hit("engine_apply_raise")
+    with pytest.raises(FaultError, match="traversal 3"):
+        plan.hit("engine_apply_raise")
+    plan.hit("engine_apply_raise")          # count=1: one-shot
+    assert plan.hits["engine_apply_raise"] == 4
+
+
+def test_recurring_disk_full_fires_for_count_traversals():
+    plan = FaultPlan({"disk_full": {"action": "disk_full", "at": 2,
+                                    "count": 3}})
+    plan.hit("disk_full")
+    for _ in range(3):
+        with pytest.raises(OSError) as ei:
+            plan.hit("disk_full")
+        assert ei.value.errno == errno.ENOSPC
+    plan.hit("disk_full")                    # past the window: clean again
+    assert plan.hits["disk_full"] == 5
+
+
+def test_unplanned_points_never_fire():
+    plan = FaultPlan({"pre_ack": {"action": "raise", "at": 1}})
+    for name in FAULT_POINTS:
+        if name != "pre_ack":
+            plan.hit(name)                   # silent
+    assert plan.hits == {"pre_ack": 0}
+
+
+def test_installed_plan_drives_fault_point():
+    plan = install_plan(
+        FaultPlan({"pre_checkpoint_rename": {"action": "raise", "at": 2}}))
+    assert active_plan() is plan
+    fault_point("pre_checkpoint_rename")
+    with pytest.raises(FaultError):
+        fault_point("pre_checkpoint_rename")
+    clear_plan()
+    assert active_plan() is None
+    fault_point("pre_checkpoint_rename")     # uninstalled: silent
+
+
+# ---------------------------------------------------------------------------
+# serialization (the SGRAPP_FAULT_PLAN subprocess lane)
+# ---------------------------------------------------------------------------
+
+
+def test_json_roundtrip():
+    plan = FaultPlan({
+        "pre_ack": {"action": "kill", "at": 4},
+        "disk_full": {"action": "disk_full", "at": 1, "count": 9},
+    })
+    clone = FaultPlan.from_json(plan.to_json())
+    assert clone.specs == plan.specs
+    assert clone.to_json() == plan.to_json()
+
+
+def test_install_from_env(monkeypatch):
+    monkeypatch.delenv(FAULT_PLAN_ENV, raising=False)
+    assert install_from_env() is None
+    plan = FaultPlan({"post_ack_pre_wal": {"action": "raise", "at": 1}})
+    monkeypatch.setenv(FAULT_PLAN_ENV, plan.to_json())
+    got = install_from_env()
+    assert got is not None and got.specs == plan.specs
+    with pytest.raises(FaultError):
+        fault_point("post_ack_pre_wal")
+
+
+# ---------------------------------------------------------------------------
+# BackoffPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_deterministic_exponential():
+    b = BackoffPolicy(initial_s=0.1, max_s=1.0, factor=2.0)
+    assert [b.delay(k) for k in range(6)] == [
+        pytest.approx(x) for x in (0.1, 0.2, 0.4, 0.8, 1.0, 1.0)]
+    # deterministic: no jitter, same input -> same delay
+    assert b.delay(3) == b.delay(3)

@@ -1,0 +1,255 @@
+"""WAL unit coverage: framing, torn tails, bit flips, rotation, GC.
+
+The crash legs in ``tests/test_crash_recovery.py`` exercise the WAL through
+the live server; this file pins the file-format contract directly —
+every corruption the frame CRC must catch, the torn-tail repair semantics,
+and segment GC against checkpoint watermarks.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.streams.faults import FaultPlan, clear_plan, install_plan
+from repro.streams.wal import (FleetWAL, TenantWAL, WALCorruption, WALError,
+                               _frame, _parse_frame)
+from repro.streams.wire import normalize_records
+
+
+def batch(seed: int, n: int = 8, *, ops: bool = False):
+    rng = np.random.default_rng(seed)
+    tau = np.sort(rng.uniform(0, 100, n))
+    i = rng.integers(0, 50, n)
+    j = rng.integers(0, 50, n)
+    op = rng.integers(0, 2, n) if ops else None
+    return normalize_records(tau, i, j, op=op)
+
+
+def same_batch(a, b) -> bool:
+    if (a.op is None) != (b.op is None):
+        return False
+    return (np.array_equal(a.tau, b.tau)
+            and np.array_equal(a.edge_i, b.edge_i)
+            and np.array_equal(a.edge_j, b.edge_j)
+            and (a.op is None or np.array_equal(a.op, b.op)))
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip():
+    payload = b'{"seq":1,"records":{}}'
+    line = _frame(payload)
+    assert line.endswith(b"\n")
+    got, ok = _parse_frame(line)
+    assert ok and got == payload
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda b: b[:-1],                       # lost terminator (torn)
+    lambda b: b[: len(b) // 2],             # truncated mid-frame
+    lambda b: b.replace(b"seq", b"sEq"),    # payload bit flip
+    lambda b: b"9" + b,                     # length prefix corrupted
+    lambda b: b"garbage\n",                 # not a frame at all
+    lambda b: b"",                          # empty
+])
+def test_frame_rejects_corruption(mutate):
+    line = mutate(_frame(b'{"seq":1,"records":{}}'))
+    _, ok = _parse_frame(line)
+    assert not ok
+
+
+# ---------------------------------------------------------------------------
+# append / replay roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_append_replay_roundtrip(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0)
+    batches = {seq: batch(seq, ops=seq % 2 == 0) for seq in range(1, 6)}
+    for seq, rb in batches.items():
+        wal.append(seq, rb)
+    wal.sync()
+    wal.close()
+
+    fresh = TenantWAL(str(tmp_path), 0)
+    got = list(fresh.replay())
+    assert [seq for seq, _ in got] == list(batches)
+    for seq, rb in got:
+        assert same_batch(rb, batches[seq])
+        assert int(rb.stream_id) == 0
+
+
+def test_replay_empty_dir(tmp_path):
+    wal = TenantWAL(str(tmp_path), 3)
+    assert list(wal.replay()) == []
+
+
+def test_segment_rotation_and_replay(tmp_path):
+    # tiny segments force a rotation roughly every append
+    wal = TenantWAL(str(tmp_path), 0, segment_bytes=64)
+    for seq in range(1, 11):
+        wal.append(seq, batch(seq))
+    wal.sync()
+    assert wal.n_segments > 3
+    wal.close()
+
+    fresh = TenantWAL(str(tmp_path), 0, segment_bytes=64)
+    assert [seq for seq, _ in fresh.replay()] == list(range(1, 11))
+
+
+# ---------------------------------------------------------------------------
+# torn tails and corruption
+# ---------------------------------------------------------------------------
+
+
+def _only_segment(dirpath: str) -> str:
+    segs = sorted(f for f in os.listdir(dirpath) if f.endswith(".wal"))
+    assert segs
+    return os.path.join(dirpath, segs[-1])
+
+
+def test_torn_tail_truncated_and_replayable(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0)
+    for seq in (1, 2, 3):
+        wal.append(seq, batch(seq))
+    wal.sync()
+    wal.close()
+    seg = _only_segment(wal.dir)
+    good = os.path.getsize(seg)
+    with open(seg, "ab") as f:          # simulate a crash mid-append
+        f.write(b'999 00000000 {"seq":4')
+
+    fresh = TenantWAL(str(tmp_path), 0)
+    assert [seq for seq, _ in fresh.replay()] == [1, 2, 3]
+    assert os.path.getsize(seg) == good   # repaired back to valid prefix
+    # post-repair appends land in a new segment and replay cleanly
+    fresh.append(4, batch(4))
+    fresh.sync()
+    fresh.close()
+    final = TenantWAL(str(tmp_path), 0)
+    assert [seq for seq, _ in final.replay()] == [1, 2, 3, 4]
+
+
+def test_bit_flip_newest_segment_stops_at_flip(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0)
+    for seq in (1, 2, 3):
+        wal.append(seq, batch(seq))
+    wal.sync()
+    wal.close()
+    seg = _only_segment(wal.dir)
+    data = bytearray(open(seg, "rb").read())
+    data[len(data) // 2] ^= 0xFF        # flip a bit mid-file
+    open(seg, "wb").write(bytes(data))
+
+    fresh = TenantWAL(str(tmp_path), 0)
+    got = [seq for seq, _ in fresh.replay()]
+    assert got == [1] or got == [1, 2]  # stops at the corrupt frame
+
+
+def test_bit_flip_older_segment_raises(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0, segment_bytes=1)  # one seq per segment
+    for seq in (1, 2, 3):
+        wal.append(seq, batch(seq))
+    wal.sync()
+    wal.close()
+    segs = sorted(os.path.join(wal.dir, f) for f in os.listdir(wal.dir))
+    assert len(segs) == 3
+    data = bytearray(open(segs[0], "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(segs[0], "wb").write(bytes(data))
+
+    fresh = TenantWAL(str(tmp_path), 0, segment_bytes=1)
+    with pytest.raises(WALCorruption):
+        list(fresh.replay())
+
+
+def test_fully_torn_newest_segment_dropped(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0)
+    wal.append(1, batch(1))
+    wal.sync()
+    wal.close()
+    torn = os.path.join(wal.dir, "seg_999999999999.wal")
+    open(torn, "wb").write(b"torn")
+
+    fresh = TenantWAL(str(tmp_path), 0)
+    assert [seq for seq, _ in fresh.replay()] == [1]
+    assert not os.path.exists(torn)
+
+
+# ---------------------------------------------------------------------------
+# GC
+# ---------------------------------------------------------------------------
+
+
+def test_gc_removes_covered_segments(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0, segment_bytes=1)
+    for seq in range(1, 6):
+        wal.append(seq, batch(seq))
+    wal.sync()
+    before = wal.n_segments
+    # watermark 3 covers segments holding seqs 1..3; the open segment
+    # (seq 5) is never unlinked even if covered
+    removed = wal.gc(3)
+    assert removed == 3 and wal.n_segments == before - 3
+    wal.close()
+    fresh = TenantWAL(str(tmp_path), 0, segment_bytes=1)
+    assert [seq for seq, _ in fresh.replay()] == [4, 5]
+
+
+def test_gc_never_touches_open_segment(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0)   # one big open segment
+    for seq in (1, 2):
+        wal.append(seq, batch(seq))
+    wal.sync()
+    assert wal.gc(2) == 0               # open file: kept regardless
+    wal.append(3, batch(3))
+    wal.sync()
+    wal.close()
+    fresh = TenantWAL(str(tmp_path), 0)
+    assert [seq for seq, _ in fresh.replay()] == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# FleetWAL
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_wal_per_tenant_isolation(tmp_path):
+    fleet = FleetWAL(str(tmp_path), 3)
+    fleet.append(0, 1, batch(10))
+    fleet.append(2, 1, batch(20))
+    fleet.append(2, 2, batch(21))
+    fleet.sync()
+    fleet.sync()    # no-op: nothing dirty
+    stats = fleet.stats()
+    assert stats["appended"] == 3 and stats["synced_batches"] == 1
+    fleet.close()
+
+    fresh = FleetWAL(str(tmp_path), 3)
+    assert [s for s, _ in fresh.replay(0)] == [1]
+    assert [s for s, _ in fresh.replay(1)] == []
+    assert [s for s, _ in fresh.replay(2)] == [1, 2]
+
+
+def test_disk_full_injection_becomes_wal_error(tmp_path):
+    wal = TenantWAL(str(tmp_path), 0)
+    wal.append(1, batch(1))
+    wal.sync()
+    install_plan(FaultPlan({"disk_full": {"action": "disk_full", "at": 1,
+                                          "count": 2}}))
+    try:
+        with pytest.raises(WALError):
+            wal.append(2, batch(2))
+        with pytest.raises(WALError):
+            wal.append(2, batch(2))
+        # plan exhausted: the same append now succeeds (client retried)
+        wal.append(2, batch(2))
+        wal.sync()
+    finally:
+        clear_plan()
+    wal.close()
+    fresh = TenantWAL(str(tmp_path), 0)
+    assert [seq for seq, _ in fresh.replay()] == [1, 2]
