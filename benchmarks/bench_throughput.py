@@ -498,6 +498,121 @@ def run_fleet(*, quick: bool = False) -> list[tuple]:
     return rows
 
 
+def run_latency(*, quick: bool = False, tier: str = "dense") -> list[tuple]:
+    """Latency sweep for the async overlapped flush pipeline (ROADMAP: the
+    mb=1 gap): first-window latency with and without the pre-traced rung
+    ladder (``EngineConfig.warmup``), mb=1 ingestion on the async default vs
+    the ``sync_dispatch`` escape hatch vs mb=256, and flush_every=1
+    multi-stream counting cost per push call.
+
+    The gated row is ``latency/mb1_vs_mb256_ratio`` (bare-float derived,
+    lower is better): how many times slower per-record ingestion is than
+    big-batch ingestion on the identical stream.  ``benchmarks.gate`` holds
+    it to the committed baseline, which pins the "mb=1 within ~4x of
+    mb=256" acceptance target.
+    """
+    rows = []
+    n = 8_000 if quick else 30_000
+    s = bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5, seed=3)
+    ntw, alpha = 120, 0.95
+    n_processed = int(window_bounds(s.tau, ntw)[-1, 1])
+
+    from repro.streams.config import EngineConfig
+
+    # -- first-window latency: cold trace+compile vs pre-traced rungs --------
+    # discover the stream's rung ladder with a numpy-tier probe (numpy
+    # never compiles), recording every bucket the executor plans
+    probe = StreamingSGrapp(ntw, alpha,
+                            config=EngineConfig(tier="numpy", flush_every=1))
+    rungs: set = set()
+    orig_submit = probe.executor.window_counts_submit
+
+    def recording(batch):
+        rungs.update((b.cap_e, b.cap_i, b.cap_j)
+                     for b in probe.executor.plan(batch))
+        return orig_submit(batch)
+
+    probe.executor.window_counts_submit = recording
+    probe.push(s.tau, s.edge_i, s.edge_j)
+    probe.finalize()
+
+    def first_window_ms(warmup: tuple) -> float:
+        # construction (incl. warmup compile) is OUTSIDE the timed span:
+        # warmup's point is moving trace+compile out of the latency path
+        eng = StreamingSGrapp(ntw, alpha, config=EngineConfig(
+            tier=tier, flush_every=1, warmup=warmup))
+        t0 = time.perf_counter()
+        for a in range(0, len(s), 64):
+            eng.push(s.tau[a:a + 64], s.edge_i[a:a + 64],
+                     s.edge_j[a:a + 64])
+            if eng.n_windows >= 1:
+                eng.flush()   # reap: the estimate is materialized
+                break
+        return (time.perf_counter() - t0) * 1e3
+
+    # run the no-warmup leg first: in a fresh process (the CI leg) the
+    # tier's rungs are genuinely cold here
+    cold_ms = first_window_ms(())
+    warm_ms = first_window_ms(tuple(sorted(rungs)))
+    rows.append(("latency/first_window_ms_no_warmup", cold_ms * 1e3,
+                 f"{cold_ms:.1f}ms"))
+    rows.append(("latency/first_window_ms_with_warmup", warm_ms * 1e3,
+                 f"{warm_ms:.1f}ms"))
+
+    # -- mb=1 vs mb=256 ingestion (async default vs sync_dispatch) ----------
+    def ingest(mb: int, sync: bool):
+        flush_every = max(4, min(64, 4096 // max(mb, 1)))
+        eng = StreamingSGrapp(ntw, alpha, config=EngineConfig(
+            tier=tier, flush_every=flush_every, sync_dispatch=sync))
+        for a in range(0, len(s), mb):
+            eng.push(s.tau[a:a + mb], s.edge_i[a:a + mb],
+                     s.edge_j[a:a + mb])
+        return eng.finalize()
+
+    rates = {}
+    for name, mb, sync in (("streaming_mb1", 1, False),
+                           ("streaming_mb1_sync", 1, True),
+                           ("streaming_mb256", 256, False)):
+        ingest(mb, sync)   # warm every bucket shape this stream produces
+        dt = min(_timed(lambda: ingest(mb, sync)) for _ in range(2))
+        rates[name] = n_processed / dt
+        rows.append((f"latency/{name}_edges_per_s", dt * 1e6,
+                     f"{rates[name]:.0f}"))
+    ratio = rates["streaming_mb256"] / rates["streaming_mb1"]
+    rows.append(("latency/mb1_vs_mb256_ratio", 0.0, f"{ratio:.4f}"))
+
+    # -- flush_every=1 multi-stream counting, ms per push call --------------
+    n_streams, mb = 4, 256
+    streams = [bipartite_pa_stream(n, temporal="uniform", n_unique=n // 5,
+                                   seed=3 + k) for k in range(n_streams)]
+    sid = np.concatenate([np.full(len(t), k, dtype=np.int64)
+                          for k, t in enumerate(streams)])
+    tau = np.concatenate([t.tau for t in streams])
+    ei = np.concatenate([t.edge_i for t in streams])
+    ej = np.concatenate([t.edge_j for t in streams])
+    order = np.argsort(np.concatenate([np.arange(len(t)) for t in streams]),
+                       kind="stable")
+    sid, tau, ei, ej = sid[order], tau[order], ei[order], ej[order]
+    step = n_streams * mb
+    n_calls = (len(sid) + step - 1) // step
+
+    def fleet_ingest():
+        eng = MultiStreamSGrapp(n_streams, ntw, alpha, config=EngineConfig(
+            tier=tier, flush_every=1))
+        for a in range(0, len(sid), step):
+            eng.push(sid[a:a + step], tau[a:a + step], ei[a:a + step],
+                     ej[a:a + step])
+        return eng.finalize()
+
+    fleet_ingest()   # warm
+    dt = min(_timed(fleet_ingest) for _ in range(2))
+    ms_per_call = dt / n_calls * 1e3
+    rows.append(("latency/multistream_flush1_ms_per_call", ms_per_call * 1e3,
+                 f"{ms_per_call:.2f}ms (n_streams={n_streams}, mb={mb}, "
+                 f"{n_calls} calls)"))
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -534,6 +649,13 @@ def main() -> None:
     ap.add_argument("--fleet-only", action="store_true",
                     help="run only the FLEET sampling sweep (CI leg: "
                          "implies --fleet, skips the other sweeps)")
+    ap.add_argument("--latency", action="store_true",
+                    help="add the async-flush latency sweep (first-window "
+                         "latency with/without warmup, mb=1 vs mb=256 "
+                         "ingestion, flush_every=1 multi-stream ms/call)")
+    ap.add_argument("--latency-only", action="store_true",
+                    help="run only the latency sweep (CI leg: implies "
+                         "--latency, skips the other sweeps)")
     ap.add_argument("--tier", default="dense",
                     help="counting tier for the streaming sweep "
                          "(numpy | dense | tiled | pallas | sparse | auto)")
@@ -547,7 +669,7 @@ def main() -> None:
     sfx = args.artifact_suffix
     print("name,us_per_call,derived")
     if not (args.streaming_only or args.multistream_only
-            or args.dynamic_only or args.fleet_only):
+            or args.dynamic_only or args.fleet_only or args.latency_only):
         rows = run(quick=args.quick, devices=args.devices)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
@@ -556,7 +678,7 @@ def main() -> None:
                              devices=args.devices, quick=args.quick)
     if ((args.streaming or args.streaming_only)
             and not (args.multistream_only or args.dynamic_only
-                     or args.fleet_only)):
+                     or args.fleet_only or args.latency_only)):
         srows = run_streaming(quick=args.quick, tier=args.tier,
                               devices=args.devices)
         for name, us, derived in srows:
@@ -565,7 +687,8 @@ def main() -> None:
             write_bench_json(f"BENCH_streaming{sfx}.json", srows,
                              devices=args.devices, quick=args.quick)
     if ((args.multistream or args.multistream_only)
-            and not (args.dynamic_only or args.fleet_only)):
+            and not (args.dynamic_only or args.fleet_only
+                     or args.latency_only)):
         mrows = run_multistream(quick=args.quick, tier=args.tier,
                                 devices=args.devices)
         for name, us, derived in mrows:
@@ -573,7 +696,8 @@ def main() -> None:
         if not args.no_json:
             write_bench_json(f"BENCH_multistream{sfx}.json", mrows,
                              devices=args.devices, quick=args.quick)
-    if (args.dynamic or args.dynamic_only) and not args.fleet_only:
+    if ((args.dynamic or args.dynamic_only)
+            and not (args.fleet_only or args.latency_only)):
         drows = run_dynamic(quick=args.quick, tier=args.tier,
                             devices=args.devices)
         for name, us, derived in drows:
@@ -581,12 +705,19 @@ def main() -> None:
         if not args.no_json:
             write_bench_json(f"BENCH_dynamic{sfx}.json", drows,
                              devices=args.devices, quick=args.quick)
-    if args.fleet or args.fleet_only:
+    if (args.fleet or args.fleet_only) and not args.latency_only:
         frows = run_fleet(quick=args.quick)
         for name, us, derived in frows:
             print(f"{name},{us:.1f},{derived}")
         if not args.no_json:
             write_bench_json(f"BENCH_fleet{sfx}.json", frows,
+                             devices=args.devices, quick=args.quick)
+    if args.latency or args.latency_only:
+        lrows = run_latency(quick=args.quick, tier=args.tier)
+        for name, us, derived in lrows:
+            print(f"{name},{us:.1f},{derived}")
+        if not args.no_json:
+            write_bench_json(f"BENCH_latency{sfx}.json", lrows,
                              devices=args.devices, quick=args.quick)
 
 

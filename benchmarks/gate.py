@@ -13,13 +13,15 @@ from the baseline (new benches) and rows with non-positive timings are
 skipped for the slowdown check, so adding a bench never breaks the gate;
 refreshing the committed numbers is one command away.
 
-Accuracy rows — names under ``mape/...``, timing 0, the measured error in
-the ``derived`` field — gate on *regression* instead of slowdown: when the
-baseline entry recorded a ``mape`` value, a fresh error beyond
-``--max-mape-ratio`` times the baseline (plus a small absolute slack for
-sampling noise) fails the gate.  Baseline entries without a recorded mape
-(legacy rows, or derived values that aren't a bare float) never gate on
-accuracy.
+Quality rows — names under ``mape/...`` or ``latency/..._ratio``, timing 0,
+the measured error (or lower-is-better ratio) in the ``derived`` field —
+gate on *regression* instead of slowdown: when the baseline entry recorded
+a ``mape`` value, a fresh value beyond ``--max-mape-ratio`` times the
+baseline (plus a small absolute slack for noise) fails the gate.  The
+latency ratio rows ride this path so a re-serialized async dispatch (mb=1
+rate collapsing back toward the old 30x gap) fails CI the same way an
+accuracy regression does.  Baseline entries without a recorded value
+(legacy rows, or derived values that aren't a bare float) never gate.
 
 Rows present in the fresh run but missing from the baseline (a new bench or
 a new tier leg) are *reported* as ``new row`` — visible in the CI log so a
@@ -66,16 +68,26 @@ def _load_rows(path: str) -> dict[str, float]:
     }
 
 
+def _is_quality_row(name: str) -> bool:
+    """Lower-is-better quality rows: accuracy (``mape/...``) plus latency
+    ratios (``latency/..._ratio`` — e.g. mb=1 vs mb=256 ingestion rate).
+    Deliberately narrow: other bare-float derived rows (``fleet/speedup_*``)
+    are higher-is-better and must never gate through this path."""
+    return name.startswith("mape/") or (
+        name.startswith("latency/") and name.endswith("_ratio"))
+
+
 def _load_mapes(path: str) -> dict[str, float]:
-    """Accuracy rows of a fresh BENCH_*.json: ``mape/...`` names whose
-    ``derived`` field is a bare float (the measured error), keyed like
+    """Quality rows of a fresh BENCH_*.json: ``mape/...`` and
+    ``latency/..._ratio`` names whose ``derived`` field is a bare float (the
+    measured error or ratio, lower is better), keyed like
     :func:`_load_rows`.  Rows whose derived carries annotations beyond the
-    number are skipped — only purpose-built accuracy rows gate."""
+    number are skipped — only purpose-built quality rows gate."""
     with open(path) as f:
         records = json.load(f)
     out = {}
     for r in records:
-        if not str(r["name"]).startswith("mape/"):
+        if not _is_quality_row(str(r["name"])):
             continue
         try:
             val = float(str(r.get("derived", "")).strip())

@@ -71,9 +71,14 @@ mesh's data axes) composed with the same per-device chunked-vmap schedule.
 Each window is still counted whole on exactly one device by exactly the same
 per-window program, so sharded counts are bit-identical to the single-device
 path — verified by the multi-device differential cases in
-``tests/test_tier_differential.py``.  Host/device work is double-buffered:
-while bucket k computes, the host drains bucket k-1 and materializes bucket
-k+1 (see :meth:`WindowExecutor.window_counts`).
+``tests/test_tier_differential.py``.  Host/device work overlaps through the
+submit/reap split: :meth:`WindowExecutor.window_counts_submit` stages and
+dispatches every bucket asynchronously and returns a :class:`PendingCounts`
+handle holding un-materialized device arrays; materialization (and the
+host-side scatter back into window order) happens only at
+:meth:`PendingCounts.reap`.  The streaming engines ride this split so host
+windowizing of flush k+1 overlaps device compute of flush k;
+:meth:`WindowExecutor.window_counts` is simply ``submit(...).reap()``.
 
 Entry points: :class:`WindowExecutor` (stateful, caches compiled buckets)
 and the module-level :func:`run` convenience.  ``run_sgrapp`` /
@@ -109,8 +114,9 @@ from .fleet import check_sampling_knobs
 from .windows import WindowBatch
 
 __all__ = ["TIERS", "MODES", "WindowExecutor", "ExecutorResult", "Bucket",
-           "run", "route_tier", "route_decrement", "bucket_capacity",
-           "id_capacity", "expected_mape", "compiled_bucket_cache_info"]
+           "PendingCounts", "run", "route_tier", "route_decrement",
+           "bucket_capacity", "id_capacity", "expected_mape",
+           "compiled_bucket_cache_info"]
 
 TIERS = ("numpy", "dense", "tiled", "pallas", "sparse", "auto", "sampled")
 MODES = ("tumbling", "sliding")
@@ -257,6 +263,45 @@ class ExecutorResult:
         return len(self.counts)
 
 
+class PendingCounts:
+    """Handle for an in-flight bucketed window count.
+
+    Produced by :meth:`WindowExecutor.window_counts_submit`: ``_parts`` holds
+    one ``(window_indices, counts)`` pair per dispatched bucket, where
+    ``counts`` is an **un-materialized** device array (or a host array for
+    the ``numpy`` tier, which computes eagerly at submit).  Nothing here
+    blocks until :meth:`reap`, which materializes every part exactly once,
+    scatters the counts back into window order, and caches the result —
+    ``reap()`` is idempotent.
+
+    The staging buffers behind a handle's dispatches are reused (ring of
+    two) on the *next* submit sharing their bucket shape, so a handle must
+    be reaped before two more same-shape submits — the engines enforce the
+    stronger invariant of at most one handle in flight at a time.
+    """
+
+    def __init__(self, n_windows: int, parts: list):
+        self._n = int(n_windows)
+        self._parts: list | None = parts
+        self._out: np.ndarray | None = None
+
+    @property
+    def done(self) -> bool:
+        """Whether :meth:`reap` already materialized this handle."""
+        return self._out is not None
+
+    def reap(self) -> np.ndarray:
+        """Block until every bucket's counts materialize; return the
+        window-ordered ``[n_windows] float64`` counts (cached)."""
+        if self._out is None:
+            out = np.zeros(self._n, dtype=np.float64)
+            for idx, dev in self._parts:
+                out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
+            self._parts = None
+            self._out = out
+        return self._out
+
+
 # ---------------------------------------------------------------------------
 # per-bucket compiled counters (cached across executors: the cache key is the
 # full static configuration, so two executors with the same tier share code)
@@ -356,6 +401,22 @@ def _chunk_counts_fn(tier: str, cap_i: int, cap_j: int, cap_w: int,
     return jax.vmap(one)
 
 
+def _donate_argnums(multiset: bool, sampled: tuple | None) -> tuple:
+    """Donate every input lane to the compiled counter — off CPU only.
+
+    The dispatch's inputs are flush-scoped staging tensors the host never
+    reads back, so on accelerators XLA may reuse their device buffers for
+    the outputs instead of allocating fresh ones each flush (the mb=1 /
+    flush_every=1 regime dispatches per window, where that allocation is a
+    measurable cost).  The CPU backend aliases host numpy memory zero-copy
+    and ignores donation (with a warning), so donation is gated off there.
+    """
+    if jax.default_backend() == "cpu":
+        return ()
+    n_lanes = 4 if (multiset or sampled is not None) else 3
+    return tuple(range(n_lanes))
+
+
 def _chunked_dispatch(chunk_fn, chunk: int):
     """Chunked-vmap schedule: ``lax.map`` over chunks of ``chunk`` vmap'd
     windows.  Peak memory is one chunk's worth of per-window state (e.g.
@@ -401,7 +462,8 @@ def _bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int, tile: int,
     chunk_fn = _chunk_counts_fn(tier, cap_i, cap_j, cap_w, tile,
                                 block_i, block_k, interpret, multiset,
                                 sampled)
-    return jax.jit(_chunked_dispatch(chunk_fn, chunk))
+    return jax.jit(_chunked_dispatch(chunk_fn, chunk),
+                   donate_argnums=_donate_argnums(multiset, sampled))
 
 
 @functools.lru_cache(maxsize=None)
@@ -432,7 +494,7 @@ def _sharded_bucket_counter(tier: str, cap_i: int, cap_j: int, cap_w: int,
                           out_specs=P(batch),
                           # pallas_call has no replication rule to check
                           check_rep=(tier != "pallas"))
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=_donate_argnums(multiset, sampled))
 
 
 def compiled_bucket_cache_info() -> dict:
@@ -611,6 +673,13 @@ class WindowExecutor:
         # the per-window online entry (adaptive_window_stream consumers)
         # and must not redo the lru-cache hashing + tier routing per call
         self._online_cache: tuple[tuple, object] | None = None
+        # persistent per-rung staging buffers: (bucket shape, lane layout) ->
+        # [lanes_a, lanes_b, cursor].  A ring of two because the CPU backend
+        # may alias host numpy memory zero-copy into the dispatch — the
+        # buffer a dispatch reads must not be overwritten until the *next*
+        # same-shape submit, and at most one handle is in flight at a time
+        # (see PendingCounts), so alternating two buffers is sufficient.
+        self._staging: dict[tuple, list] = {}
 
     # -- planning -----------------------------------------------------------
 
@@ -759,23 +828,66 @@ class WindowExecutor:
                          uid & np.int64(0xFFFFFFFF)],
                         axis=1).astype(np.uint32)
 
-    def window_counts(self, batch: WindowBatch) -> np.ndarray:
-        """Exact in-window count per tumbling window, [n_windows] float64.
+    def _staged_lanes(self, batch: WindowBatch, b: Bucket, multiset: bool,
+                      uids: np.ndarray | None) -> tuple:
+        """Fill (and return) the persistent staging buffers for one bucket's
+        device lanes instead of allocating fresh sub-batch tensors per flush
+        (``batch.take`` copies; at mb=1 / flush_every=1 that allocation
+        churn dominates).  Coverage is guaranteed by :meth:`plan` — every
+        rung clamps to the batch's own capacities — so slicing the batch
+        lanes to ``cap_e`` is exactly what ``take`` would have produced.
+
+        Buffers are keyed on the full bucket shape plus lane layout, so two
+        buckets of one plan never share a buffer, and alternate between two
+        copies per key (see ``_staging`` in ``__init__``).
+        """
+        cap, win = b.cap_e, b.windows
+        sampled_lane = uids is not None and self.bucket_tier(b) == "sampled"
+        key = (b.cap_e, b.cap_i, b.cap_j, b.cap_w, len(win),
+               multiset, sampled_lane)
+        ring = self._staging.get(key)
+        if ring is None:
+            def make():
+                lanes = [np.empty((len(win), cap), np.int32),
+                         np.empty((len(win), cap), np.int32)]
+                if multiset:
+                    lanes.append(np.empty((len(win), cap), np.int32))
+                if sampled_lane:
+                    lanes.append(np.empty((len(win), 2), np.uint32))
+                lanes.append(np.empty((len(win), cap), bool))
+                return tuple(lanes)
+            ring = [make(), make(), 0]
+            self._staging[key] = ring
+        lanes = ring[ring[2]]
+        ring[2] ^= 1
+        it = iter(lanes)
+        np.take(batch.edge_i[:, :cap], win, axis=0, out=next(it))
+        np.take(batch.edge_j[:, :cap], win, axis=0, out=next(it))
+        if multiset:
+            np.take(batch.edge_mult[:, :cap], win, axis=0, out=next(it))
+        if sampled_lane:
+            np.take(uids, win, axis=0, out=next(it))
+        np.take(batch.valid[:, :cap], win, axis=0, out=next(it))
+        return lanes
+
+    def window_counts_submit(self, batch: WindowBatch) -> PendingCounts:
+        """Stage + dispatch every bucket of ``batch`` asynchronously and
+        return a :class:`PendingCounts` handle — the submit half of the
+        flush pipeline.  Nothing blocks on device compute here: each
+        bucket's compiled counter is dispatched and its un-materialized
+        result collected, so the caller overlaps host work (windowizing the
+        next flush) with device compute and materializes later via
+        :meth:`PendingCounts.reap`.
 
         A batch carrying the multiplicity lane (``batch.edge_mult`` is not
         None — ``multiset`` duplicate policy) routes every tier through its
         multiplicity-weighted twin; a lane-less batch runs the distinct
-        programs bit-identically to before the lane existed.
-
-        Device tiers run double-buffered: each bucket's dispatch is
-        asynchronous, so while bucket k computes on-device the host drains
-        bucket k-1's counts and materializes bucket k+1's padded tensors
-        (``take`` + shard padding) — window materialization overlaps device
-        compute instead of serializing with it.
+        programs bit-identically to before the lane existed.  The ``numpy``
+        tier is a host oracle with nothing to overlap: it counts eagerly at
+        submit and returns an already-materializable handle.
         """
-        out = np.zeros(batch.n_windows, dtype=np.float64)
         if batch.n_windows == 0:
-            return out
+            return PendingCounts(0, [])
         multiset = batch.edge_mult is not None
         if multiset and self.tier == "sampled":
             raise NotImplementedError(
@@ -784,35 +896,75 @@ class WindowExecutor:
                 "multiplicity-weighted butterfly is not a p**4 event); use "
                 "an exact tier for multiset streams")
         uids = self._batch_uids(batch) if self.tier == "sampled" else None
+        parts: list = []
         if self.tier == "numpy":
             for b in self.plan(batch):
-                for k in b.windows:
+                counts = np.empty(b.n_windows, dtype=np.float64)
+                for t, k in enumerate(b.windows):
                     v = batch.valid[k]
                     e = np.stack([batch.edge_i[k][v], batch.edge_j[k][v]],
                                  axis=1)
-                    out[k] = (count_butterflies_multiset_np(
+                    counts[t] = (count_butterflies_multiset_np(
                         e, batch.edge_mult[k][v]) if multiset
                         else count_butterflies_np(e))
-            return out
-        pending: tuple[np.ndarray, object] | None = None
+                parts.append((b.windows, counts))
+            return PendingCounts(batch.n_windows, parts)
         for b in self.plan(batch):
-            sub = batch.take(b.windows, capacity=b.cap_e)
-            if multiset:
-                lanes = (sub.edge_i, sub.edge_j, sub.edge_mult, sub.valid)
-            elif uids is not None and self.bucket_tier(b) == "sampled":
-                lanes = (sub.edge_i, sub.edge_j, uids[b.windows], sub.valid)
-            else:
-                lanes = (sub.edge_i, sub.edge_j, sub.valid)
+            lanes = self._staged_lanes(batch, b, multiset, uids)
             if self.n_shards > 1:
                 lanes = _pad_window_axis(*lanes, multiple=self.n_shards)
             counts = self._counter(b, multiset=multiset)(*lanes)  # async
-            if pending is not None:
-                idx, dev = pending
-                out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
-            pending = (b.windows, counts)
-        idx, dev = pending
-        out[idx] = np.asarray(dev, dtype=np.float64)[: len(idx)]
-        return out
+            parts.append((b.windows, counts))
+        return PendingCounts(batch.n_windows, parts)
+
+    def window_counts(self, batch: WindowBatch) -> np.ndarray:
+        """Exact in-window count per tumbling window, [n_windows] float64.
+
+        ``window_counts_submit(batch).reap()``: every bucket dispatches
+        asynchronously before the first materialization blocks, so device
+        compute across buckets overlaps the host-side staging — strictly
+        more overlap than the old per-bucket double buffer.  Callers that
+        have host work of their own to overlap (the streaming engines) hold
+        the handle instead of calling this.
+        """
+        return self.window_counts_submit(batch).reap()
+
+    def warmup(self, rungs, *, multiset: bool = False) -> int:
+        """Pre-trace the bucket-counter ladder before the first push.
+
+        ``rungs`` is an iterable of ``(cap_e, cap_i, cap_j)`` capacity
+        triples (``EngineConfig.warmup``).  For each rung a single
+        all-invalid window is dispatched through the same compiled counter
+        a real flush of that shape would hit — including the B=1 partial
+        chunk trace that mb=1 / flush_every=1 flushes use — so first-window
+        latency becomes dispatch-only instead of trace+compile.  Blocks
+        until every rung's program finished compiling; returns the number
+        of rungs dispatched.  The ``numpy`` tier has nothing to compile
+        (returns 0).  Wedge-capacity buckets (``sparse``, and ``auto``'s
+        sparse-routed groups) key additionally on ``cap_w`` and are not
+        covered by 3-tuple rungs.
+        """
+        if self.tier == "numpy":
+            return 0
+        if multiset and self.tier == "sampled":
+            raise NotImplementedError(
+                "sampled tier does not support dup_policy='multiset'")
+        done = 0
+        for rung in rungs:
+            cap_e, cap_i, cap_j = (int(x) for x in rung)
+            b = Bucket(cap_e, cap_i, cap_j, np.arange(1, dtype=np.int64))
+            lanes = [np.zeros((1, cap_e), np.int32),
+                     np.zeros((1, cap_e), np.int32)]
+            if multiset:
+                lanes.append(np.zeros((1, cap_e), np.int32))
+            elif self.tier == "sampled" and self.bucket_tier(b) == "sampled":
+                lanes.append(np.zeros((1, 2), np.uint32))
+            lanes.append(np.zeros((1, cap_e), bool))
+            if self.n_shards > 1:
+                lanes = _pad_window_axis(*lanes, multiple=self.n_shards)
+            np.asarray(self._counter(b, multiset=multiset)(*lanes))
+            done += 1
+        return done
 
     def decrement_window_counts(self, per_window_edges, per_window_deletes,
                                 prior_counts, *, delta_frac: float = 0.25

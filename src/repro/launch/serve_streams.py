@@ -55,6 +55,7 @@ def build_server(args: argparse.Namespace) -> StreamServer:
         nt_w=args.nt_w, alpha0=args.alpha0, tenants=tenants, config=config,
         host=args.host, port=args.port, http_port=args.http_port,
         queue_limit=args.queue_limit, flush_ms=args.flush_ms,
+        latency_budget_ms=args.latency_budget_ms,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every_s=args.checkpoint_every_s,
         serving=serving,
@@ -95,6 +96,11 @@ def main() -> None:
     ap.add_argument("--http-port", type=int, default=0)
     ap.add_argument("--queue-limit", type=int, default=64)
     ap.add_argument("--flush-ms", type=float, default=2.0)
+    ap.add_argument("--latency-budget-ms", type=float, default=0.0,
+                    help="defer window-count dispatch up to this deadline so "
+                         "windows closed across tenants fuse into one "
+                         "bucketed dispatch (0 = submit every cycle; acks "
+                         "are never delayed — docs/serving.md)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every-s", type=float, default=None)
     ap.add_argument("--no-wal", action="store_true",

@@ -26,13 +26,19 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 __all__ = ["EngineConfig", "ServingConfig", "DUP_POLICIES",
-           "resolve_engine_config"]
+           "resolve_engine_config", "resolve_sync_dispatch",
+           "SYNC_DISPATCH_ENV"]
+
+# escape hatch forcing the engines' old blocking flush path (submit + reap
+# in one call) without touching code: SGRAPP_SYNC_DISPATCH=1
+SYNC_DISPATCH_ENV = "SGRAPP_SYNC_DISPATCH"
 
 # duplicate-edge policies: "distinct" is the paper's keep-first semantics;
 # "multiset" counts butterflies multiplicity-weighted — every
@@ -73,6 +79,16 @@ class EngineConfig:
     capacity, gamma : sampled-tier reservoir size and admission ladder base.
     memory_budget, target_mape : sampled-tier auto-routing budgets
         (``None`` disables).
+    sync_dispatch : force the old blocking flush path (submit + reap in one
+        call) instead of the async overlapped pipeline — a debugging escape
+        hatch, also flippable per process via ``SGRAPP_SYNC_DISPATCH=1``
+        (:func:`resolve_sync_dispatch`).  Both paths are bit-identical;
+        deployment-only, never serialized.
+    warmup : tuple of ``(cap_e, cap_i, cap_j)`` capacity rungs to pre-trace
+        at engine construction (:meth:`WindowExecutor.warmup`), so
+        first-window latency is dispatch-only instead of trace+compile.
+        Empty (the default) skips warmup; deployment-only, never
+        serialized.
     devices, mesh : shard each flush's window axis (mutually exclusive with
         sharing a prebuilt ``executor=``; never serialized).
     """
@@ -90,6 +106,8 @@ class EngineConfig:
     gamma: float = 0.7
     memory_budget: int | None = None
     target_mape: float | None = None
+    sync_dispatch: bool = False
+    warmup: tuple = ()
     devices: object = None
     mesh: object = None
 
@@ -141,6 +159,16 @@ class EngineConfig:
                     f"target_mape must be positive or None, "
                     f"got {self.target_mape!r}")
             pin("target_mape", float(self.target_mape))
+        pin("sync_dispatch", bool(self.sync_dispatch))
+        rungs = []
+        for rung in tuple(self.warmup):
+            rung = tuple(int(x) for x in rung)
+            if len(rung) != 3 or any(x < 1 for x in rung):
+                raise ValueError(
+                    "warmup rungs must be (cap_e, cap_i, cap_j) triples of "
+                    f"positive ints, got {rung!r}")
+            rungs.append(rung)
+        pin("warmup", tuple(rungs))
         if self.dup_policy == "multiset" and self.tier == "sampled":
             raise NotImplementedError(
                 "sampled tier does not support dup_policy='multiset': the "
@@ -309,3 +337,13 @@ def resolve_engine_config(config, legacy: dict) -> EngineConfig:
             DeprecationWarning, stacklevel=3)
         return EngineConfig(**passed)
     return EngineConfig()
+
+
+def resolve_sync_dispatch(config: EngineConfig) -> bool:
+    """Whether an engine built from ``config`` must use the blocking flush
+    path: the ``sync_dispatch`` config field, OR'd with the
+    ``SGRAPP_SYNC_DISPATCH=1`` environment escape hatch (resolved once at
+    engine construction, so flipping the env var mid-stream has no
+    effect)."""
+    return bool(config.sync_dispatch) or (
+        os.environ.get(SYNC_DISPATCH_ENV, "") == "1")

@@ -61,6 +61,7 @@ from repro.streams.config import (
     EngineConfig,
     _UNSET,
     resolve_engine_config,
+    resolve_sync_dispatch,
 )
 from repro.streams.state import (
     StreamState,
@@ -373,6 +374,22 @@ class StreamingSGrapp:
         # this); batch replay executors keep the default cap snapping instead
         self.executor = cfg.make_executor(executor)
         self._step_fn = estimator_step(cfg.tol, cfg.step)
+        # async overlapped flush pipeline: push() submits a flush without
+        # blocking on device compute and reaps it on the next flush point,
+        # so host windowizing of flush k+1 overlaps device compute of flush
+        # k.  sync_dispatch forces the old blocking path (config field or
+        # SGRAPP_SYNC_DISPATCH=1); both are bit-identical because the
+        # estimator only ever advances at reap, in close order.
+        self.sync_dispatch = resolve_sync_dispatch(cfg)
+        # owner-driven dispatch: when True, push() never self-submits at the
+        # flush_every threshold — the engine's owner (e.g. the server's
+        # deadline coalescer, docs/serving.md) schedules _submit_flush /
+        # _reap_flush itself.  Runtime attribute, never serialized; blocking
+        # flush()/finalize()/state_dict() settle everything regardless.
+        self.defer_dispatch = False
+        if cfg.warmup:
+            self.executor.warmup(
+                cfg.warmup, multiset=(cfg.dup_policy == "multiset"))
 
         # -- the whole per-stream state: a one-stream StreamState pytree
         # (seed offsets res_seed — validated there before any state exists)
@@ -384,6 +401,10 @@ class StreamingSGrapp:
         # all-insert window (the static fast path)
         self._pending: list[tuple[np.ndarray, np.ndarray,
                                   np.ndarray | None, int, float]] = []
+        # -- the one in-flight submitted flush (None or a
+        # (n_windows, PendingCounts, cum, end_tau) tuple); at most one
+        # dispatch is ever in flight — _submit_flush asserts it
+        self._inflight: tuple | None = None
 
         # -- per-window history (materialized at flush)
         self._counts: list[float] = []
@@ -399,12 +420,19 @@ class StreamingSGrapp:
 
     @property
     def n_windows(self) -> int:
-        """Windows closed so far (counted or pending)."""
-        return len(self._counts) + len(self._pending)
+        """Windows closed so far (counted, in flight, or pending)."""
+        return len(self._counts) + self.n_pending
 
     @property
     def n_pending(self) -> int:
-        return len(self._pending)
+        """Closed windows not yet counted: awaiting dispatch + in flight."""
+        return len(self._pending) + self.n_inflight
+
+    @property
+    def n_inflight(self) -> int:
+        """Windows inside the submitted-but-unreaped async dispatch (0 when
+        nothing is in flight; always 0 under ``sync_dispatch``)."""
+        return 0 if self._inflight is None else self._inflight[0]
 
     @property
     def alpha(self) -> float:
@@ -447,19 +475,29 @@ class StreamingSGrapp:
                                  on_missing_delete=self.on_missing_delete)
         for _, ei, ej, ops, m, end_tau in closed:
             self._pending.append((ei, ej, ops, m, end_tau))
-        if len(self._pending) >= self.flush_every:
-            self.flush()
+        if len(self._pending) >= self.flush_every and not self.defer_dispatch:
+            if self.sync_dispatch:
+                self.flush()
+            else:
+                # overlapped pipeline: settle the previous flush (its device
+                # compute ran while this micro-batch windowized on the
+                # host), then dispatch this one and return WITHOUT blocking
+                self._reap_flush()
+                self._submit_flush()
         return len(closed)
 
     # -- counting + estimation ----------------------------------------------
 
-    def flush(self) -> int:
-        """Count every pending closed window through the persistent executor
-        (one bucketed dispatch) and advance the estimator over them in close
-        order.  Returns the number of windows flushed.  Idempotent: flushing
-        with nothing pending is a no-op."""
+    def _submit_flush(self) -> bool:
+        """Submit half of the flush pipeline: resolve + pack every pending
+        closed window and dispatch ONE bucketed count asynchronously
+        (:meth:`WindowExecutor.window_counts_submit`), parking the handle in
+        ``_inflight``.  Returns True iff a dispatch is now in flight.  The
+        estimator is NOT advanced here — that happens at reap, so flush
+        timing can never change what any window's estimate will be."""
         if not self._pending:
-            return 0
+            return False
+        assert self._inflight is None, "reap the in-flight flush first"
         pending = self._pending
         per_edges: list[np.ndarray] = []
         per_mult: list[np.ndarray | None] = []
@@ -470,6 +508,8 @@ class StreamingSGrapp:
         n_sgrs = np.array([m for _, _, _, m, _ in pending], dtype=np.int64)
         end_tau = np.array([t for _, _, _, _, t in pending],
                            dtype=np.float64)
+        # total_sgrs is current here: reap always precedes the next submit,
+        # so the one in-flight flush already settled its cum update
         cum = int(self._state.total_sgrs[0]) + np.cumsum(n_sgrs)
         # the sampled tier's per-window uid: res_seed (high half, uint32
         # wraps) over the window's |E_k| (low half).  uint64 arithmetic so a
@@ -492,19 +532,46 @@ class StreamingSGrapp:
             batch = pack_windows(per_edges, n_sgrs=n_sgrs, cum_sgrs=cum,
                                  window_end_tau=end_tau, align=self.align,
                                  sample_uid=uid)
-        counts = self.executor.window_counts(batch)   # float64 [m]
-        # windows stay pending until counted: a packing/counting error (bad
-        # edge ids, a dying device) leaves the engine consistent and the
-        # next flush retries instead of silently dropping windows
+        handle = self.executor.window_counts_submit(batch)
+        # windows stay pending until dispatched: a packing error (bad edge
+        # ids) raises above with the pending list intact, so the engine
+        # stays consistent and the next flush retries instead of silently
+        # dropping windows
         self._pending = []
+        self._inflight = (len(pending), handle, cum, end_tau)
+        return True
 
+    def _reap_flush(self) -> int:
+        """Reap half of the flush pipeline: block on the in-flight
+        dispatch's counts and advance the estimator over its windows in
+        close order.  Returns the number of windows settled (0 when nothing
+        is in flight).  The ONLY place the estimator advances."""
+        if self._inflight is None:
+            return 0
+        n, handle, cum, end_tau = self._inflight
+        counts = handle.reap()   # float64 [n]
+        self._inflight = None
         carry = advance_estimator(
             self._step_fn, estimator_carry(self._state, 0), self.truths,
             counts, cum, end_tau, self._counts, self._estimates,
             self._cum_sgrs, self._end_tau)
         set_estimator_carry(self._state, 0, carry)
         self._state.total_sgrs[0] = int(cum[-1])
-        return len(pending)
+        return n
+
+    def flush(self) -> int:
+        """Count every closed-but-uncounted window — the in-flight async
+        dispatch AND the pending list — through the persistent executor and
+        advance the estimator over them in close order.  Returns the number
+        of windows settled.  Idempotent: flushing with nothing outstanding
+        is a no-op.  This is the blocking entry (``sync_dispatch`` flushes
+        only ever go through here); the async pipeline's non-blocking
+        submit/reap halves live in :meth:`_submit_flush` /
+        :meth:`_reap_flush`."""
+        n = self._reap_flush()
+        if self._submit_flush():
+            n += self._reap_flush()
+        return n
 
     def finalize(self) -> SGrappResult:
         """End the stream: close the trailing window (kept if it filled its
@@ -610,6 +677,7 @@ class StreamingSGrapp:
         self._cum_sgrs = [int(c) for c in np.asarray(state["cum_sgrs"])]
         self._end_tau = [float(t) for t in np.asarray(state["end_tau"])]
         self._pending = []
+        self._inflight = None
         return self
 
     @classmethod

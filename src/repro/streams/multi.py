@@ -57,7 +57,12 @@ import numpy as np
 from repro.core.executor import WindowExecutor
 from repro.core.sgrapp import SGrappResult, estimator_step
 from repro.core.windows import pack_windows
-from repro.streams.config import _UNSET, EngineConfig, resolve_engine_config
+from repro.streams.config import (
+    _UNSET,
+    EngineConfig,
+    resolve_engine_config,
+    resolve_sync_dispatch,
+)
 from repro.streams.engine import (
     STATE_DICT_VERSION,
     advance_estimator,
@@ -198,6 +203,17 @@ class MultiStreamSGrapp:
         # must compile at ladder rungs and never re-trace at steady state
         self.executor = cfg.make_executor(executor)
         self._step_fn = estimator_step(cfg.tol, cfg.step)
+        # async overlapped flush pipeline, exactly as the single-stream
+        # engine: push() submits without blocking, the next flush point
+        # reaps; sync_dispatch forces the old blocking path.  Estimators
+        # only ever advance at reap, so both paths are bit-identical.
+        self.sync_dispatch = resolve_sync_dispatch(cfg)
+        # owner-driven dispatch (see StreamingSGrapp): push() skips the
+        # flush_every self-submit so the owner schedules submit/reap itself
+        self.defer_dispatch = False
+        if cfg.warmup:
+            self.executor.warmup(
+                cfg.warmup, multiset=(cfg.dup_policy == "multiset"))
 
         n = int(n_streams)
         self._state: StreamState = stream_state_init(n, self.alpha0,
@@ -210,6 +226,10 @@ class MultiStreamSGrapp:
             = [[] for _ in range(n)]
         self._pending_streams: set[int] = set()
         self._n_pending_total = 0
+        # the one in-flight submitted flush (None or a (streams,
+        # n_per_stream, handle, cum, end_tau) tuple); at most one dispatch
+        # is ever in flight — _submit_flush asserts it
+        self._inflight: tuple | None = None
         # per-stream per-window history (materialized at flush)
         self._counts: list[list[float]] = [[] for _ in range(n)]
         self._estimates: list[list[np.float32]] = [[] for _ in range(n)]
@@ -228,16 +248,32 @@ class MultiStreamSGrapp:
 
     @property
     def n_pending(self) -> int:
-        """Closed-but-uncounted windows across the whole fleet."""
-        return self._n_pending_total
+        """Closed-but-uncounted windows across the whole fleet: awaiting
+        dispatch + in flight."""
+        return self._n_pending_total + self.n_inflight
+
+    @property
+    def n_inflight(self) -> int:
+        """Windows inside the submitted-but-unreaped async dispatch (0 when
+        nothing is in flight; always 0 under ``sync_dispatch``)."""
+        if self._inflight is None:
+            return 0
+        return sum(self._inflight[1])
+
+    def _inflight_for(self, s: int) -> int:
+        if self._inflight is None:
+            return 0
+        streams, n_per_stream = self._inflight[0], self._inflight[1]
+        return n_per_stream[streams.index(s)] if s in streams else 0
 
     def n_windows(self, stream_id: int | None = None) -> int:
-        """Windows closed so far (counted or pending) — for one tenant, or
-        fleet-wide with ``stream_id=None``."""
+        """Windows closed so far (counted, in flight, or pending) — for one
+        tenant, or fleet-wide with ``stream_id=None``."""
         if stream_id is not None:
             s = self._check_stream(stream_id)
-            return len(self._counts[s]) + len(self._pending[s])
-        return (sum(len(c) for c in self._counts) + self._n_pending_total)
+            return (len(self._counts[s]) + len(self._pending[s])
+                    + self._inflight_for(s))
+        return sum(len(c) for c in self._counts) + self.n_pending
 
     def alpha(self, stream_id: int) -> float:
         """Tenant's current (possibly adapted) alpha — lags its pending
@@ -306,20 +342,30 @@ class MultiStreamSGrapp:
             self._pending[s].append((ei, ej, ops, m, end_tau))
             self._pending_streams.add(s)
         self._n_pending_total += len(closed)
-        if self._n_pending_total >= self.flush_every:
-            self.flush()
+        if (self._n_pending_total >= self.flush_every
+                and not self.defer_dispatch):
+            if self.sync_dispatch:
+                self.flush()
+            else:
+                # overlapped pipeline: settle the previous flush (its device
+                # compute ran while this micro-batch windowized on the
+                # host), then dispatch this one and return WITHOUT blocking
+                self._reap_flush()
+                self._submit_flush()
         return len(closed)
 
     # -- counting + estimation ----------------------------------------------
 
-    def flush(self) -> int:
-        """Count every tenant's pending closed windows through the shared
-        executor — ONE ``pack_windows`` + ONE bucketed dispatch for the
-        whole fleet, stream-id provenance lane included — then advance each
-        tenant's estimator over its windows in close order.  Returns the
-        number of windows flushed.  Idempotent when nothing is pending."""
+    def _submit_flush(self) -> bool:
+        """Submit half of the fleet flush: resolve + pack every tenant's
+        pending closed windows into ONE batch (stream-id provenance lane
+        included) and dispatch ONE bucketed count asynchronously, parking
+        the handle in ``_inflight``.  Returns True iff a dispatch is now in
+        flight.  Estimators are NOT advanced here — that happens at reap,
+        so flush timing can never change any tenant's estimates."""
         if self._n_pending_total == 0:
-            return 0
+            return False
+        assert self._inflight is None, "reap the in-flight flush first"
         streams = sorted(self._pending_streams)
         per_edges: list[np.ndarray] = []
         per_mult: list[np.ndarray | None] = []
@@ -362,17 +408,30 @@ class MultiStreamSGrapp:
                 window_end_tau=np.asarray(end_tau, dtype=np.float64),
                 align=self.align, stream_ids=np.asarray(sids, dtype=np.int32),
                 sample_uid=uid)
-        counts = self.executor.window_counts(batch)   # float64 [m]
-        # windows stay pending until counted: a packing/counting error (one
-        # tenant's bad edge ids, a dying device) leaves the whole fleet
-        # consistent and the next flush retries, instead of silently
-        # dropping every tenant's closed windows
+        handle = self.executor.window_counts_submit(batch)
+        # windows stay pending until dispatched: a packing error (one
+        # tenant's bad edge ids) raises above with every pending list
+        # intact, so the whole fleet stays consistent and the next flush
+        # retries instead of silently dropping closed windows
         n_per_stream = [len(self._pending[s]) for s in streams]
         for s in streams:
             self._pending[s] = []
         self._pending_streams.clear()
         self._n_pending_total = 0
+        self._inflight = (streams, n_per_stream, handle, cum, end_tau)
+        return True
 
+    def _reap_flush(self) -> int:
+        """Reap half of the fleet flush: block on the in-flight dispatch's
+        counts, scatter them back per tenant, and advance each tenant's
+        estimator over its windows in close order.  Returns the number of
+        windows settled (0 when nothing is in flight).  The ONLY place any
+        tenant's estimator advances."""
+        if self._inflight is None:
+            return 0
+        streams, n_per_stream, handle, cum, end_tau = self._inflight
+        counts = handle.reap()   # float64 [m]
+        self._inflight = None
         # scatter counts back per tenant: windows were appended stream by
         # stream in ascending id, so each tenant's windows are a contiguous
         # slice, in close order (the batch's stream_ids lane records the
@@ -391,7 +450,21 @@ class MultiStreamSGrapp:
             set_estimator_carry(self._state, s, carry)
             self._state.total_sgrs[s] = int(cum[off + n_new - 1])
             off += n_new
-        return len(per_edges)
+        return len(counts)
+
+    def flush(self) -> int:
+        """Count every closed-but-uncounted window fleet-wide — the
+        in-flight async dispatch AND every tenant's pending list — through
+        the shared executor (ONE ``pack_windows`` + ONE bucketed dispatch
+        for the whole fleet) and advance each tenant's estimator in close
+        order.  Returns the number of windows settled.  Idempotent when
+        nothing is outstanding.  This is the blocking entry; the async
+        pipeline's halves live in :meth:`_submit_flush` /
+        :meth:`_reap_flush`."""
+        n = self._reap_flush()
+        if self._submit_flush():
+            n += self._reap_flush()
+        return n
 
     def _close_tail(self, s: int) -> None:
         if self._state.finalized[s]:
@@ -549,6 +622,7 @@ class MultiStreamSGrapp:
         self._pending = [[] for _ in range(n)]
         self._pending_streams = set()
         self._n_pending_total = 0
+        self._inflight = None
         return self
 
     @classmethod

@@ -24,17 +24,31 @@ Data plane
                                  └────────┬────────┘  ≤ max_coalesce_records
                                           ▼
                             ONE executor thread: per-item engine.push()
-                            in arrival order + ONE engine.flush() — so
+                            in arrival order + ONE reap+submit cycle — so
                             windows closed by different tenants in the same
                             cycle co-batch through one bucketed dispatch
                                           ▼
            ◄──ack {windows_closed}──────  per-item futures resolve
-           ◄──estimate {...} (subscribed) new counted windows fan out
+           ◄──estimate {...} (subscribed) counted windows fan out at reap
 
 Every engine touch (push/flush/result/finalize/state_dict) runs on that one
 ``ThreadPoolExecutor(max_workers=1)`` thread: the engine needs no locks, the
 event loop never blocks on XLA, and cross-tenant co-batching — the whole
 point of the fleet engine — is preserved at the dispatch level.
+
+The engine cycle rides the engine layer's async flush pipeline
+(``docs/architecture.md``): each cycle *reaps* the previous cycle's
+in-flight dispatch (blocking only for compute that already overlapped this
+cycle's admission + WAL work) and *submits* the windows closed now without
+materializing their counts.  ``latency_budget_ms > 0`` additionally defers
+the submit while the oldest pending window is younger than the budget, so
+windows closed by different tenants within the deadline fuse into one
+bucketed dispatch; a follow-up reap task publishes estimates as soon as the
+counts land, and a deadline timer fires the deferred dispatch even when no
+new traffic arrives.  ``EngineConfig.sync_dispatch`` (or
+``SGRAPP_SYNC_DISPATCH=1``) restores the old blocking flush-per-cycle.
+Acks never wait on counts (``windows_closed`` is known at push time) and
+still resolve only after the WAL group-commit fsync.
 
 Tenancy: the hello token maps to a ``stream_id``; ``stream_id`` never
 travels on the wire (see :mod:`repro.streams.wire`), so a tenant cannot
@@ -171,6 +185,13 @@ class ServerMetrics:
         self.wal_errors = 0                   # WAL append/sync failures
         self.checkpoint_failures = 0          # failed checkpoint attempts
         self.checkpoint_fallbacks = 0         # corrupt steps skipped at boot
+        # async flush pipeline observability (ISSUE: overlap must be
+        # visible in serving, not just in benches)
+        self.dispatch_count = 0               # async bucketed dispatches
+        self.windows_dispatched = 0           # windows across them
+        self._reap_count = 0
+        self._reap_sum_ms = 0.0
+        self._reap_recent = deque(maxlen=4096)
         self._lat_count = 0
         self._lat_sum_ms = 0.0
         self._lat_max_ms = 0.0
@@ -186,12 +207,28 @@ class ServerMetrics:
         self._lat_buckets[bisect.bisect_left(_LATENCY_BOUNDS_MS, ms)] += 1
         self._lat_recent.append(ms)
 
-    def percentile(self, q: float) -> float:
-        if not self._lat_recent:
+    def observe_dispatch(self, n_windows: int) -> None:
+        self.dispatch_count += 1
+        self.windows_dispatched += int(n_windows)
+
+    def observe_reap_wait(self, ms: float) -> None:
+        self._reap_count += 1
+        self._reap_sum_ms += ms
+        self._reap_recent.append(ms)
+
+    @staticmethod
+    def _pct(recent, q: float) -> float:
+        if not recent:
             return 0.0
-        xs = sorted(self._lat_recent)
+        xs = sorted(recent)
         k = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
         return float(xs[k])
+
+    def percentile(self, q: float) -> float:
+        return self._pct(self._lat_recent, q)
+
+    def reap_percentile(self, q: float) -> float:
+        return self._pct(self._reap_recent, q)
 
     def snapshot(self, **extra) -> dict:
         buckets = {f"<={b}ms": c for b, c in
@@ -220,6 +257,18 @@ class ServerMetrics:
                 "engine_errors": self.engine_errors,
                 "flush_errors": self.flush_errors,
                 "internal_errors": self.internal_errors,
+                "dispatch_count": self.dispatch_count,
+                "windows_dispatched": self.windows_dispatched,
+                "coalesced_windows_per_dispatch": (
+                    self.windows_dispatched / self.dispatch_count
+                    if self.dispatch_count else 0.0),
+                "reap_wait_ms": {
+                    "count": self._reap_count,
+                    "mean": (self._reap_sum_ms / self._reap_count
+                             if self._reap_count else 0.0),
+                    "p50": self.reap_percentile(0.50),
+                    "p99": self.reap_percentile(0.99),
+                },
                 "push_latency_ms": {
                     "count": self._lat_count,
                     "mean": (self._lat_sum_ms / self._lat_count
@@ -284,6 +333,16 @@ class StreamServer:
         coalescer keeps gathering until this deadline (or the record cap)
         before dispatching the micro-batch.
     max_coalesce_records : record cap per dispatch cycle.
+    latency_budget_ms : deadline for the opportunistic same-dispatch window
+        coalescer.  0 (default) submits every cycle's closed windows to the
+        executor immediately (still asynchronously — the event loop never
+        blocks on XLA).  > 0 defers the submit while the oldest pending
+        window is younger than the budget, so windows closed by different
+        tenants within the deadline fuse into ONE bucketed dispatch; a
+        deadline timer fires the deferred dispatch even without new
+        traffic.  Unlike ``flush_ms`` (which delays *acks* by gathering
+        push items), this never delays an ack — only count materialization
+        and estimate fanout (docs/serving.md).
     checkpoint_dir : durability root (``None`` disables checkpointing);
         :meth:`start` recovers from the newest *valid* checkpoint found
         there (corrupt steps are skipped — degraded mode), then replays
@@ -302,6 +361,7 @@ class StreamServer:
                  host: str = "127.0.0.1", port: int = 0, http_port: int = 0,
                  queue_limit: int = 64, flush_ms: float = 2.0,
                  max_coalesce_records: int = 65536,
+                 latency_budget_ms: float = 0.0,
                  checkpoint_dir: str | None = None,
                  checkpoint_every_s: float | None = None,
                  serving: ServingConfig | None = None,
@@ -327,6 +387,8 @@ class StreamServer:
             raise ValueError("queue_limit must be >= 1")
         if not (float(flush_ms) >= 0.0):
             raise ValueError("flush_ms must be >= 0")
+        if not (float(latency_budget_ms) >= 0.0):
+            raise ValueError("latency_budget_ms must be >= 0")
         self.tenants = pols
         self.n_streams = len(sids)
         self.config = config
@@ -340,6 +402,13 @@ class StreamServer:
         self.queue_limit = int(queue_limit)
         self.flush_ms = float(flush_ms)
         self.max_coalesce_records = int(max_coalesce_records)
+        self.latency_budget_ms = float(latency_budget_ms)
+        if self.latency_budget_ms > 0.0 and not self.engine.sync_dispatch:
+            # the deadline coalescer owns dispatch scheduling: suppress the
+            # engine's own flush_every self-submit so windows from several
+            # cycles actually fuse into one dispatch instead of the engine
+            # submitting each cycle's windows as push() closes them
+            self.engine.defer_dispatch = True
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every_s = checkpoint_every_s
         if serving is None:
@@ -376,6 +445,11 @@ class StreamServer:
         self._http = None
         self._coalescer_task = None
         self._ckpt_task = None
+        # async dispatch state: when the windows pending on the engine were
+        # first deferred (engine-thread-written, loop-read — GIL-atomic
+        # float/None peek), and the one follow-up reap task
+        self._pending_since: float | None = None
+        self._reap_task: asyncio.Task | None = None
         self._draining = False
         self._stopped = False
         self._stop_done: asyncio.Event | None = None
@@ -554,6 +628,14 @@ class StreamServer:
                     await self._ckpt_task
                 except asyncio.CancelledError:
                     pass
+            if self._reap_task is not None and not self._reap_task.done():
+                # the drain flush below reaps everything; don't let the
+                # follow-up touch the pool after shutdown
+                self._reap_task.cancel()
+                try:
+                    await self._reap_task
+                except asyncio.CancelledError:
+                    pass
             self._drain_queue_rejects()
             try:
                 if finalize:
@@ -695,16 +777,63 @@ class StreamServer:
                 self.metrics.wal_errors += 1
                 self._set_degraded("wal", str(e))
         try:
-            # ONE flush for the whole cycle: windows closed by different
-            # tenants above co-batch through one bucketed executor dispatch
-            self.engine.flush()
+            # ONE reap+submit cycle: windows closed by different tenants
+            # above co-batch through one bucketed executor dispatch, and the
+            # dispatch is asynchronous — acks above never wait on counts
+            self._engine_dispatch()
         except Exception as e:
             self.metrics.flush_errors += 1
             self._log("flush_error", error=repr(e))
         return outs, self._collect_updates()
 
+    def _reap_now(self) -> int:
+        """Reap the in-flight dispatch (engine thread).  The measured wait
+        is exactly the non-overlapped remainder of the device compute."""
+        if not self.engine.n_inflight:
+            return 0
+        t0 = time.monotonic()
+        n = self.engine._reap_flush()
+        self.metrics.observe_reap_wait((time.monotonic() - t0) * 1e3)
+        return n
+
+    def _engine_dispatch(self) -> None:
+        """One overlapped flush cycle on the engine thread: settle the
+        previous cycle's dispatch, then submit the windows pending now —
+        unless ``latency_budget_ms`` says to keep gathering so later cycles
+        fuse into the same dispatch."""
+        if self.engine.sync_dispatch:
+            self.engine.flush()
+            self._pending_since = None
+            return
+        self._reap_now()
+        # n_inflight is 0 after the reap, so n_pending == awaiting-dispatch
+        if self.engine.n_pending == 0:
+            self._pending_since = None
+            return
+        now = time.monotonic()
+        if self._pending_since is None:
+            self._pending_since = now
+        budget_s = self.latency_budget_ms / 1000.0
+        if budget_s > 0.0 and (now - self._pending_since) < budget_s:
+            return   # defer: the coalescer's deadline timer fires us later
+        if self.engine._submit_flush():
+            self.metrics.observe_dispatch(self.engine.n_inflight)
+        self._pending_since = None
+
+    def _engine_dispatch_collect(self) -> dict:
+        self._engine_dispatch()
+        return self._collect_updates()
+
+    def _engine_reap_collect(self) -> dict:
+        """Follow-up reap (engine thread): materialize the counts of the
+        last submitted dispatch so estimates publish without waiting for
+        the next push cycle."""
+        self._reap_now()
+        return self._collect_updates()
+
     def _engine_flush(self) -> dict:
         self.engine.flush()
+        self._pending_since = None
         return self._collect_updates()
 
     def _engine_result(self, s: int) -> tuple:
@@ -743,7 +872,21 @@ class StreamServer:
     async def _coalesce_loop(self) -> None:
         stop = False
         while not stop:
-            item = await self._queue.get()
+            deadline_s = self._dispatch_deadline_s()
+            if deadline_s is None:
+                item = await self._queue.get()
+            else:
+                try:
+                    item = await asyncio.wait_for(self._queue.get(),
+                                                  deadline_s)
+                except asyncio.TimeoutError:
+                    # latency budget expired with no new traffic: fire the
+                    # deferred dispatch and publish once its counts land
+                    updates = await self._loop.run_in_executor(
+                        self._pool, self._engine_dispatch_collect)
+                    self._fanout_estimates(updates)
+                    self._maybe_reap_later()
+                    continue
             if item is _STOP:
                 break
             batch = [item]
@@ -805,6 +948,37 @@ class StreamServer:
                 if not it.future.done():
                     it.future.set_result(out)
             self._fanout_estimates(updates)
+            # the cycle's dispatch is still in flight (counts un-materialized
+            # by design): a follow-up reap publishes its estimates without
+            # waiting for the next push cycle
+            self._maybe_reap_later()
+
+    def _dispatch_deadline_s(self) -> float | None:
+        """Remaining latency budget of the deferred dispatch (None = nothing
+        deferred / no budget): caps the coalescer's idle wait so the
+        deadline fires even when no new traffic arrives."""
+        since = self._pending_since
+        if since is None or self.latency_budget_ms <= 0.0:
+            return None
+        return max(1e-4,
+                   self.latency_budget_ms / 1000.0
+                   - (time.monotonic() - since))
+
+    def _maybe_reap_later(self) -> None:
+        if self._draining or not self.engine.n_inflight:
+            return
+        if self._reap_task is not None and not self._reap_task.done():
+            return   # one follow-up at a time; it reaps whatever is in flight
+        self._reap_task = asyncio.create_task(self._reap_and_publish())
+
+    async def _reap_and_publish(self) -> None:
+        try:
+            updates = await self._loop.run_in_executor(
+                self._pool, self._engine_reap_collect)
+            self._fanout_estimates(updates)
+        except Exception as e:
+            self.metrics.flush_errors += 1
+            self._log("reap_error", error=repr(e))
 
     def _fanout_estimates(self, updates: dict) -> None:
         for s, h in updates.items():
@@ -1033,9 +1207,23 @@ class StreamServer:
                     "n_streams": self.n_streams,
                 }
             elif path == "/metrics":
+                # gauge first (what was in flight when asked), then settle
+                # the dispatch on the engine thread so windows_counted and
+                # the estimator-derived numbers below are consistent — the
+                # endpoint is a natural reap point, and without it a scrape
+                # racing the follow-up reap task reads stale counts
+                inflight = self.engine.n_inflight
+                if inflight and not self._stopped:
+                    try:
+                        self._fanout_estimates(
+                            await self._loop.run_in_executor(
+                                self._pool, self._engine_reap_collect))
+                    except RuntimeError:
+                        pass   # pool shut down mid-stop: snapshot as-is
                 status, body = 200, self.metrics.snapshot(
                     queue_depth=self._queue.qsize(),
                     queue_limit=self.queue_limit,
+                    dispatch_inflight=inflight,
                     uptime_s=round(time.monotonic() - self._started_at, 3),
                     windows_counted=[self.engine.n_counted(s)
                                      for s in range(self.n_streams)],

@@ -28,6 +28,7 @@ leaves, and cheap to index per stream.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, fields
 
 import numpy as np
@@ -425,6 +426,71 @@ def _push_one_stream(
                    closed, dl=dl)
     return closed
 
+def _push_one_record(
+    state: StreamState, s: int, tau: float, ei: int, ej: int, nt_w: int,
+) -> list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None, int, float]]:
+    """Scalar fast path of :func:`windowizer_push`: ONE insert record, all
+    arithmetic in plain Python.  mb=1 serving spends its whole budget here —
+    the vector path's array round-trips (``normalize_records``, ``diff``,
+    ``cumsum``) cost ~40us per call, two orders of magnitude more than the
+    one comparison and three buffer writes a single record actually needs.
+    Bit-identical to the vector path by construction: same validation
+    messages, same close rule (a record whose unique-timestamp rank hits
+    ``nt_w`` ends the open window and seeds the next), same closed-window
+    tuples (``_buf_take`` copies, ``_norm_ops`` collapse, net count)."""
+    buf_len = state.buf_len
+    if not 0 <= s < buf_len.shape[0]:
+        raise ValueError(f"stream_id out of range [0, {buf_len.shape[0]})")
+    tau = float(tau)
+    if not math.isfinite(tau):
+        raise ValueError("timestamps must be finite")
+    if tau < state.last_tau[s]:  # NaN (no record yet) compares False,
+        # exactly as the array path's explicit isnan guard
+        raise ValueError("timestamps must be non-decreasing (stream order)")
+    if state.finalized[s]:
+        raise RuntimeError("push after finalize(); stream already ended")
+
+    buf_last_tau = state.buf_last_tau
+    uniq0 = int(state.uniq[s])
+    prev = float(buf_last_tau[s]) if uniq0 else NO_TAU
+    is_new = 1 if (math.isnan(prev) or tau != prev) else 0
+    uniq_idx = uniq0 - 1 + is_new
+    closed: list[tuple[int, np.ndarray, np.ndarray, np.ndarray | None,
+                       int, float]] = []
+    if uniq_idx >= nt_w:
+        # rank nt_w: the open window is complete and this record opens the
+        # next one (the vector path's empty completing segment)
+        end_tau = float(buf_last_tau[s])
+        bi, bj, bop = _buf_take(state, s)
+        closed.append((s, bi, bj, _norm_ops(bop), int(bop.sum()), end_tau))
+        uniq_idx -= nt_w
+    pos = int(buf_len[s])
+    cap = state.buf_i.shape[1]
+    if pos >= cap:
+        pad = ((0, 0), (0, cap))  # double, as _buf_append
+        state.buf_i = np.pad(state.buf_i, pad)
+        state.buf_j = np.pad(state.buf_j, pad)
+        state.buf_op = np.pad(state.buf_op, pad)
+    state.buf_i[s, pos] = ei
+    state.buf_j[s, pos] = ej
+    state.buf_op[s, pos] = 1
+    buf_len[s] = pos + 1
+    state.uniq[s] = uniq_idx + 1
+    buf_last_tau[s] = tau
+    state.last_tau[s] = tau
+    return closed
+
+
+# scalar types the fast path accepts without an array round-trip; 0-d
+# arrays and lists take the vector path (correct, just not hot)
+_SCALAR_TAU = (int, float, np.integer, np.floating)
+_SCALAR_ID = (int, np.integer)
+# native dtype descriptors are interned, so the hot path can compare with
+# ``is`` (byte-swapped or casting inputs miss and take the vector path)
+_DT_F64 = np.dtype(np.float64)
+_DT_I64 = np.dtype(np.int64)
+
+
 def windowizer_push(
     state: StreamState,
     stream_ids: np.ndarray,
@@ -467,6 +533,24 @@ def windowizer_push(
         raise ValueError(
             "on_missing_delete must be 'raise' or 'ignore', got "
             f"{on_missing_delete!r}")
+    if op is None and isinstance(stream_ids, _SCALAR_ID):
+        # one insert record — the mb=1 serving hot path; no deletes, so
+        # on_missing_delete never applies.  Two shapes land here: bare
+        # scalars, and the wire format's length-1 columns (already
+        # normalized to float64/int64 — anything else takes the vector
+        # path through normalize_records)
+        if (type(tau) is np.ndarray and tau.shape == (1,)
+                and tau.dtype is _DT_F64
+                and type(edge_i) is np.ndarray and edge_i.shape == (1,)
+                and edge_i.dtype is _DT_I64
+                and type(edge_j) is np.ndarray and edge_j.shape == (1,)
+                and edge_j.dtype is _DT_I64):
+            return _push_one_record(state, int(stream_ids), tau[0],
+                                    int(edge_i[0]), int(edge_j[0]), nt_w)
+        if (isinstance(tau, _SCALAR_TAU) and isinstance(edge_i, _SCALAR_ID)
+                and isinstance(edge_j, _SCALAR_ID)):
+            return _push_one_record(state, int(stream_ids), tau,
+                                    int(edge_i), int(edge_j), nt_w)
     # the shared wire schema owns shape/dtype/op-range normalization
     # (repro.streams.wire); an all-insert op lane comes back as rb.op=None
     rb = normalize_records(tau, edge_i, edge_j, op=op, stream_id=stream_ids)

@@ -207,3 +207,60 @@ def test_migration_chain_under_load_fleet():
             e.push(s, t[cut:], i[cut:], j[cut:])
     for ra, rb in zip(fleet.finalize(), clone.finalize()):
         np.testing.assert_array_equal(ra.estimates, rb.estimates)
+
+
+# ---------------------------------------------------------------------------
+# async in-flight dispatch: state_dict() must reap before snapshotting
+# ---------------------------------------------------------------------------
+
+def test_state_dict_reaps_async_inflight_dispatch(tmp_path):
+    """A checkpoint taken while an async flush is still in flight must reap
+    it first (estimator advanced, counts settled) — the snapshot carries no
+    half-counted windows, and a restored clone continues bit-identically."""
+    t, i, j, _ = dyn(seed=33, delete_frac=0.0, dup_frac=0.0)
+    cfg = EngineConfig(tier="dense", flush_every=2)   # async default
+
+    # micro-batch until a dispatch is genuinely in flight (the threshold
+    # check runs once per push call, so one big push may end under it)
+    eng = StreamingSGrapp(NT_W, 0.95, config=cfg)
+    cut = 0
+    while cut < t.size // 2 and eng.n_inflight == 0:
+        eng.push(t[cut:cut + 40], i[cut:cut + 40], j[cut:cut + 40])
+        cut += 40
+    assert eng.n_inflight > 0   # a dispatch is genuinely in flight
+    sd = eng.state_dict()       # reaps: snapshot is fully settled
+    assert eng.n_inflight == 0 and eng.n_pending == 0
+    assert len(sd["counts"]) == eng.n_windows
+
+    save_checkpoint(str(tmp_path), 0, sd)
+    clone = StreamingSGrapp(NT_W, 0.95, config=cfg)
+    state, _ = restore_checkpoint(str(tmp_path), clone.state_dict(),
+                                  host=True)
+    clone.restore(state)
+    for e in (eng, clone):
+        e.push(t[cut:], i[cut:], j[cut:])
+    np.testing.assert_array_equal(eng.finalize().estimates,
+                                  clone.finalize().estimates)
+
+
+def test_fleet_state_dict_reaps_async_inflight_dispatch():
+    cfg = EngineConfig(tier="dense", flush_every=2)
+    fleet = MultiStreamSGrapp(2, NT_W, 0.95, config=cfg)
+    streams = [dyn(seed=81, delete_frac=0.0, dup_frac=0.0),
+               dyn(seed=82, delete_frac=0.0, dup_frac=0.0)]
+    cut = 0
+    while cut < streams[0][0].size // 2 and fleet.n_inflight == 0:
+        for s, (t, i, j, _) in enumerate(streams):
+            fleet.push(s, t[cut:cut + 40], i[cut:cut + 40],
+                       j[cut:cut + 40])
+        cut += 40
+    assert fleet.n_inflight > 0
+    sd = fleet.state_dict()
+    assert fleet.n_inflight == 0 and fleet.n_pending == 0
+
+    clone = MultiStreamSGrapp(2, NT_W, 0.95, config=cfg).restore(sd)
+    for e in (fleet, clone):
+        for s, (t, i, j, _) in enumerate(streams):
+            e.push(s, t[cut:], i[cut:], j[cut:])
+    for ra, rb in zip(fleet.finalize(), clone.finalize()):
+        np.testing.assert_array_equal(ra.estimates, rb.estimates)

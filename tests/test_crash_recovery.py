@@ -466,7 +466,8 @@ def _free_port() -> int:
 def _sigkill_leg(tmp_path, plan: FaultPlan, *, n_batches: int = 16,
                  inter_push_sleep: float = 0.0,
                  checkpoint_every_s: float | None = None,
-                 check_duplicate_retry: bool = False):
+                 check_duplicate_retry: bool = False,
+                 tier: str = "numpy", server_args: tuple = ()):
     """SIGKILL the server at a planned fault point mid-stream, restart it
     on the same state dir, let the seq-retrying client push through the
     outage, and assert bit-identity with a crash-free offline engine."""
@@ -474,9 +475,10 @@ def _sigkill_leg(tmp_path, plan: FaultPlan, *, n_batches: int = 16,
     batches = stream_batches(stream, 50)
     ckpt = str(tmp_path / "ckpt")
     port, http_port = _free_port(), _free_port()
-    fixed = ["--port", str(port), "--http-port", str(http_port)]
+    fixed = ["--port", str(port), "--http-port", str(http_port),
+             *server_args]
     srv_kw = dict(nt_w=NT_W, alpha0=ALPHA0, tenants={"t0": 0},
-                  checkpoint_dir=ckpt, tier="numpy", flush_ms=1.0,
+                  checkpoint_dir=ckpt, tier=tier, flush_ms=1.0,
                   extra_args=fixed)
 
     async def scenario():
@@ -546,3 +548,19 @@ def test_sigkill_mid_checkpoint_rename_recovers_bit_identical(tmp_path):
         tmp_path,
         FaultPlan({"pre_checkpoint_rename": {"action": "kill", "at": 1}}),
         n_batches=24, inter_push_sleep=0.03, checkpoint_every_s=0.4)
+
+
+def test_sigkill_async_dispatch_wal_fsync_before_ack(tmp_path):
+    """The async flush pipeline must not reorder durability: with count
+    dispatch deferred past the ack (compiled tier + latency budget, so a
+    dispatch is genuinely in flight across cycles), every acked record's
+    WAL fsync still lands before its ack.  Kill between fsync and ack at
+    cycle 5: the retry of the last acked seq must dedupe (it WAS durable)
+    and the recovered stream is bit-identical to a crash-free offline
+    engine — the in-flight dispatch's un-materialized counts are simply
+    recomputed from the WAL."""
+    _sigkill_leg(tmp_path,
+                 FaultPlan({"pre_ack": {"action": "kill", "at": 5}}),
+                 tier="dense",
+                 server_args=("--latency-budget-ms", "50"),
+                 check_duplicate_retry=True)

@@ -458,3 +458,75 @@ def test_sharded_fleet_bit_identical_to_dedicated_engines():
     res = push_round_robin(fleet, streams, mb=29)
     for sid, ref in enumerate(refs):
         assert_same_result(res[sid], ref)
+
+
+# -- async overlapped flush pipeline -------------------------------------------
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_async_fleet_bit_identical_to_sync_dispatch(tier):
+    """The overlapped submit/reap pipeline (the default) is bit-identical to
+    the blocking ``sync_dispatch`` fleet — per tenant, across flush
+    batching — so flush timing never changes any tenant's estimates."""
+    from repro.streams.config import EngineConfig
+
+    streams = make_fleet_streams()
+    for flush_every in (1, 4):
+        sync = MultiStreamSGrapp(
+            len(streams), NT_W, 0.95,
+            config=EngineConfig(tier=tier, flush_every=flush_every,
+                                sync_dispatch=True))
+        assert sync.sync_dispatch
+        refs = push_round_robin(sync, streams, mb=33)
+        for mb in (1, 7, 33):
+            fleet = MultiStreamSGrapp(
+                len(streams), NT_W, 0.95,
+                config=EngineConfig(tier=tier, flush_every=flush_every))
+            assert not fleet.sync_dispatch
+            res = push_round_robin(fleet, streams, mb=mb)
+            assert fleet.n_inflight == 0   # finalize reaps everything
+            for sid, ref in enumerate(refs):
+                assert_same_result(res[sid], ref)
+
+
+def test_async_fleet_inflight_accounting():
+    """A submitted-but-unreaped co-batched dispatch stays visible through
+    ``n_inflight`` / per-stream ``n_windows`` until a flush point settles
+    it."""
+    streams = make_fleet_streams()
+    fleet = MultiStreamSGrapp(len(streams), NT_W, 0.95, tier="dense",
+                              flush_every=2)
+    saw_inflight = False
+    for a in range(0, max(len(s) for s in streams), 40):
+        for sid, s in enumerate(streams):
+            if a < len(s):
+                fleet.push(sid, s.tau[a:a + 40], s.edge_i[a:a + 40],
+                           s.edge_j[a:a + 40])
+        saw_inflight = saw_inflight or fleet.n_inflight > 0
+    assert saw_inflight
+    total_before = fleet.n_windows()
+    fleet.flush()
+    assert fleet.n_inflight == 0 and fleet.n_pending == 0
+    assert fleet.n_windows() == total_before   # settling loses no windows
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+def test_sharded_async_fleet_bit_identical_to_sync():
+    """The async pipeline composes with sharded dispatch: a 2-device fleet
+    on the default (async) path matches the sync_dispatch fleet exactly."""
+    from repro.streams.config import EngineConfig
+
+    streams = make_fleet_streams()
+    sync = MultiStreamSGrapp(
+        len(streams), NT_W, 0.95,
+        config=EngineConfig(tier="dense", flush_every=3,
+                            sync_dispatch=True, devices=jax.device_count()))
+    refs = push_round_robin(sync, streams, mb=29)
+    fleet = MultiStreamSGrapp(
+        len(streams), NT_W, 0.95,
+        config=EngineConfig(tier="dense", flush_every=3,
+                            devices=jax.device_count()))
+    assert fleet.executor.n_shards == jax.device_count()
+    res = push_round_robin(fleet, streams, mb=29)
+    for sid, ref in enumerate(refs):
+        assert_same_result(res[sid], ref)

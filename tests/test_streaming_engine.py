@@ -17,6 +17,7 @@ import pytest
 from repro.core.executor import TIERS, WindowExecutor, compiled_bucket_cache_info
 from repro.core.sgrapp import run_sgrapp, run_sgrapp_x
 from repro.streams import StreamingSGrapp, synthetic_rating_stream
+from repro.streams.config import SYNC_DISPATCH_ENV, EngineConfig
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 
 NT_W = 40
@@ -257,6 +258,100 @@ def test_shared_executor_across_engines():
                               flush_every=flush_every)
         assert eng.tier == "tiled"
         assert_same_result(push_in_batches(eng, s, 33), ref)
+
+
+# -- async overlapped flush pipeline -------------------------------------------
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_async_flush_bit_identical_to_sync_dispatch(tier):
+    """The overlapped submit/reap pipeline (the default) produces estimates
+    bit-identical to the blocking ``sync_dispatch`` path — and therefore to
+    replay — at every micro-batch size and flush batching."""
+    s = make_stream(n=800, seed=4)
+    for flush_every in (1, 4):
+        sync = StreamingSGrapp(NT_W, 0.95, config=EngineConfig(
+            tier=tier, flush_every=flush_every, sync_dispatch=True))
+        assert sync.sync_dispatch
+        ref = push_in_batches(sync, s, 7)
+        for mb in (1, 7, len(s)):
+            eng = StreamingSGrapp(NT_W, 0.95, config=EngineConfig(
+                tier=tier, flush_every=flush_every))
+            assert not eng.sync_dispatch
+            assert_same_result(push_in_batches(eng, s, mb), ref)
+            assert eng.n_inflight == 0   # finalize reaps everything
+
+
+def test_async_flush_overlaps_dispatch():
+    """The async path actually leaves a dispatch in flight between pushes
+    (the overlap window), and any result/flush point settles it."""
+    s = make_stream(n=800)
+    eng = StreamingSGrapp(NT_W, 0.95, tier="dense", flush_every=1)
+    saw_inflight = False
+    for a in range(0, len(s), 40):
+        eng.push(s.tau[a:a + 40], s.edge_i[a:a + 40], s.edge_j[a:a + 40])
+        saw_inflight = saw_inflight or eng.n_inflight > 0
+    assert saw_inflight
+    eng.flush()
+    assert eng.n_inflight == 0 and eng.n_pending == 0
+
+
+def test_defer_dispatch_owner_driven_flush():
+    """``defer_dispatch=True`` suppresses the flush_every self-submit in
+    push(): closed windows accumulate until the owner flushes, and the
+    result is bit-identical to the self-dispatching engine (the server's
+    deadline coalescer relies on exactly this)."""
+    s = make_stream(n=800)
+    ref = StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=1)
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy", flush_every=1)
+    eng.defer_dispatch = True
+    for a in range(0, len(s), 40):
+        ref.push(s.tau[a:a + 40], s.edge_i[a:a + 40], s.edge_j[a:a + 40])
+        eng.push(s.tau[a:a + 40], s.edge_i[a:a + 40], s.edge_j[a:a + 40])
+        assert eng.n_inflight == 0  # push never dispatches under deferral
+    assert eng.n_pending == eng.n_windows > 0
+    eng.flush()
+    assert eng.n_pending == 0
+    assert_same_result(eng.finalize(), ref.finalize())
+
+
+def test_sync_dispatch_env_escape_hatch(monkeypatch):
+    monkeypatch.setenv(SYNC_DISPATCH_ENV, "1")
+    eng = StreamingSGrapp(NT_W, 0.95, tier="numpy")
+    assert eng.sync_dispatch
+    monkeypatch.delenv(SYNC_DISPATCH_ENV)
+    assert not StreamingSGrapp(NT_W, 0.95, tier="numpy").sync_dispatch
+
+
+def test_warmup_pretraces_rung_ladder():
+    """``EngineConfig.warmup`` compiles the stream's bucket-counter rungs at
+    construction: streaming afterwards adds no compiled entries (first-window
+    latency is dispatch-only), and warmup never changes results."""
+    # fresh id capacities so the rung keys aren't already compiled by other
+    # tests sharing this process's bucket-counter cache
+    s = synthetic_rating_stream(n_users=365, n_items=281, n_edges=1200,
+                                seed=21, temporal="uniform", n_unique=240)
+    # discover the rung ladder with a numpy-tier probe (numpy never
+    # compiles), recording every bucket the executor plans
+    probe = StreamingSGrapp(NT_W, 0.95, config=EngineConfig(
+        tier="numpy", flush_every=3))
+    rungs = set()
+    orig = probe.executor.window_counts_submit
+
+    def recording(batch):
+        rungs.update((b.cap_e, b.cap_i, b.cap_j)
+                     for b in probe.executor.plan(batch))
+        return orig(batch)
+
+    probe.executor.window_counts_submit = recording
+    ref = push_in_batches(probe, s, 33)
+    assert rungs
+
+    eng = StreamingSGrapp(NT_W, 0.95, config=EngineConfig(
+        tier="dense", flush_every=3, warmup=tuple(sorted(rungs))))
+    after_warmup = compiled_bucket_cache_info()
+    res = push_in_batches(eng, s, 33)
+    assert compiled_bucket_cache_info() == after_warmup
+    assert_same_result(res, ref)
 
 
 # -- sharded dispatch (CI multi-device job) ------------------------------------
